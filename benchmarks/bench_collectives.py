@@ -1,0 +1,102 @@
+"""Paper Fig. 6/7: latency & algorithm bandwidth of the 5 collectives,
+OCCL vs the statically-sequenced baseline.
+
+Two metrics per (collective, size):
+  * wall-clock per iteration on this host (CPU; both systems pay XLA
+    dispatch, so the RELATIVE gap is the signal — paper Fig. 6);
+  * protocol supersteps vs the pipeline-optimal minimum (the structural
+    analogue of "core execution time", paper Fig. 7 — OCCL's long-running
+    daemon reaches the minimum once gang convergence kicks in).
+
+The static baseline is the same ring algorithm executed in a consistent
+global order with no scheduling layer (direct jnp reduction) — the
+"statically sequenced NCCL" of Sec. 5.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from common import row, timeit
+from repro.core import CollKind, OcclConfig, OcclRuntime
+
+KINDS = {
+    "all_reduce": CollKind.ALL_REDUCE,
+    "all_gather": CollKind.ALL_GATHER,
+    "reduce_scatter": CollKind.REDUCE_SCATTER,
+    "broadcast": CollKind.BROADCAST,
+    "reduce": CollKind.REDUCE,
+}
+
+
+def _static_baseline(kind: CollKind, xs: list[np.ndarray], R: int):
+    """Consistent-order direct execution (jit'd once)."""
+    stack = jnp.stack([jnp.asarray(x) for x in xs])
+
+    @jax.jit
+    def run(stack):
+        if kind == CollKind.ALL_REDUCE:
+            return jnp.broadcast_to(stack.sum(0), stack.shape)
+        if kind == CollKind.ALL_GATHER:
+            return jnp.broadcast_to(stack.reshape(-1), (R, stack.size))
+        if kind == CollKind.REDUCE_SCATTER:
+            s = stack.sum(0)
+            return s.reshape(R, -1)
+        if kind == CollKind.BROADCAST:
+            return jnp.broadcast_to(stack[0], stack.shape)
+        return stack.sum(0)
+
+    return run, stack
+
+
+def run(sizes=(64, 1024, 16384, 262144), R=8, iters=3):
+    results = []
+    for name, kind in KINDS.items():
+        for n in sizes:
+            cfg = OcclConfig(n_ranks=R, max_colls=2, max_comms=1,
+                             slice_elems=min(4096, max(64, n // 16)),
+                             conn_depth=8,
+                             heap_elems=max(1 << 13, 8 * n),
+                             superstep_budget=1 << 15)
+            rt = OcclRuntime(cfg)
+            comm = rt.communicator(list(range(R)))
+            cid = rt.register(kind, comm, n_elems=n)
+            rng = np.random.RandomState(0)
+            if kind == CollKind.ALL_GATHER:
+                xs = [rng.randn(-(-n // R)).astype(np.float32)
+                      for _ in range(R)]
+            else:
+                xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+
+            def occl_once():
+                for r in range(R):
+                    if kind == CollKind.BROADCAST and r != 0:
+                        rt.submit(r, cid)
+                    else:
+                        rt.submit(r, cid, data=xs[r if kind !=
+                                  CollKind.BROADCAST else 0])
+                rt.drive()
+
+            t_occl = timeit(occl_once, iters=iters, warmup=1)
+            st = rt.stats()
+            steps_per_iter = int(st["supersteps"].max()) / rt.launches
+            spec = rt.specs[cid]
+            prims = {CollKind.ALL_REDUCE: 2 * R - 1}.get(kind, R)
+            min_steps = (prims * spec.n_slices * spec.n_rounds
+                         + 2 * (R - 1))
+
+            static_fn, stack = _static_baseline(kind, xs, R)
+            t_static = timeit(lambda: jax.block_until_ready(static_fn(stack)),
+                              iters=iters, warmup=1)
+
+            bytes_alg = 4 * n
+            results.append((name, n, t_occl, t_static, steps_per_iter,
+                            min_steps))
+            row(f"collectives/{name}_n{n}", t_occl * 1e6,
+                f"static_us={t_static*1e6:.1f};"
+                f"steps={steps_per_iter:.0f};proto_min={min_steps};"
+                f"algbw_model={bytes_alg/max(steps_per_iter,1):.0f}B/step")
+    return results
+
+
+if __name__ == "__main__":
+    run()

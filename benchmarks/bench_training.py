@@ -1,0 +1,79 @@
+"""Paper Fig. 8/10: DNN training throughput, OCCL vs statically-sequenced
+gradient synchronization.
+
+ViT (the paper's Sec. 5.3.2 model) + qwen3 (LM), reduced configs, DP=4
+simulated ranks on this host.  Throughput = samples/sec.  The OCCL path
+submits per-bucket all-reduces in backward order with priorities (the
+overlap policy); the static path sums in a fixed global order.  Per the
+paper, OCCL should be within single-digit % of static under uniform
+ranks (its win appears under runtime skew, which bench_gang.py shows).
+"""
+import time
+
+import jax
+import numpy as np
+
+from common import row
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.data.pipeline import SyntheticPipeline
+from repro.train.occl_sync import OcclGradSync, static_all_reduce
+from repro.train.state import init_state
+from repro.train.step import make_apply_step, make_grads_step
+
+
+def run_arch(arch: str, steps=6, dp=4, batch=8, seq=32):
+    cfg = get_config(arch).reduced()
+    cell = ShapeCell("b", seq, batch, "train")
+    gfn = jax.jit(make_grads_step(cfg))
+    afn = jax.jit(make_apply_step(cfg))
+
+    def loop(kind):
+        states = [init_state(cfg) for _ in range(dp)]
+        pipes = [SyntheticPipeline(cfg, cell, shard_id=r, n_shards=dp)
+                 for r in range(dp)]
+        sync = None
+        # warmup (compile)
+        for r in range(dp):
+            gfn(states[r], pipes[r].batch_at(0))
+        t0 = time.perf_counter()
+        for step in range(steps):
+            pr = []
+            for r in range(dp):
+                _, g = gfn(states[r], next(pipes[r]))
+                pr.append(g)
+            if kind == "occl":
+                nonlocal_sync = sync
+                if nonlocal_sync is None:
+                    tmpl = jax.tree_util.tree_map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        pr[0])
+                    sync = OcclGradSync(tmpl, dp, bucket_elems=16384,
+                                        slice_elems=512)
+                synced = sync.all_reduce(pr)
+            else:
+                synced = static_all_reduce(pr)
+            states = [afn(states[r], synced[r]) for r in range(dp)]
+        jax.block_until_ready(states[0].params)
+        dt = time.perf_counter() - t0
+        return steps * batch / dt, sync
+
+    tput_static, _ = loop("static")
+    tput_occl, sync = loop("occl")
+    overhead = (tput_static - tput_occl) / tput_static * 100
+    st = sync.stats() if sync else {}
+    row(f"training/{arch}_dp{dp}", 1e6 / max(tput_occl, 1e-9),
+        f"occl_tput={tput_occl:.1f}sps;static_tput={tput_static:.1f}sps;"
+        f"overhead={overhead:.1f}%;buckets={len(sync.buckets)}")
+    return tput_occl, tput_static
+
+
+def run():
+    out = {}
+    for arch in ("vit-base", "qwen3-0.6b"):
+        out[arch] = run_arch(arch)
+    return out
+
+
+if __name__ == "__main__":
+    run()

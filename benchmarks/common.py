@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def timeit(fn, iters=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

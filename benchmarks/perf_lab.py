@@ -1,0 +1,129 @@
+"""Hillclimb laboratory (§Perf): re-lower a cell under a named variant and
+compare roofline terms against the cached baseline artifact.
+
+    PYTHONPATH=src python benchmarks/perf_lab.py --arch mamba2-2.7b \
+        --cell train_4k --variant ssm_chunk128
+
+Variants are registered below as (env overrides, ArchConfig overrides).
+Each run prints baseline vs variant terms and the percentage delta on the
+dominant term — the before/after record for EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+VARIANTS = {
+    # name: (env vars, config overrides)
+    "baseline": ({}, {}),
+    "causal_rec2": ({"REPRO_CAUSAL_REC": "2"}, {}),
+    "causal_rec3": ({"REPRO_CAUSAL_REC": "3"}, {}),
+    "ssm_chunk128": ({}, {"ssm_chunk": 128}),
+    "ssm_chunk64": ({}, {"ssm_chunk": 64}),
+    "remat_dots": ({}, {"remat": "dots"}),
+    "remat_none": ({}, {"remat": "none"}),
+    "cap1.0": ({}, {"capacity_factor": 1.0}),
+    "kvblock512": ({"REPRO_KV_BLOCK": "512"}, {}),
+    "kvblock2048": ({"REPRO_KV_BLOCK": "2048"}, {}),
+    "flash4k": ({"REPRO_BLOCKWISE_THRESHOLD": "2048"}, {}),
+    "flash4k_rec2": ({"REPRO_BLOCKWISE_THRESHOLD": "2048",
+                      "REPRO_CAUSAL_REC": "2"}, {}),
+    "flash4k_kvb512": ({"REPRO_BLOCKWISE_THRESHOLD": "2048",
+                        "REPRO_KV_BLOCK": "512"}, {}),
+    "flash4k_chunk128": ({"REPRO_BLOCKWISE_THRESHOLD": "2048"},
+                         {"ssm_chunk": 128}),
+    "moe_ep": ({"REPRO_MOE_EP": "1", "REPRO_MOE_CAP_SHARD": "1"}, {}),
+    "moe_ep_flash4k": ({"REPRO_MOE_EP": "1",
+                        "REPRO_BLOCKWISE_THRESHOLD": "2048"}, {}),
+    "ssm_heads": ({"REPRO_SSM_SHARD_HEADS": "1"}, {}),
+    "ssm_heads_chunk128": ({"REPRO_SSM_SHARD_HEADS": "1"},
+                           {"ssm_chunk": 128}),
+    "attn_bf16": ({"REPRO_ATTN_BF16": "1"}, {}),
+    "moe_ep_scatter": ({"REPRO_MOE_EP": "1", "REPRO_MOE_CAP_SHARD": "1",
+                        "REPRO_MOE_COMBINE": "scatter"}, {}),
+    "moe_ep_v1": ({"REPRO_MOE_EP": "1", "REPRO_MOE_COMBINE": "scatter"},
+                  {}),
+    "moe_ep_v1_gather": ({"REPRO_MOE_EP": "1"}, {}),
+    "rec2_bf16": ({"REPRO_CAUSAL_REC": "2", "REPRO_ATTN_BF16": "1",
+                   "REPRO_BLOCKWISE_THRESHOLD": "2048"}, {}),
+    "rec3_bf16_dots": ({"REPRO_CAUSAL_REC": "3", "REPRO_ATTN_BF16": "1",
+                        "REPRO_BLOCKWISE_THRESHOLD": "2048"},
+                       {"remat": "dots"}),
+}
+
+
+def run_variant(arch, cell_name, variant, multi_pod=False):
+    env, overrides = VARIANTS[variant]
+    for k, v in env.items():
+        os.environ[k] = v
+    try:
+        import jax
+        from repro.configs import get_config
+        from repro.configs.base import SHAPES
+        from repro.launch.dryrun import (_cost_of, _lower_cell,
+                                         _roofline_probe)
+        from repro.launch.mesh import make_production_mesh
+
+        cfg = get_config(arch)
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        cell = SHAPES[cell_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        if cfg.family == "hybrid":
+            p = cfg.shared_attn_period
+            probe = _roofline_probe(cfg, cell, mesh, (p, 2 * p, 3 * p))
+        else:
+            probe = _roofline_probe(cfg, cell, mesh, (1, 2, 4))
+        # memory from the rolled production build
+        os.environ["REPRO_SCAN_UNROLL"] = "0"
+        lowered, _, _ = _lower_cell(cfg, cell, mesh)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        probe["mem_temp_bytes"] = int(mem.temp_size_in_bytes)
+        return probe
+    finally:
+        for k in env:
+            os.environ.pop(k, None)
+
+
+def terms_of(probe):
+    import roofline as R
+    wire = sum(R.WIRE_FACTOR.get(k, 1.0) * v["bytes"]
+               for k, v in probe["collectives"].items())
+    return {
+        "compute_s": probe["flops"] / R.PEAK_FLOPS,
+        "memory_s": probe["bytes"] / R.HBM_BW,
+        "collective_s": wire / R.ICI_BW,
+        "temp_GiB": probe.get("mem_temp_bytes", 0) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    probe = run_variant(args.arch, args.cell, args.variant)
+    t = terms_of(probe)
+    rec = {"arch": args.arch, "cell": args.cell, "variant": args.variant,
+           "probe": probe, "terms": t}
+    print(json.dumps({k: v for k, v in rec.items() if k != "probe"},
+                     indent=1))
+    out = args.out or (pathlib.Path(__file__).parent / "perf_results" /
+                       f"{args.arch}__{args.cell}__{args.variant}.json")
+    pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(out).write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

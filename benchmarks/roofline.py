@@ -1,0 +1,136 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/dryrun_results/*.json and derives, per (arch x cell),
+the three roofline terms on TPU v5e targets:
+
+    compute    = HLO_FLOPs_per_device / 197e12  (bf16 peak per chip)
+    memory     = HLO_bytes_per_device / 819e9   (HBM bandwidth)
+    collective = wire_bytes_per_device / 50e9   (ICI per link)
+
+HLO FLOPs/bytes come from the quadratic-extrapolated unrolled probes (see
+launch/dryrun.py).  Wire bytes weight each collective kind by its ring
+wire factor relative to the HLO result-shape bytes the parser sums:
+all-reduce moves ~2x its result per device (reduce-scatter + all-gather
+phases); the others ~1x.  The dominant term is the bottleneck; the step
+is ICI/HBM/MXU-overlapped at best max(terms) seconds.
+
+Usage: python benchmarks/roofline.py [--md] [--cell arch:cell]
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-gather": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+
+
+def load():
+    rows = []
+    for p in sorted(RESULTS.glob("*__16x16.json")):
+        d = json.loads(p.read_text())
+        if "roofline" not in d:
+            continue
+        rows.append(d)
+    return rows
+
+
+def terms(d: dict) -> dict:
+    r = d["roofline"]
+    n = d["n_devices"]
+    wire = sum(WIRE_FACTOR.get(k, 1.0) * v["bytes"]
+               for k, v in r["collectives"].items())
+    compute = r["flops"] / PEAK_FLOPS
+    memory = r["bytes"] / HBM_BW
+    collective = wire / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    model = d["model_flops_global"] / n
+    step = max(compute, memory, collective)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dom[0], "step_s": step,
+        "model_flops_dev": model,
+        "useful_ratio": model / r["flops"] if r["flops"] else 0.0,
+        "mfu": model / step / PEAK_FLOPS if step else 0.0,
+        "mem_temp_gib": (d.get("mem_temp_bytes") or 0) / 2**30,
+    }
+
+
+SUGGEST = {
+    ("compute",): "reduce recompute (remat policy) / skip masked-out "
+                  "attention blocks",
+    ("memory",): "cut activation traffic: fuse, bf16 intermediates, "
+                 "smaller logit/score materialization",
+    ("collective",): "reshard to cut all-gathers; overlap grad "
+                     "reduce-scatter with backward (OCCL priority buckets)",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--cell", default=None)
+    args = ap.parse_args()
+
+    rows = load()
+    if args.cell:
+        a, c = args.cell.split(":")
+        rows = [d for d in rows if d["arch"] == a and d["cell"] == c]
+
+    hdr = ("arch", "cell", "compute_s", "memory_s", "collective_s",
+           "dominant", "MFU@roofline", "useful_ratio", "temp_GiB")
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    for d in rows:
+        t = terms(d)
+        vals = (d["arch"], d["cell"], f"{t['compute_s']:.3e}",
+                f"{t['memory_s']:.3e}", f"{t['collective_s']:.3e}",
+                t["dominant"], f"{t['mfu']*100:.1f}%",
+                f"{t['useful_ratio']:.2f}", f"{t['mem_temp_gib']:.1f}")
+        if args.md:
+            print("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            print(",".join(str(v) for v in vals))
+    return rows
+
+
+if __name__ == "__main__" and "--dryrun-md" not in sys.argv:
+    main()
+
+
+def dryrun_md():
+    """Markdown summary of ALL dry-run cells (both meshes) for §Dry-run."""
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    hdr = ("arch", "cell", "mesh", "compile_s", "temp_GiB", "args_GiB",
+           "collectives(rolled)")
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "---|" * len(hdr))
+    for d in rows:
+        colls = d.get("rolled", {}).get("collectives", {})
+        cs = " ".join(f"{k.split('-')[0]}-{k.split('-')[1][:1]}:{v['count']}"
+                      if "-" in k else f"{k}:{v['count']}"
+                      for k, v in sorted(colls.items()))
+        print(f"| {d['arch']} | {d['cell']} | {d['mesh']} | "
+              f"{d['compile_s']:.0f} | "
+              f"{(d.get('mem_temp_bytes') or 0)/2**30:.1f} | "
+              f"{(d.get('mem_argument_bytes') or 0)/2**30:.1f} | {cs} |")
+
+
+if __name__ == "__main__" and "--dryrun-md" in sys.argv:
+    dryrun_md()
+    sys.exit(0)

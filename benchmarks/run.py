@@ -1,0 +1,38 @@
+"""Benchmark suite entrypoint: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (common.row).
+  Fig. 5  -> bench_overheads       Fig. 6/7 -> bench_collectives
+  Sec 5.2 -> bench_deadlock        Fig. 8/10 -> bench_training
+  Fig. 9  -> bench_gang            Roofline  -> roofline (dry-run JSON)
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    import bench_overheads
+    bench_overheads.run(sizes=(64, 1024, 4096))
+    import bench_collectives
+    bench_collectives.run(sizes=(64, 4096), iters=2)
+    import bench_deadlock
+    bench_deadlock.run(iters=2)
+    import bench_gang
+    bench_gang.run()
+    import bench_training
+    bench_training.run()
+    # roofline table (from cached dry-run artifacts, if present)
+    import roofline
+    rows = roofline.load()
+    for d in rows:
+        t = roofline.terms(d)
+        print(f"roofline/{d['arch']}_{d['cell']},"
+              f"{t['step_s']*1e6:.1f},"
+              f"dom={t['dominant']};mfu={t['mfu']*100:.1f}%")
+
+
+if __name__ == '__main__':
+    main()

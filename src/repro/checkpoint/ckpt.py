@@ -1,0 +1,144 @@
+"""Checkpointing: sharded save/restore with manifest, async writer,
+atomic commit, and elastic resharding.
+
+Layout:  <dir>/step_<N>/
+             manifest.json        {path -> {shape, dtype, crc32}}
+             <flat-key>.npy       one file per leaf
+             extras.json          data-pipeline cursor, RNG, metadata
+Commit is atomic: everything is written into step_<N>.tmp and renamed.
+Restore validates CRCs and re-shards onto whatever mesh the current
+process has (elastic scaling: checkpoints are mesh-agnostic).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory, step: int, tree, extras: Optional[dict] = None,
+         keep: int = 3) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    tmp = directory / f"step_{step}.tmp"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        fn = key.replace("/", "__") + ".npy"
+        np.save(tmp / fn, arr)
+        manifest[key] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    (tmp / "extras.json").write_text(json.dumps(extras or {}, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                    # atomic commit
+
+    # retention
+    steps = sorted((int(p.name.split("_")[1]) for p in directory.glob("step_*")
+                    if not p.name.endswith(".tmp")))
+    for old in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{old}", ignore_errors=True)
+    return final
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory, step: int, template, *, shardings=None,
+            validate: bool = True):
+    """Rebuild `template`-shaped tree from disk; place onto `shardings`
+    (NamedSharding tree) if given — this is the elastic-resharding path:
+    the checkpoint has no memory of the mesh it was saved from."""
+    d = pathlib.Path(directory) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    flat_shards = _flatten(shardings) if shardings is not None else {}
+    loaded = {}
+    for key, meta in manifest.items():
+        arr = np.load(d / meta["file"])
+        if validate:
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption in {key}")
+        if key in flat_shards:
+            loaded[key] = jax.device_put(arr, flat_shards[key])
+        else:
+            loaded[key] = jnp.asarray(arr)
+
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(template)
+    treedef = jax.tree_util.tree_structure(template)
+    ordered = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing {key}")
+        got = loaded[key]
+        if tuple(got.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: ckpt shape {got.shape} != template {leaf.shape}")
+        ordered.append(got.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, ordered)
+    extras = json.loads((d / "extras.json").read_text())
+    return tree, extras
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: training never blocks on disk."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+        self.error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree, extras: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extras, self.keep)
+                self.last_saved = step
+            except BaseException as e:  # surfaced on next wait()
+                self.error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error is not None:
+            err, self.error = self.error, None
+            raise err

@@ -1,0 +1,18 @@
+"""OCCL core: the deadlock-free collective execution framework (DFCE).
+
+The paper's primary contribution, adapted TPU-natively: collectives are
+per-rank primitive sequences over connector ring buffers, executed by a
+long-running daemon loop with decentralized preemption (spin thresholds)
+and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
+"""
+from .config import OcclConfig, OrderPolicy, ReduceOp
+from .primitives import CollKind, CollectiveSpec, Communicator, Prim
+from .runtime import DeadlockTimeout, OcclRuntime
+from .deadlock import run_static_order, consistent_order_exists
+
+__all__ = [
+    "OcclConfig", "OrderPolicy", "ReduceOp",
+    "CollKind", "CollectiveSpec", "Communicator", "Prim",
+    "OcclRuntime", "DeadlockTimeout",
+    "run_static_order", "consistent_order_exists",
+]

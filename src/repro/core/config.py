@@ -1,0 +1,81 @@
+"""Configuration for the OCCL deadlock-free collective runtime.
+
+All sizes are static (compiled into the daemon program), mirroring the
+paper's registration-time preparation of collective contexts (Sec. 3.1.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class OrderPolicy(enum.IntEnum):
+    """Order-adjusting policy of the stickiness scheme (paper Sec. 3.2)."""
+
+    FIFO = 0      # empty the task queue ASAP; lazy SQ fetch; new at back
+    PRIORITY = 1  # user priority first; eager SQ fetch; high-prio at front
+
+
+class ReduceOp(enum.IntEnum):
+    SUM = 0
+    MAX = 1
+    MIN = 2
+    PROD = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class OcclConfig:
+    """Static configuration of one daemon instance.
+
+    The daemon is compiled once per config (the analogue of launching the
+    persistent daemon kernel with the max grid/block size, paper Sec. 4).
+    """
+
+    # --- geometry -------------------------------------------------------
+    n_ranks: int = 8                # devices participating in the fabric
+    max_colls: int = 16             # registered-collective slots (C)
+    max_comms: int = 4              # communicator lanes (L); CUDA-block analogue
+    slice_elems: int = 64           # elements per slice (preemption granule)
+    conn_depth: int = 4             # ring-buffer slots per connector (K)
+    heap_elems: int = 1 << 16       # per-rank data heap (send/recv buffers)
+
+    # --- SQ / CQ --------------------------------------------------------
+    sq_len: int = 64                # submission-queue slots per rank
+    cq_len: int = 64                # completion-queue slots per rank
+
+    # --- scheduling / stickiness (paper Sec. 3.2) -----------------------
+    order_policy: OrderPolicy = OrderPolicy.FIFO
+    stickiness: bool = True         # master switch (Fig. 9 ablation)
+    priority_preempts: bool = False  # P3/PACE-style: a strictly-higher-
+                                    # priority queued collective preempts the
+                                    # current one (paper Sec. 3.2 / Sec. 6:
+                                    # a spin-threshold adjusting policy)
+    demand_steering: bool = True    # beyond-paper gang policy: prefer
+                                    # collectives whose recv connector has
+                                    # data waiting (local evidence that ring
+                                    # peers are executing them) — same
+                                    # decentralized-information constraint
+                                    # as the paper's spin-threshold scheme
+                                    # but converges faster under adversarial
+                                    # order skew (benchmarks/bench_gang.py)
+    spin_base: int = 16             # initial threshold of queue-front coll
+    spin_decr: int = 4              # threshold decrement per queue position
+    spin_boost: int = 8             # boost to successors on primitive success
+    spin_min: int = 1
+    spin_max: int = 256
+
+    # --- daemon lifecycle (paper Sec. 3.1.3) ----------------------------
+    quit_threshold: int = 64        # voluntary quit after this many
+                                    # no-progress supersteps
+    superstep_budget: int = 4096    # hard bound per daemon launch
+
+    # --- numerics / kernels ---------------------------------------------
+    dtype: str = "float32"          # heap / wire dtype
+    use_pallas: bool = False        # route slice math through Pallas kernels
+
+    def __post_init__(self):
+        assert self.n_ranks >= 1
+        assert self.max_comms >= 1
+        assert self.conn_depth >= 1
+        assert self.slice_elems >= 1
+        assert self.spin_base >= self.spin_min

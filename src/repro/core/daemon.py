@@ -1,0 +1,256 @@
+"""The daemon loop: a long-running jitted superstep loop (paper Sec. 3.1).
+
+Two interchangeable backends share the identical per-rank scheduler core:
+
+* **sim** — all ranks live on one device; per-rank state carries a leading
+  rank axis and the superstep is ``vmap``-ed; the connector fabric is a
+  gather along the communicator ring permutation.  Used by unit/property
+  tests and the collective microbenchmarks.
+
+* **mesh** — ranks are devices of a mesh axis under ``shard_map``; the
+  fabric is a pair of ``lax.ppermute`` s (forward slice + reverse credit)
+  per lane per superstep.  The communication schedule is *static* — which
+  collective's slice rides the wire is the dynamic, per-device scheduler
+  decision.  Deadlock at the transport layer is therefore structurally
+  impossible; the scheduler provides liveness (preemption) and performance
+  (stickiness/gang convergence).
+
+The loop terminates on: all work drained, the voluntary-quit threshold
+(consecutive fabric-wide no-progress supersteps, Sec. 3.1.3), or the hard
+superstep budget.  The host relaunches it event-driven while completions
+lag submissions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import OcclConfig
+from .scheduler import (
+    LocalTables,
+    Mailbox,
+    SharedTables,
+    empty_mailbox,
+    rank_superstep,
+)
+from .state import DaemonState
+from .tables import StaticTables
+
+
+def shared_tables(t: StaticTables) -> SharedTables:
+    return SharedTables(
+        registered=jnp.asarray(t.registered),
+        kind=jnp.asarray(t.kind),
+        op=jnp.asarray(t.op),
+        lane=jnp.asarray(t.lane),
+        n_steps=jnp.asarray(t.n_steps),
+        n_slices=jnp.asarray(t.n_slices),
+        n_rounds=jnp.asarray(t.n_rounds),
+        in_chunked=jnp.asarray(t.in_chunked),
+        out_chunked=jnp.asarray(t.out_chunked),
+        base_in_off=jnp.asarray(t.base_in_off),
+        base_out_off=jnp.asarray(t.base_out_off),
+    )
+
+
+def local_tables(t: StaticTables) -> LocalTables:
+    """Per-rank tables with leading rank axis (sim) — slice [r] for mesh."""
+    return LocalTables(
+        member=jnp.asarray(t.member),
+        prog_kind=jnp.asarray(t.prog_kind),
+        prog_chunk=jnp.asarray(t.prog_chunk),
+    )
+
+
+def _sim_exchange(fwd_src, rev_src, outbox: Mailbox) -> Mailbox:
+    """Deliver per-lane messages along each communicator ring (sim backend).
+
+    ``outbox`` fields have shape [R, L, ...]; the message arriving at rank
+    r on lane l was sent by ``fwd_src[l, r]`` (resp. ``rev_src``).
+    """
+    def pick(field, src):  # field: [R, L, ...] -> gathered [R, L, ...]
+        lanes = []
+        for lane in range(src.shape[0]):
+            lanes.append(field[src[lane], lane])
+        return jnp.stack(lanes, axis=1)
+
+    return Mailbox(
+        fwd_valid=pick(outbox.fwd_valid, fwd_src),
+        fwd_coll=pick(outbox.fwd_coll, fwd_src),
+        fwd_payload=pick(outbox.fwd_payload, fwd_src),
+        rev_valid=pick(outbox.rev_valid, rev_src),
+        rev_coll=pick(outbox.rev_coll, rev_src),
+    )
+
+
+def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
+    """Deliver messages with one ppermute pair per lane (mesh backend)."""
+    def permute(field, pairs_per_lane):
+        lanes = []
+        for lane, pairs in enumerate(pairs_per_lane):
+            lanes.append(
+                jax.lax.ppermute(field[lane], axis_name, perm=pairs))
+        return jnp.stack(lanes, axis=0)
+
+    return Mailbox(
+        fwd_valid=permute(outbox.fwd_valid, t.fwd_perm_pairs),
+        fwd_coll=permute(outbox.fwd_coll, t.fwd_perm_pairs),
+        fwd_payload=permute(outbox.fwd_payload, t.fwd_perm_pairs),
+        rev_valid=permute(outbox.rev_valid, t.rev_perm_pairs),
+        rev_coll=permute(outbox.rev_coll, t.rev_perm_pairs),
+    )
+
+
+def _drained(st: DaemonState) -> jnp.ndarray:
+    """All submitted work complete on this rank (reductions over [C])."""
+    return ((st.sq_read >= st.sq_size)
+            & ~jnp.any(st.tq_active)
+            & ~jnp.any(st.inflight))
+
+
+# One compiled daemon per OcclConfig (tables are ARGUMENTS, so different
+# registrations / test instances with the same config share the binary).
+_SIM_JIT_CACHE: dict = {}
+
+
+def _sim_daemon_jit(cfg: OcclConfig) -> Callable:
+    if cfg in _SIM_JIT_CACHE:
+        return _SIM_JIT_CACHE[cfg]
+
+    def vstep(sh, lt, st, inbox):
+        return jax.vmap(
+            functools.partial(rank_superstep, cfg, sh),
+            in_axes=(0, 0, 0), out_axes=(0, 0))(lt, st, inbox)
+
+    def cond(carry):
+        st = carry[0]
+        return st.global_live[0]
+
+    @jax.jit
+    def daemon(sh: SharedTables, lt: LocalTables, fwd_src, rev_src,
+               st: DaemonState) -> DaemonState:
+        def body(carry):
+            st, inbox = carry
+            st, outbox = vstep(sh, lt, st, inbox)
+            inbox = _sim_exchange(fwd_src, rev_src, outbox)
+            all_drained = jnp.all(jax.vmap(_drained)(st))
+            quit_now = jnp.min(st.no_prog) >= cfg.quit_threshold
+            over_budget = st.supersteps[0] >= cfg.superstep_budget
+            live = ~(all_drained | quit_now | over_budget)
+            st = st._replace(
+                global_live=jnp.broadcast_to(live, st.global_live.shape))
+            return st, inbox
+
+        st = st._replace(
+            global_live=jnp.ones_like(st.global_live),
+            no_prog=jnp.zeros_like(st.no_prog),
+        )
+        inbox = _load_mailbox(st)
+        st, inbox = jax.lax.while_loop(cond, body, (st, inbox))
+        return _store_mailbox(st, inbox)
+
+    _SIM_JIT_CACHE[cfg] = daemon
+    return daemon
+
+
+def _load_mailbox(st: DaemonState) -> Mailbox:
+    """Re-inject messages that were on the wire at the last daemon exit."""
+    return Mailbox(
+        fwd_valid=st.mb_fwd_valid, fwd_coll=st.mb_fwd_coll,
+        fwd_payload=st.mb_fwd_payload,
+        rev_valid=st.mb_rev_valid, rev_coll=st.mb_rev_coll)
+
+
+def _store_mailbox(st: DaemonState, inbox: Mailbox) -> DaemonState:
+    return st._replace(
+        mb_fwd_valid=inbox.fwd_valid, mb_fwd_coll=inbox.fwd_coll,
+        mb_fwd_payload=inbox.fwd_payload,
+        mb_rev_valid=inbox.rev_valid, mb_rev_coll=inbox.rev_coll)
+
+
+def build_sim_daemon(cfg: OcclConfig, t: StaticTables) -> Callable:
+    """Daemon for the sim backend: state [R,...] -> state."""
+    sh = shared_tables(t)
+    lt = local_tables(t)
+    fwd_src = jnp.asarray(t.fwd_src)
+    rev_src = jnp.asarray(t.rev_src)
+    fn = _sim_daemon_jit(cfg)
+    return lambda st: fn(sh, lt, fwd_src, rev_src, st)
+
+
+def build_shardmap_daemon(cfg: OcclConfig, t: StaticTables, mesh,
+                          axis_name: str = "rank") -> Callable:
+    """jit daemon over a real device mesh: state leaves are [R, ...]
+    sharded along ``axis_name``; each device runs the per-rank scheduler
+    and the connector fabric is a ppermute pair per lane per superstep."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh_daemon = build_mesh_daemon(cfg, t, axis_name)
+
+    def per_dev(st_slice: DaemonState) -> DaemonState:
+        st1 = jax.tree_util.tree_map(lambda a: a[0], st_slice)
+        st1 = mesh_daemon(st1)
+        return jax.tree_util.tree_map(lambda a: a[None], st1)
+
+    inner = shard_map(per_dev, mesh=mesh, in_specs=P(axis_name),
+                      out_specs=P(axis_name), check_rep=False)
+
+    @jax.jit
+    def daemon(st: DaemonState) -> DaemonState:
+        return inner(st)
+
+    return daemon
+
+
+def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
+                      rank_of_device: np.ndarray | None = None) -> Callable:
+    """Per-device daemon body for use inside ``shard_map``.
+
+    ``rank_of_device`` maps the device's linear index along ``axis_name`` to
+    its OCCL rank (identity by default).  The returned callable takes and
+    returns the per-device DaemonState (no leading rank axis); static
+    tables are indexed by the device's rank via ``lax.axis_index``.
+    """
+    sh = shared_tables(t)
+    lt_all = local_tables(t)  # leading rank axis; gathered per device
+    if rank_of_device is None:
+        rank_of_device = np.arange(cfg.n_ranks)
+    rod = jnp.asarray(rank_of_device, jnp.int32)
+
+    def daemon(st: DaemonState) -> DaemonState:
+        dev = jax.lax.axis_index(axis_name)
+        rank = rod[dev]
+        lt = jax.tree_util.tree_map(lambda a: a[rank], lt_all)
+
+        def cond(carry):
+            st, _ = carry
+            return st.global_live
+
+        def body(carry):
+            st, inbox = carry
+            st, outbox = rank_superstep(cfg, sh, lt, st, inbox)
+            inbox = _mesh_exchange(t, outbox, axis_name)
+            # Fabric-wide consensus on liveness (computed in the body so the
+            # cond stays collective-free).
+            drained = jnp.all(
+                jax.lax.all_gather(_drained(st), axis_name))
+            stuck = jnp.all(
+                jax.lax.all_gather(st.no_prog >= cfg.quit_threshold,
+                                   axis_name))
+            over = st.supersteps >= cfg.superstep_budget
+            st = st._replace(global_live=~(drained | stuck | over))
+            return st, inbox
+
+        st = st._replace(
+            global_live=jnp.ones_like(st.global_live),
+            no_prog=jnp.zeros_like(st.no_prog),
+        )
+        st, inbox = jax.lax.while_loop(cond, body, (st, _load_mailbox(st)))
+        return _store_mailbox(st, inbox)
+
+    return daemon

@@ -1,0 +1,242 @@
+"""Collective primitives and per-rank primitive programs (paper Sec. 2.3).
+
+Every commonly used collective is a per-rank sequence of *primitives*, each a
+fusion of the four basic actions ``send / recv / reduce / copy`` over four
+buffers (send/recv buffer, send/recv connector).  A rank executes its
+sequence chunk-by-chunk, slice-by-slice; the (chunk, primitive, slice)
+triple is the *dynamic context* that makes collectives preemptible.
+
+This module builds the primitive program (``prim_kind[step], chunk[step]``)
+for each rank of a communicator for the five collectives of the paper
+(all-reduce, all-gather, reduce-scatter, broadcast, reduce), Ring algorithm /
+Simple protocol, exactly the configuration benchmarked in paper Sec. 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+import numpy as np
+
+
+class Prim(enum.IntEnum):
+    """Primitive vocabulary (paper Sec. 2.3)."""
+
+    NULL = 0                    # padding past the end of a program
+    COPY = 1                    # local copy (degenerate 1-rank groups)
+    SEND = 2
+    RECV = 3
+    COPY_SEND = 4
+    RECV_COPY_SEND = 5
+    RECV_REDUCE_SEND = 6
+    RECV_REDUCE_COPY = 7
+    RECV_REDUCE_COPY_SEND = 8
+
+
+# Action-fusion flag table: prim -> (recv, send, reduce, copy, reads_input).
+# ``reads_input`` marks prims whose value involves the local send buffer.
+_FLAGS = {
+    Prim.NULL: (0, 0, 0, 0, 0),
+    Prim.COPY: (0, 0, 0, 1, 1),
+    Prim.SEND: (0, 1, 0, 0, 1),
+    Prim.RECV: (1, 0, 0, 1, 0),
+    Prim.COPY_SEND: (0, 1, 0, 1, 1),
+    Prim.RECV_COPY_SEND: (1, 1, 0, 1, 0),
+    Prim.RECV_REDUCE_SEND: (1, 1, 1, 0, 1),
+    Prim.RECV_REDUCE_COPY: (1, 0, 1, 1, 1),
+    Prim.RECV_REDUCE_COPY_SEND: (1, 1, 1, 1, 1),
+}
+
+# Dense lookup arrays indexed by Prim value (used inside jitted code).
+PRIM_RECV = np.array([_FLAGS[Prim(i)][0] for i in range(len(Prim))], np.int32)
+PRIM_SEND = np.array([_FLAGS[Prim(i)][1] for i in range(len(Prim))], np.int32)
+PRIM_REDUCE = np.array([_FLAGS[Prim(i)][2] for i in range(len(Prim))], np.int32)
+PRIM_COPY = np.array([_FLAGS[Prim(i)][3] for i in range(len(Prim))], np.int32)
+PRIM_READS_IN = np.array([_FLAGS[Prim(i)][4] for i in range(len(Prim))], np.int32)
+
+
+class CollKind(enum.IntEnum):
+    ALL_REDUCE = 0
+    ALL_GATHER = 1
+    REDUCE_SCATTER = 2
+    BROADCAST = 3
+    REDUCE = 4
+
+
+def build_program(
+    kind: CollKind, member_idx: int, group_size: int, root_idx: int = 0
+) -> list[tuple[Prim, int]]:
+    """Per-rank primitive sequence ``[(prim, chunk_idx), ...]``.
+
+    ``member_idx`` is the rank's position in the communicator's ring order;
+    data flows member m -> member (m+1) % group_size.  Ring algorithm,
+    Simple protocol (paper Sec. 5 Benchmarks).
+    """
+    m, R = member_idx, group_size
+    if R == 1:
+        # Degenerate single-member group: a local copy (broadcast/reduce/
+        # all_* all collapse to in -> out).
+        return [(Prim.COPY, 0)]
+
+    prog: list[tuple[Prim, int]] = []
+    if kind == CollKind.ALL_REDUCE:
+        # Phase 1 (reduce-scatter): chunk c starts at rank c; at step s rank r
+        # handles chunk (r - s) mod R; partial completes at step R-1.
+        prog.append((Prim.SEND, m))
+        for s in range(1, R - 1):
+            prog.append((Prim.RECV_REDUCE_SEND, (m - s) % R))
+        prog.append((Prim.RECV_REDUCE_COPY_SEND, (m - (R - 1)) % R))
+        # Phase 2 (all-gather): fully-reduced chunks circulate once more.
+        for s in range(R, 2 * R - 2):
+            prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
+        prog.append((Prim.RECV, (m + 2) % R))
+    elif kind == CollKind.ALL_GATHER:
+        prog.append((Prim.COPY_SEND, m))
+        for s in range(1, R - 1):
+            prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
+        prog.append((Prim.RECV, (m + 1) % R))
+    elif kind == CollKind.REDUCE_SCATTER:
+        # Chunk c finalizes at rank c after R-1 hops, so it starts at c+1.
+        prog.append((Prim.SEND, (m - 1) % R))
+        for s in range(1, R - 1):
+            prog.append((Prim.RECV_REDUCE_SEND, (m - s - 1) % R))
+        prog.append((Prim.RECV_REDUCE_COPY, m))
+    elif kind == CollKind.BROADCAST:
+        d = (m - root_idx) % R
+        for k in range(R):  # pipeline the R chunks down the chain
+            if d == 0:
+                prog.append((Prim.COPY_SEND, k))
+            elif d == R - 1:
+                prog.append((Prim.RECV, k))
+            else:
+                prog.append((Prim.RECV_COPY_SEND, k))
+    elif kind == CollKind.REDUCE:
+        d = (m - root_idx) % R
+        for k in range(R):
+            if d == 1 or (R == 1):
+                prog.append((Prim.SEND, k))
+            elif d == 0:
+                prog.append((Prim.RECV_REDUCE_COPY, k))
+            else:
+                prog.append((Prim.RECV_REDUCE_SEND, k))
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return prog
+
+
+def program_len(kind: CollKind, group_size: int) -> int:
+    if group_size == 1:
+        return 1
+    return {
+        CollKind.ALL_REDUCE: 2 * group_size - 1,
+        CollKind.ALL_GATHER: group_size,
+        CollKind.REDUCE_SCATTER: group_size,
+        CollKind.BROADCAST: group_size,
+        CollKind.REDUCE: group_size,
+    }[kind]
+
+
+# I/O indexing: whether the collective's send/recv *buffer* is indexed by the
+# chunk id (True) or holds a single chunk addressed by slice only (False).
+def io_chunked(kind: CollKind) -> tuple[bool, bool]:
+    return {
+        CollKind.ALL_REDUCE: (True, True),
+        CollKind.ALL_GATHER: (False, True),   # in: own chunk; out: all chunks
+        CollKind.REDUCE_SCATTER: (True, False),
+        CollKind.BROADCAST: (True, True),
+        CollKind.REDUCE: (True, True),
+    }[kind]
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """A group of ranks with a fixed ring order, bound to a daemon lane.
+
+    The lane is the CUDA-block analogue (paper Sec. 4): lane ``l`` on every
+    device gang-schedules with lane ``l`` on its ring peers and owns a
+    private connector channel (one forward slice exchange + one reverse
+    credit exchange per superstep).
+    """
+
+    comm_id: int
+    members: tuple[int, ...]      # global ranks, in ring order
+    lane: int
+
+    def __post_init__(self):
+        assert len(set(self.members)) == len(self.members)
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+    def member_index(self, rank: int) -> int:
+        return self.members.index(rank)
+
+    def fwd_perm(self, n_ranks: int) -> np.ndarray:
+        """perm[src] = dst for the forward (data) exchange; identity off-group."""
+        perm = np.arange(n_ranks)
+        for i, r in enumerate(self.members):
+            perm[r] = self.members[(i + 1) % self.size]
+        return perm
+
+    def rev_perm(self, n_ranks: int) -> np.ndarray:
+        perm = np.arange(n_ranks)
+        for i, r in enumerate(self.members):
+            perm[r] = self.members[(i - 1) % self.size]
+        return perm
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """Static context of a registered collective (paper Sec. 3.1.1).
+
+    Constant configuration: buffer geometry, group meta, primitive-sequence
+    composition.  Buffer *addresses* (heap offsets) live here as defaults but
+    may be overridden per submission by the SQE (paper Sec. 3.1.2).
+    """
+
+    coll_id: int
+    kind: CollKind
+    comm: Communicator
+    n_elems: int                  # logical element count (all-reduce size N)
+    op: ReduceOpLike = 0          # ReduceOp value
+    root: int = 0                 # member index of root (broadcast/reduce)
+    in_off: int = 0               # default heap offsets
+    out_off: int = 0
+    n_slices: int = 1             # slices per chunk PER ROUND (derived)
+    n_rounds: int = 1             # primitive-sequence repetitions (derived)
+
+    @property
+    def group_size(self) -> int:
+        return self.comm.size
+
+    def chunk_elems(self, slice_elems: int) -> int:
+        return self.n_rounds * self.n_slices * slice_elems
+
+    def padded_elems(self, slice_elems: int) -> int:
+        return self.group_size * self.chunk_elems(slice_elems)
+
+
+ReduceOpLike = int
+
+
+def derive_slicing(n_elems: int, group_size: int, slice_elems: int,
+                   conn_depth: int) -> tuple[int, int]:
+    """(slices-per-chunk-per-round, rounds).
+
+    The paper: "A GPU executes a collective by executing its primitive
+    sequence a certain number of times to process all the data chunks."
+    Per-round slices are capped at ``conn_depth - 1`` so the connector ring
+    can never fill on every edge simultaneously: around a ring,
+    sum(sent - consumed) <= R * (K - 1) < R * K, hence at least one edge
+    always has both data and capacity — the fused primitives cannot wedge.
+    This mirrors NCCL sizing chunks to fit the connector buffer.
+    """
+    assert conn_depth >= 2, "conn_depth must be >= 2 for pipelining"
+    chunk = -(-n_elems // group_size)              # ceil
+    total = max(1, -(-chunk // slice_elems))       # ceil: slices per chunk
+    cap = conn_depth - 1
+    rounds = -(-total // cap)
+    per_round = -(-total // rounds)
+    return per_round, rounds

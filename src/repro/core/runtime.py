@@ -1,0 +1,271 @@
+"""OcclRuntime: the public host API of the deadlock-free collective library.
+
+Mirrors the paper's integration contract (Sec. 4): register communicators
+and collectives once, then ``submit`` from any rank in ANY order with an
+optional completion callback; the runtime launches the daemon event-driven
+and guarantees every submitted collective completes (assuming every member
+rank eventually submits it — the same contract NCCL imposes, minus the
+ordering requirement).
+
+The runtime also exposes the observability used in the paper's Fig. 9 case
+study: per-collective preemption (context-switch) counts and task-queue
+lengths at fetch time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import OcclConfig, ReduceOp
+from .daemon import build_sim_daemon
+from .primitives import (
+    CollKind,
+    CollectiveSpec,
+    Communicator,
+    derive_slicing,
+    io_chunked,
+)
+from .sqcq import SQE, HostQueues
+from .state import DaemonState, init_state
+from .tables import StaticTables, build_tables
+
+
+class RegistrationClosed(RuntimeError):
+    pass
+
+
+class DeadlockTimeout(RuntimeError):
+    """drive() exhausted its relaunch budget with work still outstanding.
+
+    With OCCL this means some member rank never submitted a matching
+    collective (an application bug), NOT an ordering deadlock — inconsistent
+    orders are handled by preemption."""
+
+
+class OcclRuntime:
+    def __init__(self, cfg: OcclConfig, mesh=None, mesh_axis: str = "rank"):
+        """mesh=None: sim backend (vmapped ranks on one device).
+        mesh: a jax Mesh whose ``mesh_axis`` has cfg.n_ranks devices —
+        the shard_map backend (ppermute connector fabric)."""
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.comms: list[Communicator] = []
+        self.specs: list[CollectiveSpec] = []
+        self._heap_ptr = 0
+        self._tables: Optional[StaticTables] = None
+        self._daemon = None
+        self._state: Optional[DaemonState] = None
+        self.queues = HostQueues(cfg)
+        self.launches = 0
+
+    # ------------------------------------------------------------------
+    # registration (paper Sec. 3.1.1)
+    # ------------------------------------------------------------------
+    def communicator(self, members: Sequence[int]) -> Communicator:
+        if self._tables is not None:
+            raise RegistrationClosed("register communicators before first launch")
+        comm = Communicator(
+            comm_id=len(self.comms), members=tuple(members),
+            lane=len(self.comms))
+        assert comm.lane < self.cfg.max_comms, "raise cfg.max_comms"
+        self.comms.append(comm)
+        return comm
+
+    def _alloc(self, elems: int) -> int:
+        off = self._heap_ptr
+        self._heap_ptr += elems
+        assert self._heap_ptr <= self.cfg.heap_elems, "raise cfg.heap_elems"
+        return off
+
+    def register(self, kind: CollKind, comm: Communicator, n_elems: int,
+                 op: ReduceOp = ReduceOp.SUM, root: int = 0) -> int:
+        """Register a collective; returns its unique id (paper Sec. 3.1.1)."""
+        if self._tables is not None:
+            raise RegistrationClosed("register collectives before first launch")
+        cid = len(self.specs)
+        assert cid < self.cfg.max_colls, "raise cfg.max_colls"
+        ns, rounds = derive_slicing(
+            n_elems, comm.size, self.cfg.slice_elems, self.cfg.conn_depth)
+        chunk = rounds * ns * self.cfg.slice_elems
+        padded = comm.size * chunk
+        inc, outc = io_chunked(kind)
+        in_off = self._alloc(padded if inc else chunk)
+        out_off = self._alloc(padded if outc else chunk)
+        spec = CollectiveSpec(
+            coll_id=cid, kind=kind, comm=comm, n_elems=n_elems, op=int(op),
+            root=root, in_off=in_off, out_off=out_off, n_slices=ns,
+            n_rounds=rounds)
+        self.specs.append(spec)
+        return cid
+
+    # ------------------------------------------------------------------
+    # lazy build (first launch closes registration)
+    # ------------------------------------------------------------------
+    def _ensure_built(self):
+        if self._tables is None:
+            self._tables = build_tables(self.cfg, self.comms, self.specs)
+            if self.mesh is None:
+                self._daemon = build_sim_daemon(self.cfg, self._tables)
+            else:
+                from .daemon import build_shardmap_daemon
+                self._daemon = build_shardmap_daemon(
+                    self.cfg, self._tables, self.mesh, self.mesh_axis)
+            self._state = init_state(self.cfg, per_rank=True)
+
+    @property
+    def state(self) -> DaemonState:
+        self._ensure_built()
+        return self._state
+
+    # ------------------------------------------------------------------
+    # data movement (send/recv buffers live in the per-rank heap)
+    # ------------------------------------------------------------------
+    def _spec(self, coll_id: int) -> CollectiveSpec:
+        return self.specs[coll_id]
+
+    def _chunk_layout(self, spec: CollectiveSpec):
+        sl = self.cfg.slice_elems
+        chunk_pad = spec.n_rounds * spec.n_slices * sl
+        chunk_log = -(-spec.n_elems // spec.group_size)  # ceil
+        return chunk_pad, chunk_log
+
+    def write_input(self, rank: int, coll_id: int, data: np.ndarray) -> None:
+        """Place logical input data into the rank's heap (padded layout)."""
+        self._ensure_built()
+        spec = self._spec(coll_id)
+        inc, _ = io_chunked(CollKind(spec.kind))
+        chunk_pad, chunk_log = self._chunk_layout(spec)
+        data = np.asarray(data).ravel()
+        if inc:
+            assert data.size == spec.n_elems
+            buf = np.zeros(spec.group_size * chunk_pad, data.dtype)
+            for k in range(spec.group_size):
+                part = data[k * chunk_log:(k + 1) * chunk_log]
+                buf[k * chunk_pad:k * chunk_pad + part.size] = part
+        else:  # all-gather: input is the rank's own chunk
+            assert data.size == chunk_log, (data.size, chunk_log)
+            buf = np.zeros(chunk_pad, data.dtype)
+            buf[:chunk_log] = data
+        heap = self._state.heap_in
+        heap = heap.at[rank, spec.in_off:spec.in_off + buf.size].set(
+            jnp.asarray(buf, heap.dtype))
+        self._state = self._state._replace(heap_in=heap)
+
+    def write_inputs_bulk(self, writes: dict) -> None:
+        """Batch heap writes: {(rank, coll_id): logical data} in ONE
+        host->device transfer (the per-step fast path for grad sync)."""
+        self._ensure_built()
+        heap = np.array(self._state.heap_in)  # mutable host copy
+        for (rank, coll_id), data in writes.items():
+            spec = self._spec(coll_id)
+            inc, _ = io_chunked(CollKind(spec.kind))
+            chunk_pad, chunk_log = self._chunk_layout(spec)
+            data = np.asarray(data).ravel()
+            row = heap[rank]
+            if inc:
+                for k in range(spec.group_size):
+                    part = data[k * chunk_log:(k + 1) * chunk_log]
+                    off = spec.in_off + k * chunk_pad
+                    row[off:off + part.size] = part
+            else:
+                row[spec.in_off:spec.in_off + data.size] = data
+        self._state = self._state._replace(
+            heap_in=jnp.asarray(heap, self._state.heap_in.dtype))
+
+    def read_outputs_bulk(self, reads: list) -> dict:
+        """Batch heap reads: [(rank, coll_id), ...] with ONE device->host
+        transfer.  Returns {(rank, coll_id): logical output}."""
+        self._ensure_built()
+        heap = np.asarray(self._state.heap_out)
+        out = {}
+        for rank, coll_id in reads:
+            spec = self._spec(coll_id)
+            _, outc = io_chunked(CollKind(spec.kind))
+            chunk_pad, chunk_log = self._chunk_layout(spec)
+            row = heap[rank]
+            if outc:
+                o = np.zeros(spec.group_size * chunk_log, heap.dtype)
+                for k in range(spec.group_size):
+                    src = spec.out_off + k * chunk_pad
+                    o[k * chunk_log:(k + 1) * chunk_log] = \
+                        row[src:src + chunk_log]
+                out[(rank, coll_id)] = o[:spec.n_elems]
+            else:
+                out[(rank, coll_id)] = \
+                    row[spec.out_off:spec.out_off + chunk_log]
+        return out
+
+    def read_output(self, rank: int, coll_id: int) -> np.ndarray:
+        """Gather logical output data from the rank's heap (un-pad)."""
+        self._ensure_built()
+        spec = self._spec(coll_id)
+        _, outc = io_chunked(CollKind(spec.kind))
+        chunk_pad, chunk_log = self._chunk_layout(spec)
+        heap = np.asarray(self._state.heap_out[rank])
+        if outc:
+            out = np.zeros(spec.group_size * chunk_log, heap.dtype)
+            for k in range(spec.group_size):
+                src = spec.out_off + k * chunk_pad
+                out[k * chunk_log:(k + 1) * chunk_log] = \
+                    heap[src:src + chunk_log]
+            return out[:spec.n_elems]
+        return heap[spec.out_off:spec.out_off + chunk_log]
+
+    # ------------------------------------------------------------------
+    # submission + event-driven execution (paper Sec. 3.1.2 / 3.1.3)
+    # ------------------------------------------------------------------
+    def submit(self, rank: int, coll_id: int, prio: int = 0,
+               data: Optional[np.ndarray] = None,
+               callback: Optional[Callable[[int, int], None]] = None) -> None:
+        self._ensure_built()
+        if data is not None:
+            self.write_input(rank, coll_id, data)
+        self.queues.submit(rank, SQE(coll_id=coll_id, prio=prio,
+                                     callback=callback))
+
+    def submit_all(self, coll_id: int, prio: int = 0) -> None:
+        spec = self._spec(coll_id)
+        for r in spec.comm.members:
+            self.submit(r, coll_id, prio=prio)
+
+    def launch_once(self) -> int:
+        """One daemon launch; returns #CQEs drained (may be 0)."""
+        self._ensure_built()
+        st = self.queues.pack_sq(self._state)
+        st = self._daemon(st)
+        st = jax.block_until_ready(st)
+        self.launches += 1
+        self._state = st
+        return self.queues.reconcile(st)
+
+    def drive(self, max_launches: int = 64) -> None:
+        """Event-driven daemon restarting: run while #CQE < #SQE (Sec. 3.1.3)."""
+        for _ in range(max_launches):
+            if self.queues.outstanding() == 0:
+                return
+            self.launch_once()
+        if self.queues.outstanding() != 0:
+            raise DeadlockTimeout(
+                f"{self.queues.outstanding()} collectives outstanding after "
+                f"{max_launches} daemon launches — a member rank never "
+                f"submitted a matching collective")
+
+    # ------------------------------------------------------------------
+    # observability (paper Fig. 9)
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        self._ensure_built()
+        st = self._state
+        return {
+            "preempts": np.asarray(st.preempts),          # [R, C]
+            "qlen_at_fetch": np.asarray(st.qlen_at_fetch),
+            "completed": np.asarray(st.completed),
+            "supersteps": np.asarray(st.supersteps),
+            "slices_moved": np.asarray(st.slices_moved),
+            "launches": self.launches,
+        }

@@ -1,0 +1,376 @@
+"""Per-rank daemon superstep: the core of the DFCE-framework (paper Sec. 3.1).
+
+One superstep, per rank:
+  A. apply arriving connector messages (slice commits + credits);
+  B. maybe fetch one SQE (order policy controls eagerness, Sec. 3.2);
+  C. per lane: select the current collective (two-phase blocking), gate one
+     slice move of its current primitive on connector state, execute or
+     spin/preempt (spin thresholds + stickiness, Sec. 3.2);
+  D. bookkeeping for voluntary quit (Sec. 3.1.3).
+
+Everything is branch-free fixed-shape array code so the loop compiles into
+a single long-running XLA program — the daemon-kernel analogue.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import OcclConfig, OrderPolicy, ReduceOp
+from . import primitives as P
+from .primitives import Prim
+from .state import DaemonState
+
+# Queue-key stride between priority classes (arrival stays below this).
+_BIG = jnp.int32(1 << 20)
+
+# Primitive action-flag lookups as device arrays (indexable by tracers).
+PRIM_RECV = jnp.asarray(P.PRIM_RECV)
+PRIM_SEND = jnp.asarray(P.PRIM_SEND)
+PRIM_REDUCE = jnp.asarray(P.PRIM_REDUCE)
+PRIM_COPY = jnp.asarray(P.PRIM_COPY)
+PRIM_READS_IN = jnp.asarray(P.PRIM_READS_IN)
+
+
+class SharedTables(NamedTuple):
+    """Rank-independent static context (vmap in_axes=None)."""
+
+    registered: jnp.ndarray   # [C] bool
+    kind: jnp.ndarray         # [C]
+    op: jnp.ndarray           # [C]
+    lane: jnp.ndarray         # [C]
+    n_steps: jnp.ndarray      # [C]
+    n_slices: jnp.ndarray     # [C]
+    n_rounds: jnp.ndarray     # [C]
+    in_chunked: jnp.ndarray   # [C]
+    out_chunked: jnp.ndarray  # [C]
+    base_in_off: jnp.ndarray  # [C]
+    base_out_off: jnp.ndarray # [C]
+
+
+class LocalTables(NamedTuple):
+    """Per-rank static context (vmap in_axes=0)."""
+
+    member: jnp.ndarray       # [C] bool
+    prog_kind: jnp.ndarray    # [C, S]
+    prog_chunk: jnp.ndarray   # [C, S]
+
+
+class Mailbox(NamedTuple):
+    """Per-lane connector traffic for one superstep (fwd data + rev credit)."""
+
+    fwd_valid: jnp.ndarray    # [L] bool
+    fwd_coll: jnp.ndarray     # [L] i32
+    fwd_payload: jnp.ndarray  # [L, SLICE]
+    rev_valid: jnp.ndarray    # [L] bool
+    rev_coll: jnp.ndarray     # [L] i32
+
+
+def empty_mailbox(cfg: OcclConfig) -> Mailbox:
+    L, SL = cfg.max_comms, cfg.slice_elems
+    return Mailbox(
+        fwd_valid=jnp.zeros((L,), jnp.bool_),
+        fwd_coll=jnp.zeros((L,), jnp.int32),
+        fwd_payload=jnp.zeros((L, SL), jnp.dtype(cfg.dtype)),
+        rev_valid=jnp.zeros((L,), jnp.bool_),
+        rev_coll=jnp.zeros((L,), jnp.int32),
+    )
+
+
+def _combine(op: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Apply the collective's reduction (static-context ``op``)."""
+    return jax.lax.switch(
+        jnp.clip(op, 0, 3),
+        [
+            lambda x, y: x + y,
+            jnp.maximum,
+            jnp.minimum,
+            lambda x, y: x * y,
+        ],
+        a,
+        b,
+    )
+
+
+def _queue_keys(cfg, st, shared, local, lane):
+    """Ascending queue-order key per collective for this lane (front = min)."""
+    eligible = st.tq_active & local.member & (shared.lane == lane)
+    key = st.arrival
+    if cfg.demand_steering:
+        # Data already waiting in the recv connector => ring peers are on
+        # this collective; steering toward it is the fastest decentralized
+        # gang-convergence signal available (beyond-paper policy).
+        demand = (st.tail < st.head_mirror).astype(jnp.int32)
+        key = key - demand * (jnp.int32(1) << 18)
+    if cfg.order_policy == OrderPolicy.PRIORITY:
+        # Higher priority first; FIFO (+demand) within equal priority.
+        key = (-st.prio) * _BIG + key
+    key = jnp.where(eligible, key, jnp.iinfo(jnp.int32).max)
+    return eligible, key
+
+
+def _positions(eligible, key):
+    """Task-queue position of each eligible collective (0 = front)."""
+    pos = jnp.sum(
+        (key[None, :] < key[:, None])
+        | ((key[None, :] == key[:, None])
+           & (jnp.arange(key.shape[0])[None, :] < jnp.arange(key.shape[0])[:, None])),
+        axis=1,
+    ).astype(jnp.int32)
+    return jnp.where(eligible, pos, jnp.int32(0))
+
+
+def _thresholds(cfg, st, eligible, pos):
+    """Effective spin thresholds (stickiness scheme, Sec. 3.2)."""
+    if cfg.stickiness:
+        base = cfg.spin_base - pos * cfg.spin_decr + st.boost
+    else:
+        base = jnp.full_like(pos, cfg.spin_base)
+    return jnp.clip(base, cfg.spin_min, cfg.spin_max)
+
+
+def apply_inbox(cfg: OcclConfig, st: DaemonState, inbox: Mailbox) -> DaemonState:
+    """Phase A: commit arriving slices into the recv-connector mirror and
+    arriving credits into the send-side tail mirror."""
+    K = cfg.conn_depth
+    head_mirror, tail_mirror, payload = st.head_mirror, st.tail_mirror, st.payload
+    for lane in range(cfg.max_comms):
+        c = inbox.fwd_coll[lane]
+        v = inbox.fwd_valid[lane]
+        slot = head_mirror[c] % K
+        payload = payload.at[c, slot].set(
+            jnp.where(v, inbox.fwd_payload[lane], payload[c, slot])
+        )
+        head_mirror = head_mirror.at[c].add(jnp.where(v, 1, 0))
+        rc = inbox.rev_coll[lane]
+        rv = inbox.rev_valid[lane]
+        tail_mirror = tail_mirror.at[rc].add(jnp.where(rv, 1, 0))
+    return st._replace(
+        head_mirror=head_mirror, tail_mirror=tail_mirror, payload=payload
+    )
+
+
+def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
+              local: LocalTables) -> tuple[DaemonState, jnp.ndarray]:
+    """Phase B: pop at most one SQE into the task queue (paper Sec. 3.1.2).
+
+    FIFO policy fetches lazily (queue empty or stuck); PRIORITY fetches
+    eagerly every superstep (paper: "checking the SQ more frequently").
+    """
+    has_sqe = st.sq_read < st.sq_size
+    if cfg.order_policy == OrderPolicy.PRIORITY:
+        want = has_sqe
+    else:
+        stuck_or_empty = (~st.made_prog_prev) | (~jnp.any(st.tq_active))
+        want = has_sqe & stuck_or_empty
+    slot = jnp.clip(st.sq_read, 0, cfg.sq_len - 1)
+    c = st.sq_coll[slot]
+    # Head-of-line wait: a re-submission of an in-flight collective waits
+    # (the runtime never has two executions of one collective concurrently).
+    ok = want & (c >= 0) & ~st.inflight[c] & local.member[c] & shared.registered[c]
+    qlen = jnp.sum(st.tq_active).astype(jnp.int32)
+    one = jnp.where(ok, 1, 0)
+    st = st._replace(
+        tq_active=st.tq_active.at[c].set(jnp.where(ok, True, st.tq_active[c])),
+        inflight=st.inflight.at[c].set(jnp.where(ok, True, st.inflight[c])),
+        arrival=st.arrival.at[c].set(
+            jnp.where(ok, st.supersteps, st.arrival[c])),
+        prio=st.prio.at[c].set(jnp.where(
+            ok, jnp.clip(st.sq_prio[slot], -512, 512), st.prio[c])),
+        in_off=st.in_off.at[c].set(jnp.where(
+            ok,
+            jnp.where(st.sq_in[slot] >= 0, st.sq_in[slot], shared.base_in_off[c]),
+            st.in_off[c])),
+        out_off=st.out_off.at[c].set(jnp.where(
+            ok,
+            jnp.where(st.sq_out[slot] >= 0, st.sq_out[slot], shared.base_out_off[c]),
+            st.out_off[c])),
+        ctx_step=st.ctx_step.at[c].set(jnp.where(ok, 0, st.ctx_step[c])),
+        ctx_slice=st.ctx_slice.at[c].set(jnp.where(ok, 0, st.ctx_slice[c])),
+        ctx_round=st.ctx_round.at[c].set(jnp.where(ok, 0, st.ctx_round[c])),
+        spin=st.spin.at[c].set(jnp.where(ok, 0, st.spin[c])),
+        boost=st.boost.at[c].set(jnp.where(ok, 0, st.boost[c])),
+        qlen_at_fetch=st.qlen_at_fetch.at[c].set(
+            jnp.where(ok, qlen, st.qlen_at_fetch[c])),
+        sq_read=st.sq_read + one,
+    )
+    return st, ok
+
+
+def lane_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
+              local: LocalTables, lane: int
+              ) -> tuple[DaemonState, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                         jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Phase C for one lane: two-phase-blocking selection + one slice move.
+
+    Returns (state, moved, fwd_valid, fwd_coll, fwd_payload, rev_valid,
+    rev_coll).
+    """
+    K, SL = cfg.conn_depth, cfg.slice_elems
+    C = cfg.max_colls
+
+    eligible, key = _queue_keys(cfg, st, shared, local, lane)
+    pos = _positions(eligible, key)
+    thr = _thresholds(cfg, st, eligible, pos)
+
+    cur = st.cur[lane]
+    cur_ok = (cur >= 0) & eligible[jnp.clip(cur, 0, C - 1)]
+    cur_c = jnp.clip(cur, 0, C - 1)
+    overspun = cur_ok & (st.spin[cur_c] > thr[cur_c])
+    if cfg.priority_preempts:
+        higher = jnp.any(eligible & (st.prio > st.prio[cur_c]))
+        overspun = overspun | (cur_ok & higher)
+
+    # Preempt: context switch — dynamic context stays in the context buffer
+    # (it already lives in ctx_* arrays: the lazy-saving optimization of
+    # Sec. 4 is structural here), rotate to the back of the queue.
+    st = st._replace(
+        preempts=st.preempts.at[cur_c].add(jnp.where(overspun, 1, 0)),
+        arrival=st.arrival.at[cur_c].set(
+            jnp.where(overspun, st.supersteps + 1, st.arrival[cur_c])),
+        spin=st.spin.at[cur_c].set(jnp.where(overspun, 0, st.spin[cur_c])),
+        boost=st.boost.at[cur_c].set(jnp.where(overspun, 0, st.boost[cur_c])),
+    )
+    keep = cur_ok & ~overspun
+
+    # Queue front after a possible rotation.
+    eligible, key = _queue_keys(cfg, st, shared, local, lane)
+    front = jnp.argmin(key).astype(jnp.int32)
+    any_eligible = jnp.any(eligible)
+    cand = jnp.where(keep, cur, jnp.where(any_eligible, front, -1))
+    c = jnp.clip(cand, 0, C - 1)
+    valid = cand >= 0
+
+    # --- gate one slice move of the current primitive --------------------
+    step = jnp.clip(st.ctx_step[c], 0, local.prog_kind.shape[1] - 1)
+    prim = local.prog_kind[c, step]
+    chunk = local.prog_chunk[c, step]
+    sl = st.ctx_slice[c]
+    needs_recv = PRIM_RECV[prim] > 0
+    needs_send = PRIM_SEND[prim] > 0
+    does_reduce = PRIM_REDUCE[prim] > 0
+    does_copy = PRIM_COPY[prim] > 0
+    reads_in = PRIM_READS_IN[prim] > 0
+
+    can_recv = st.tail[c] < st.head_mirror[c]
+    can_send = (st.head[c] - st.tail_mirror[c]) < K
+    gate = valid & (prim != Prim.NULL) & \
+        (~needs_recv | can_recv) & (~needs_send | can_send)
+
+    # --- execute the fused actions (paper Fig. 3) ------------------------
+    recv_val = st.payload[c, st.tail[c] % K]
+    nsl = shared.n_slices[c]
+    rnd = st.ctx_round[c]
+    chunk_stride = shared.n_rounds[c] * nsl * SL   # padded chunk extent
+    within = (rnd * nsl + sl) * SL                 # (round, slice) offset
+    in_base = (st.in_off[c]
+               + jnp.where(shared.in_chunked[c] > 0, chunk, 0) * chunk_stride
+               + within)
+    out_base = (st.out_off[c]
+                + jnp.where(shared.out_chunked[c] > 0, chunk, 0) * chunk_stride
+                + within)
+    in_val = jax.lax.dynamic_slice(st.heap_in, (in_base,), (SL,))
+    if cfg.use_pallas:
+        from ..kernels import ops as kops
+        value = kops.fused_primitive(
+            recv_val, in_val, shared.op[c],
+            needs_recv, does_reduce, reads_in)
+    else:
+        reduced = _combine(shared.op[c], recv_val, in_val)
+        value = jnp.where(
+            does_reduce, reduced,
+            jnp.where(needs_recv, recv_val,
+                      jnp.where(reads_in, in_val, jnp.zeros_like(in_val))))
+
+    write_out = gate & does_copy
+    new_heap_out = jax.lax.dynamic_update_slice(
+        st.heap_out, value.astype(st.heap_out.dtype), (out_base,))
+    heap_out = jax.lax.select(write_out, new_heap_out, st.heap_out)
+
+    did_recv = gate & needs_recv
+    did_send = gate & needs_send
+
+    # --- advance the dynamic context (round, primitive, slice) -----------
+    nslices = shared.n_slices[c]
+    new_slice = sl + 1
+    step_done = gate & (new_slice >= nslices)
+    seq_done = step_done & (st.ctx_step[c] + 1 >= shared.n_steps[c])
+    next_step = jnp.where(
+        seq_done, 0,
+        jnp.where(step_done, st.ctx_step[c] + 1, st.ctx_step[c]))
+    next_slice = jnp.where(gate, jnp.where(step_done, 0, new_slice), sl)
+    next_round = jnp.where(seq_done, rnd + 1, rnd)
+    coll_done = seq_done & (next_round >= shared.n_rounds[c])
+
+    st = st._replace(
+        heap_out=heap_out,
+        tail=st.tail.at[c].add(jnp.where(did_recv, 1, 0)),
+        head=st.head.at[c].add(jnp.where(did_send, 1, 0)),
+        ctx_step=st.ctx_step.at[c].set(jnp.where(gate, next_step, st.ctx_step[c])),
+        ctx_slice=st.ctx_slice.at[c].set(next_slice),
+        ctx_round=st.ctx_round.at[c].set(next_round),
+        spin=st.spin.at[c].set(
+            jnp.where(gate, 0, jnp.where(valid, st.spin[c] + 1, st.spin[c]))),
+        # Stickiness: a successful primitive boosts its successors' spin
+        # thresholds (gang-convergence pressure, Sec. 3.2).
+        boost=st.boost.at[c].add(
+            jnp.where(step_done & ~coll_done & jnp.bool_(cfg.stickiness),
+                      cfg.spin_boost, 0)),
+        slices_moved=st.slices_moved + jnp.where(gate, 1, 0),
+    )
+
+    # --- completion: write the CQE (paper Sec. 3.1.2) ---------------------
+    cq_slot = jnp.clip(st.cq_count, 0, cfg.cq_len - 1)
+    st = st._replace(
+        tq_active=st.tq_active.at[c].set(
+            jnp.where(coll_done, False, st.tq_active[c])),
+        inflight=st.inflight.at[c].set(
+            jnp.where(coll_done, False, st.inflight[c])),
+        completed=st.completed.at[c].add(jnp.where(coll_done, 1, 0)),
+        cq_coll=st.cq_coll.at[cq_slot].set(
+            jnp.where(coll_done, c, st.cq_coll[cq_slot])),
+        cq_count=st.cq_count + jnp.where(coll_done, 1, 0),
+        cur=st.cur.at[lane].set(jnp.where(coll_done | ~valid, -1, cand)),
+    )
+
+    fwd_payload = value.astype(st.payload.dtype)
+    return st, gate, did_send, c, fwd_payload, did_recv, c
+
+
+def rank_superstep(cfg: OcclConfig, shared: SharedTables, local: LocalTables,
+                   st: DaemonState, inbox: Mailbox
+                   ) -> tuple[DaemonState, Mailbox]:
+    """One full superstep for one rank."""
+    st = apply_inbox(cfg, st, inbox)
+    st, fetched = fetch_sqe(cfg, st, shared, local)
+
+    L, SL = cfg.max_comms, cfg.slice_elems
+    fwd_valid, fwd_coll, rev_valid, rev_coll = [], [], [], []
+    fwd_payload = []
+    moved_any = jnp.bool_(False)
+    for lane in range(L):
+        st, moved, fv, fc, fp, rv, rc = lane_step(cfg, st, shared, local, lane)
+        moved_any = moved_any | moved
+        fwd_valid.append(fv)
+        fwd_coll.append(fc)
+        fwd_payload.append(fp)
+        rev_valid.append(rv)
+        rev_coll.append(rc)
+
+    progress = moved_any | fetched
+    st = st._replace(
+        supersteps=st.supersteps + 1,
+        no_prog=jnp.where(progress, 0, st.no_prog + 1),
+        made_prog_prev=moved_any,
+    )
+    outbox = Mailbox(
+        fwd_valid=jnp.stack(fwd_valid),
+        fwd_coll=jnp.stack(fwd_coll),
+        fwd_payload=jnp.stack(fwd_payload),
+        rev_valid=jnp.stack(rev_valid),
+        rev_coll=jnp.stack(rev_coll),
+    )
+    return st, outbox

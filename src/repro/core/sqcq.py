@@ -1,0 +1,108 @@
+"""Host-side SQ/CQ handling (paper Sec. 3.1.2).
+
+Submission-queue entries carry the collective id, user priority and live
+buffer addresses (heap offsets) — the dynamic part of the static context.
+The completion queue is drained by a poller that dispatches user callbacks
+registered in the callback map at submission time.
+
+On a GPU these rings live in page-locked host memory and are polled
+concurrently; a TPU device cannot observe host writes mid-program, so the
+rings cross the host/device boundary at daemon (re)launches — the paper's
+voluntary-quit / event-driven-restart cycle (Sec. 3.1.3) supplies exactly
+the needed boundary.  See DESIGN.md Sec. 2.1.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import OcclConfig
+from .state import DaemonState
+
+
+@dataclasses.dataclass
+class SQE:
+    coll_id: int
+    prio: int = 0
+    in_off: int = -1    # -1 = keep the registered default
+    out_off: int = -1
+    callback: Optional[Callable[[int, int], None]] = None  # (rank, coll_id)
+
+
+class HostQueues:
+    """Per-rank pending submissions + callback map + completion counters."""
+
+    def __init__(self, cfg: OcclConfig):
+        self.cfg = cfg
+        self.pending: list[collections.deque[SQE]] = [
+            collections.deque() for _ in range(cfg.n_ranks)
+        ]
+        self.callbacks: list[dict[int, collections.deque]] = [
+            collections.defaultdict(collections.deque)
+            for _ in range(cfg.n_ranks)
+        ]
+        self.submitted = np.zeros(cfg.n_ranks, np.int64)
+        self.completed = np.zeros(cfg.n_ranks, np.int64)
+
+    def submit(self, rank: int, sqe: SQE) -> None:
+        self.pending[rank].append(sqe)
+        if sqe.callback is not None:
+            self.callbacks[rank][sqe.coll_id].append(sqe.callback)
+        self.submitted[rank] += 1
+
+    # -- device-bound packing ---------------------------------------------
+    def pack_sq(self, st: DaemonState) -> DaemonState:
+        """Load up to sq_len pending SQEs per rank into the state's SQ and
+        reset the cursors (the previous launch's consumed entries were
+        already popped by :meth:`reconcile`)."""
+        cfg = self.cfg
+        sq_coll = np.full((cfg.n_ranks, cfg.sq_len), -1, np.int32)
+        sq_prio = np.zeros((cfg.n_ranks, cfg.sq_len), np.int32)
+        sq_in = np.full((cfg.n_ranks, cfg.sq_len), -1, np.int32)
+        sq_out = np.full((cfg.n_ranks, cfg.sq_len), -1, np.int32)
+        sq_size = np.zeros((cfg.n_ranks,), np.int32)
+        for r in range(cfg.n_ranks):
+            n = min(len(self.pending[r]), cfg.sq_len)
+            for i in range(n):
+                e = self.pending[r][i]
+                sq_coll[r, i] = e.coll_id
+                sq_prio[r, i] = e.prio
+                sq_in[r, i] = e.in_off
+                sq_out[r, i] = e.out_off
+            sq_size[r] = n
+        return st._replace(
+            sq_coll=jnp.asarray(sq_coll), sq_prio=jnp.asarray(sq_prio),
+            sq_in=jnp.asarray(sq_in), sq_out=jnp.asarray(sq_out),
+            sq_size=jnp.asarray(sq_size),
+            sq_read=jnp.zeros((cfg.n_ranks,), jnp.int32),
+            cq_coll=jnp.full((cfg.n_ranks, cfg.cq_len), -1, jnp.int32),
+            cq_count=jnp.zeros((cfg.n_ranks,), jnp.int32),
+        )
+
+    # -- post-launch reconciliation ----------------------------------------
+    def reconcile(self, st: DaemonState) -> int:
+        """Pop consumed SQEs, drain CQs, fire callbacks.  Returns #CQEs."""
+        cfg = self.cfg
+        sq_read = np.asarray(st.sq_read)
+        cq_count = np.asarray(st.cq_count)
+        cq_coll = np.asarray(st.cq_coll)
+        fired = 0
+        for r in range(cfg.n_ranks):
+            for _ in range(int(sq_read[r])):
+                self.pending[r].popleft()
+            for i in range(int(cq_count[r])):
+                c = int(cq_coll[r, i])
+                self.completed[r] += 1
+                fired += 1
+                cbs = self.callbacks[r].get(c)
+                if cbs:
+                    cbs.popleft()(r, c)
+        return fired
+
+    def outstanding(self) -> int:
+        """#SQEs submitted whose CQE has not been seen (drives relaunch)."""
+        return int(self.submitted.sum() - self.completed.sum())

@@ -1,0 +1,129 @@
+"""Daemon state: dynamic contexts, connectors, task queue, SQ/CQ mirrors.
+
+Every field is a fixed-shape array so the daemon compiles to one XLA program
+(the analogue of the long-running daemon kernel, paper Sec. 3.1).  In the
+sim backend each array carries a leading ``n_ranks`` axis and the superstep
+is vmapped; in the mesh backend the same arrays are per-device inside
+``shard_map``.
+
+Connector representation (paper Fig. 3, Sec. 2.3): the connector between
+ring-neighbors ``r -> next(r)`` is a lock-free ring buffer of ``K`` slice
+slots.  The *writer* owns the committed-write counter ``head`` and a lagging
+mirror of the reader's ``tail`` (credits); the *reader* owns ``tail``, a
+lagging mirror of ``head`` and the payload slots.  Committed writes stay
+visible to the peer even if the writing collective is preempted — the
+visibility property that makes decentralized preemption safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import OcclConfig
+
+
+class DaemonState(NamedTuple):
+    # --- data heap (send/recv buffers; addresses = heap offsets) --------
+    heap_in: jnp.ndarray       # [H]
+    heap_out: jnp.ndarray      # [H]
+
+    # --- connectors (per collective; dedicated, paper Sec. 5.1) ---------
+    head: jnp.ndarray          # [C] i32 — my committed writes (send side)
+    tail_mirror: jnp.ndarray   # [C] i32 — reader's consumed count (lagging)
+    head_mirror: jnp.ndarray   # [C] i32 — upstream's commits (lagging)
+    tail: jnp.ndarray          # [C] i32 — my consumed count (recv side)
+    payload: jnp.ndarray       # [C, K, SLICE] — recv-connector slots
+
+    # --- task queue + dynamic contexts (paper Sec. 3.1.1) ---------------
+    tq_active: jnp.ndarray     # [C] bool — in my task queue
+    arrival: jnp.ndarray       # [C] i32 — queue-order key (FIFO / rotate)
+    prio: jnp.ndarray          # [C] i32 — user priority (SQE)
+    cur: jnp.ndarray           # [L] i32 — executing collective per lane (-1)
+    ctx_step: jnp.ndarray      # [C] i32 — primitive index
+    ctx_slice: jnp.ndarray     # [C] i32 — slice index inside the chunk
+    ctx_round: jnp.ndarray     # [C] i32 — primitive-sequence repetition
+    spin: jnp.ndarray          # [C] i32 — current primitive's spin count
+    boost: jnp.ndarray        # [C] i32 — stickiness boost (success bonus)
+    in_off: jnp.ndarray        # [C] i32 — live buffer addresses (SQE-set)
+    out_off: jnp.ndarray       # [C] i32
+
+    # --- SQ / CQ (paper Sec. 3.1.2) --------------------------------------
+    sq_coll: jnp.ndarray       # [SQL] i32
+    sq_prio: jnp.ndarray       # [SQL] i32
+    sq_in: jnp.ndarray         # [SQL] i32 (-1 = keep registered default)
+    sq_out: jnp.ndarray        # [SQL] i32
+    sq_size: jnp.ndarray       # [] i32 — valid SQEs
+    sq_read: jnp.ndarray       # [] i32 — daemon cursor
+    cq_coll: jnp.ndarray       # [CQL] i32
+    cq_count: jnp.ndarray      # [] i32
+    inflight: jnp.ndarray      # [C] bool — submitted, not yet completed
+
+    # --- in-flight connector messages (survive daemon relaunch) ---------
+    # A credit/slice emitted on the fabric's last superstep has not been
+    # applied yet; dropping it would permanently wedge the connector
+    # counters.  The mailbox is therefore part of the persistent state.
+    mb_fwd_valid: jnp.ndarray   # [L] bool
+    mb_fwd_coll: jnp.ndarray    # [L] i32
+    mb_fwd_payload: jnp.ndarray # [L, SLICE]
+    mb_rev_valid: jnp.ndarray   # [L] bool
+    mb_rev_coll: jnp.ndarray    # [L] i32
+
+    # --- counters / lifecycle --------------------------------------------
+    completed: jnp.ndarray     # [C] i32 — completions (repeat submissions)
+    preempts: jnp.ndarray      # [C] i32 — context switches (Fig. 9)
+    qlen_at_fetch: jnp.ndarray # [C] i32 — task-queue length at SQE fetch (Fig. 9)
+    supersteps: jnp.ndarray    # [] i32
+    no_prog: jnp.ndarray       # [] i32 — consecutive no-progress supersteps
+    made_prog_prev: jnp.ndarray  # [] bool — lazy-fetch gate input
+    slices_moved: jnp.ndarray  # [] i32 — work counter (bandwidth accounting)
+    global_live: jnp.ndarray   # [] bool — fabric-wide continue flag
+
+
+def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
+    """Fresh state; leading rank axis added when ``per_rank`` (sim backend)."""
+    C, K, L = cfg.max_colls, cfg.conn_depth, cfg.max_comms
+    SQL, CQL, H, SL = cfg.sq_len, cfg.cq_len, cfg.heap_elems, cfg.slice_elems
+    dt = jnp.dtype(cfg.dtype)
+
+    def z(shape, dtype=jnp.int32, fill=0):
+        a = jnp.full(shape, fill, dtype)
+        return a
+
+    s = DaemonState(
+        heap_in=z((H,), dt),
+        heap_out=z((H,), dt),
+        head=z((C,)), tail_mirror=z((C,)), head_mirror=z((C,)), tail=z((C,)),
+        payload=z((C, K, SL), dt),
+        tq_active=z((C,), jnp.bool_, False),
+        arrival=z((C,)),
+        prio=z((C,)),
+        cur=z((L,), jnp.int32, -1),
+        ctx_step=z((C,)), ctx_slice=z((C,)), ctx_round=z((C,)),
+        spin=z((C,)), boost=z((C,)),
+        in_off=z((C,)), out_off=z((C,)),
+        sq_coll=z((SQL,), jnp.int32, -1), sq_prio=z((SQL,)),
+        sq_in=z((SQL,), jnp.int32, -1), sq_out=z((SQL,), jnp.int32, -1),
+        sq_size=z(()), sq_read=z(()),
+        cq_coll=z((CQL,), jnp.int32, -1), cq_count=z(()),
+        inflight=z((C,), jnp.bool_, False),
+        mb_fwd_valid=z((L,), jnp.bool_, False),
+        mb_fwd_coll=z((L,)),
+        mb_fwd_payload=z((L, SL), dt),
+        mb_rev_valid=z((L,), jnp.bool_, False),
+        mb_rev_coll=z((L,)),
+        completed=z((C,)), preempts=z((C,)), qlen_at_fetch=z((C,)),
+        supersteps=z(()), no_prog=z(()),
+        made_prog_prev=z((), jnp.bool_, False),
+        slices_moved=z(()),
+        global_live=z((), jnp.bool_, True),
+    )
+    if per_rank:
+        s = s._replace(
+            **{
+                f: jnp.broadcast_to(v, (cfg.n_ranks,) + v.shape).copy()
+                for f, v in s._asdict().items()
+            }
+        )
+    return s

@@ -1,0 +1,136 @@
+"""Registration-time static tables for the daemon (paper Sec. 3.1.1).
+
+``OCCL registers collectives to be used on each GPU and prepares their meta
+information as well as collective context buffer slots before executing
+them.``  Registration happens host-side in numpy; the result is a set of
+dense arrays indexed by collective id, compiled into the daemon program.
+Per-rank tables (primitive programs, membership) carry a leading rank axis
+in the sim backend and are sliced per-device in the mesh backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .config import OcclConfig
+from .primitives import (
+    CollKind,
+    CollectiveSpec,
+    Communicator,
+    Prim,
+    build_program,
+    io_chunked,
+    program_len,
+)
+
+
+@dataclasses.dataclass
+class StaticTables:
+    """Dense static context for up to C collectives over Rk ranks."""
+
+    # per-collective, rank-independent -----------------------------------
+    registered: np.ndarray    # [C] bool
+    kind: np.ndarray          # [C] int32
+    op: np.ndarray            # [C] int32 (ReduceOp)
+    lane: np.ndarray          # [C] int32
+    n_steps: np.ndarray       # [C] int32 (per-rank program length; same all ranks)
+    n_slices: np.ndarray      # [C] int32 (slices per chunk per round)
+    n_rounds: np.ndarray      # [C] int32 (primitive-sequence repetitions)
+    group_size: np.ndarray    # [C] int32
+    in_chunked: np.ndarray    # [C] int32
+    out_chunked: np.ndarray   # [C] int32
+    base_in_off: np.ndarray   # [C] int32 (default heap offsets)
+    base_out_off: np.ndarray  # [C] int32
+
+    # per-(rank, collective) ----------------------------------------------
+    member: np.ndarray        # [Rk, C] bool — rank participates
+    prog_kind: np.ndarray     # [Rk, C, S] int32 (Prim)
+    prog_chunk: np.ndarray    # [Rk, C, S] int32
+
+    # per-lane ring permutations -----------------------------------------
+    fwd_src: np.ndarray       # [L, Rk] int32 — fwd msg arriving at rank r
+                              #   was sent by fwd_src[l, r]
+    rev_src: np.ndarray       # [L, Rk] int32 — reverse (credit) exchange
+    fwd_perm_pairs: list      # [L] list[(src, dst)] for lax.ppermute
+    rev_perm_pairs: list
+
+    max_steps: int
+
+
+def build_tables(
+    cfg: OcclConfig,
+    comms: list[Communicator],
+    specs: list[CollectiveSpec],
+) -> StaticTables:
+    Rk, C, L = cfg.n_ranks, cfg.max_colls, cfg.max_comms
+    assert len(comms) <= L, "more communicators than daemon lanes"
+    assert len(specs) <= C, "more collectives than registered slots"
+    for s in specs:
+        assert s.coll_id < C
+        assert s.comm.lane < L
+
+    S = max(
+        [program_len(CollKind(s.kind), s.group_size) for s in specs] or [1]
+    )
+
+    t = StaticTables(
+        registered=np.zeros(C, bool),
+        kind=np.zeros(C, np.int32),
+        op=np.zeros(C, np.int32),
+        lane=np.zeros(C, np.int32),
+        n_steps=np.zeros(C, np.int32),
+        n_slices=np.ones(C, np.int32),
+        n_rounds=np.ones(C, np.int32),
+        group_size=np.ones(C, np.int32),
+        in_chunked=np.ones(C, np.int32),
+        out_chunked=np.ones(C, np.int32),
+        base_in_off=np.zeros(C, np.int32),
+        base_out_off=np.zeros(C, np.int32),
+        member=np.zeros((Rk, C), bool),
+        prog_kind=np.full((Rk, C, S), int(Prim.NULL), np.int32),
+        prog_chunk=np.zeros((Rk, C, S), np.int32),
+        fwd_src=np.tile(np.arange(Rk, dtype=np.int32), (L, 1)),
+        rev_src=np.tile(np.arange(Rk, dtype=np.int32), (L, 1)),
+        fwd_perm_pairs=[[] for _ in range(L)],
+        rev_perm_pairs=[[] for _ in range(L)],
+        max_steps=S,
+    )
+
+    for comm in comms:
+        fwd = comm.fwd_perm(Rk)   # perm[src] = dst
+        rev = comm.rev_perm(Rk)
+        for src in range(Rk):
+            t.fwd_src[comm.lane, fwd[src]] = src
+            t.rev_src[comm.lane, rev[src]] = src
+        t.fwd_perm_pairs[comm.lane] = [
+            (int(s), int(fwd[s])) for s in range(Rk)
+        ]
+        t.rev_perm_pairs[comm.lane] = [
+            (int(s), int(rev[s])) for s in range(Rk)
+        ]
+
+    for s in specs:
+        c = s.coll_id
+        kind = CollKind(s.kind)
+        inc, outc = io_chunked(kind)
+        t.registered[c] = True
+        t.kind[c] = int(kind)
+        t.op[c] = int(s.op)
+        t.lane[c] = s.comm.lane
+        t.n_steps[c] = program_len(kind, s.group_size)
+        t.n_slices[c] = s.n_slices
+        t.n_rounds[c] = s.n_rounds
+        t.group_size[c] = s.group_size
+        t.in_chunked[c] = int(inc)
+        t.out_chunked[c] = int(outc)
+        t.base_in_off[c] = s.in_off
+        t.base_out_off[c] = s.out_off
+        for rank in s.comm.members:
+            m = s.comm.member_index(rank)
+            t.member[rank, c] = True
+            prog = build_program(kind, m, s.group_size, s.root)
+            for step, (prim, chunk) in enumerate(prog):
+                t.prog_kind[rank, c, step] = int(prim)
+                t.prog_chunk[rank, c, step] = chunk
+    return t

@@ -1,0 +1,46 @@
+"""Step-level straggler detection.
+
+Collective-layer straggler tolerance is intrinsic to OCCL (bounded
+supersteps + voluntary quit: a slow rank only delays its own collectives,
+which get preempted rather than wedging peers).  This module adds the
+fleet-level detector: per-rank step-time EWMAs flag ranks whose times
+exceed ``threshold`` x the fleet median, feeding the controller's
+re-scheduling decision (on this testbed: a report + an exclusion list).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    n_ranks: int
+    alpha: float = 0.3          # EWMA factor
+    threshold: float = 2.0      # x median -> straggler
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_ranks)
+        self.seen = np.zeros(self.n_ranks, dtype=bool)
+
+    def observe(self, rank: int, step_time_s: float):
+        if not self.seen[rank]:
+            self.ewma[rank] = step_time_s
+            self.seen[rank] = True
+        else:
+            self.ewma[rank] = (self.alpha * step_time_s
+                               + (1 - self.alpha) * self.ewma[rank])
+
+    def stragglers(self) -> list[int]:
+        if not self.seen.any():
+            return []
+        med = float(np.median(self.ewma[self.seen]))
+        if med <= 0:
+            return []
+        return [r for r in range(self.n_ranks)
+                if self.seen[r] and self.ewma[r] > self.threshold * med]
+
+    def healthy_ranks(self) -> list[int]:
+        bad = set(self.stragglers())
+        return [r for r in range(self.n_ranks) if r not in bad]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused primitive slice application.
+
+The daemon's compute hot-spot is the fused action of a primitive on a
+slice (paper Sec. 2.3): ``recvReduceCopySend`` reads the recv-connector
+payload and the local send buffer once, combines them, and feeds both the
+recv-buffer write and the send-connector push from the same value — one
+pass through VMEM instead of separate reduce + copy kernels.
+
+Layout: payload/local are [B, S] (B = lanes or batched slices).  Grid is
+(B, S // TS); each program instance owns a (1, TS) VMEM tile.  The per-row
+opcode (recv, reduce, reads_in, op) rides in SMEM via a scalar BlockSpec.
+TS is a multiple of 128 to keep tiles lane-aligned for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tile(s: int) -> int:
+    # Largest power-of-two tile <= 512 dividing S, floor 8 (interp-friendly).
+    for ts in (512, 256, 128, 64, 32, 16, 8):
+        if s % ts == 0:
+            return ts
+    return s
+
+
+def _kernel(flags_ref, payload_ref, local_ref, out_ref):
+    recv = flags_ref[0, 0] > 0
+    reduce = flags_ref[0, 1] > 0
+    reads = flags_ref[0, 2] > 0
+    op = flags_ref[0, 3]
+
+    p = payload_ref[...]
+    l = local_ref[...]
+    # bf16 combines accumulate in f32 (matches ref oracle).
+    pf = p.astype(jnp.float32)
+    lf = l.astype(jnp.float32)
+    combined = jax.lax.switch(
+        jnp.clip(op, 0, 3),
+        [lambda x, y: x + y, jnp.maximum, jnp.minimum, lambda x, y: x * y],
+        pf, lf,
+    )
+    val = jnp.where(
+        reduce, combined,
+        jnp.where(recv, pf, jnp.where(reads, lf, jnp.zeros_like(lf))))
+    out_ref[...] = val.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_primitive_pallas(payload: jnp.ndarray, local: jnp.ndarray,
+                           flags: jnp.ndarray, *,
+                           interpret: bool = True) -> jnp.ndarray:
+    """payload, local: [B, S]; flags: [B, 4] i32 -> value [B, S]."""
+    B, S = payload.shape
+    TS = _tile(S)
+    grid = (B, S // TS)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # Per-row opcode in SMEM: one (1, 4) block per row program.
+            pl.BlockSpec((1, 4), lambda b, s: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, TS), lambda b, s: (b, s)),
+            pl.BlockSpec((1, TS), lambda b, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, TS), lambda b, s: (b, s)),
+        out_shape=jax.ShapeDtypeStruct((B, S), payload.dtype),
+        interpret=interpret,
+    )(flags, payload, local)

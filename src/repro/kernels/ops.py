@@ -1,0 +1,44 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute
+via the Pallas interpreter, which validates the kernel bodies bit-for-bit
+against the ref.py oracles.  ``use_kernels(False)`` falls back to the
+oracles entirely (the scheduler's default fast path on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chunk_combine import chunk_combine_pallas
+from .fused_slice import fused_primitive_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_primitive(payload: jnp.ndarray, local: jnp.ndarray,
+                    op: jnp.ndarray, needs_recv: jnp.ndarray,
+                    does_reduce: jnp.ndarray, reads_in: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Scheduler entry point: single [S] slice, traced flag scalars."""
+    flags = jnp.stack([
+        needs_recv.astype(jnp.int32), does_reduce.astype(jnp.int32),
+        reads_in.astype(jnp.int32), op.astype(jnp.int32),
+    ])[None, :]
+    return fused_primitive_pallas(
+        payload[None, :], local[None, :], flags, interpret=_INTERPRET)[0]
+
+
+def fused_primitive_batch(payload, local, flags):
+    return fused_primitive_pallas(payload, local, flags,
+                                  interpret=_INTERPRET)
+
+
+def chunk_combine(a, b, op: int = 0):
+    return chunk_combine_pallas(a, b, op, interpret=_INTERPRET)
+
+
+# ref aliases, exported for benchmarks and tests
+fused_primitive_ref = ref.fused_primitive_ref
+chunk_combine_ref = ref.chunk_combine_ref

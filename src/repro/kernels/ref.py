@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+These define the semantics; kernels must match them to within dtype
+tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _combine(op: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """op: 0=sum 1=max 2=min 3=prod.  bf16 inputs accumulate in f32."""
+    at = a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a
+    bt = b.astype(jnp.float32) if b.dtype == jnp.bfloat16 else b
+    out = jnp.where(
+        op == 0, at + bt,
+        jnp.where(op == 1, jnp.maximum(at, bt),
+                  jnp.where(op == 2, jnp.minimum(at, bt), at * bt)))
+    return out.astype(a.dtype)
+
+
+def fused_primitive_ref(payload: jnp.ndarray, local: jnp.ndarray,
+                        flags: jnp.ndarray) -> jnp.ndarray:
+    """Fused primitive value (paper Sec. 2.3 actions).
+
+    payload, local: [B, S];  flags: [B, 4] i32 = (recv, reduce, reads_in, op).
+    value = op(payload, local)         if reduce
+          = payload                    elif recv
+          = local                      elif reads_in
+          = 0                          otherwise
+    """
+    recv = flags[:, 0:1] > 0
+    reduce = flags[:, 1:2] > 0
+    reads = flags[:, 2:3] > 0
+    op = flags[:, 3:4]
+    reduced = _combine(op, payload, local)
+    return jnp.where(
+        reduce, reduced,
+        jnp.where(recv, payload,
+                  jnp.where(reads, local, jnp.zeros_like(local))))
+
+
+def chunk_combine_ref(a: jnp.ndarray, b: jnp.ndarray, op: int) -> jnp.ndarray:
+    """Bulk recv-reduce over a whole chunk: elementwise combine of flat
+    arrays with f32 accumulation for bf16 (the ring reduce workhorse)."""
+    return _combine(jnp.int32(op), a, b)

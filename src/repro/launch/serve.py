@@ -1,0 +1,49 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+        --requests 8 --max-new 16
+
+Reduced configs run end-to-end on this host; full configs are validated
+via the decode/prefill dry-run cells (launch/dryrun.py) and deploy with
+the same jitted prefill/serve_step on a real mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    from ..configs import get_config
+    from ..serving.engine import Request, ServingEngine
+
+    cfg = get_config(args.arch).reduced()
+    eng = ServingEngine(cfg, batch_size=args.batch,
+                        prompt_len=args.prompt_len,
+                        max_len=args.prompt_len + args.max_new + 8)
+    rng = np.random.RandomState(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i, prompt=rng.randint(0, cfg.vocab,
+                                      size=rng.randint(4, args.prompt_len)),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    print(f"{args.arch}: {len(done)} requests, "
+          f"{eng.stats['tokens']} tokens in {dt:.2f}s "
+          f"({eng.stats['tokens']/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures + ViT (the paper's model)."""
+from .transformer import Model, build_model
+from .io import input_specs, make_concrete, train_specs, decode_specs
+
+__all__ = ["Model", "build_model", "input_specs", "make_concrete",
+           "train_specs", "decode_specs"]

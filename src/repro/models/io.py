@@ -1,0 +1,106 @@
+"""Input specs and synthetic batches for every (arch x shape-cell).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) — the dry-run lowers from these.
+``make_concrete`` materializes random arrays of the same specs for smoke
+tests and real training on reduced configs.
+
+Modality frontends are STUBS per assignment: ``[audio]`` seamless gets
+precomputed frame embeddings, ``[vlm]``/``[vit]`` get patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeCell
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def train_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    cdt = cfg.compute_dtype
+    if cfg.family == "vit":
+        return {
+            "patches": _sds((B, cfg.vis_tokens, cfg.d_model), cdt),
+            "labels": _sds((B,), jnp.int32),
+        }
+    out = {}
+    text = S
+    if cfg.family == "vlm":
+        text = S - cfg.vis_tokens
+        out["patches"] = _sds((B, cfg.vis_tokens, cfg.d_model), cdt)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), cdt)
+    out["tokens"] = _sds((B, text), jnp.int32)
+    out["targets"] = _sds((B, text), jnp.int32)
+    return out
+
+
+def prefill_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    specs = train_specs(cfg, cell)
+    specs.pop("targets", None)
+    specs.pop("labels", None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Cache ShapeDtypeStructs for a decode cell (cache length = seq_len)."""
+    B, Smax = cell.global_batch, cell.seq_len
+    cdt = cfg.compute_dtype
+    L = cfg.n_layers
+    fam = cfg.family
+    out = {"pos": _sds((), jnp.int32)}
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        kv, dh = cfg.n_kv_heads, cfg.d_head
+        out["k"] = _sds((L, B, Smax, kv, dh), cdt)
+        out["v"] = _sds((L, B, Smax, kv, dh), cdt)
+        if fam == "encdec":
+            out["enc_out"] = _sds((B, cfg.enc_frames, cfg.d_model), cdt)
+    elif fam in ("ssm", "hybrid"):
+        H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        GN = cfg.ssm_groups * N
+        K1 = cfg.ssm_dconv - 1
+        out["state"] = _sds((L, B, H, N, P), jnp.float32)
+        out["conv_x"] = _sds((L, B, K1, cfg.d_inner), cdt)
+        out["conv_B"] = _sds((L, B, K1, GN), cdt)
+        out["conv_C"] = _sds((L, B, K1, GN), cdt)
+        if fam == "hybrid":
+            n_inv = cfg.n_layers // cfg.shared_attn_period
+            kv, dh = cfg.n_kv_heads, cfg.d_head
+            out["shared_k"] = _sds((n_inv, B, Smax, kv, dh), cdt)
+            out["shared_v"] = _sds((n_inv, B, Smax, kv, dh), cdt)
+    else:  # pragma: no cover
+        raise ValueError(fam)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    return {"cache": cache_specs(cfg, cell),
+            "tokens": _sds((cell.global_batch,), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    if cell.kind == "train":
+        return train_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, cell)
+    return decode_specs(cfg, cell)
+
+
+def make_concrete(specs, seed: int = 0, vocab: int = 1 << 30):
+    """Random arrays matching a spec tree (smoke tests / CPU training)."""
+    rng = np.random.RandomState(seed)
+
+    def gen(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = min(vocab, 1 << 15)
+            return jnp.asarray(
+                rng.randint(0, max(hi, 2), size=s.shape), s.dtype)
+        return jnp.asarray(rng.randn(*s.shape) * 0.02, s.dtype)
+
+    return jax.tree_util.tree_map(gen, specs)

@@ -1,0 +1,89 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+import os
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def u_scan(body, carry, xs, length=None):
+    """lax.scan that fully unrolls when REPRO_SCAN_UNROLL=1 (dry-run mode).
+
+    XLA's cost_analysis counts while-loop bodies once, not x trip count;
+    the dry-run unrolls layer/KV-block scans so HLO FLOPs/bytes and
+    per-layer collectives are multiplied correctly.  Training/serving use
+    the rolled scan (small HLO, fast compiles)."""
+    unroll = os.environ.get("REPRO_SCAN_UNROLL") == "1"
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if unroll else 1)
+
+
+def key_for(root: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-parameter RNG key (stable across processes)."""
+    return jax.random.fold_in(root, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def ninit(root, path, shape, scale, dtype):
+    return (jax.random.normal(key_for(root, path), shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def geglu(x, wg, wu, wd):
+    h = jax.nn.gelu(x @ wg, approximate=True) * (x @ wu)
+    return h @ wd
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    return jax.nn.gelu(x @ w1 + b1, approximate=True) @ w2 + b2
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean token CE in f32.  logits [..., V]; targets [...] int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.clip(targets, 0, lf.shape[-1] - 1)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (targets != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,203 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked dual form: within chunks of length Q the recurrence is evaluated
+as masked attention-like matmuls (MXU-friendly); across chunks a small
+scan carries the [H, N, P] state.  Decode is the O(1) recurrent step.
+
+Layout: d_inner = expand * d_model; H = d_inner / headdim heads of dim P;
+B/C have G groups shared by H/G heads (GQA-like); state size N.
+
+Projections are SPLIT (z, x, B, C, dt) rather than fused as in the
+reference CUDA implementation: tensor parallelism shards z/x/dt on heads
+(d_inner) and replicates the small B/C projections — a fused projection
+would cut shard boundaries through the z|x|B|C|dt split points.
+(Hardware adaptation note in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PSpec
+
+from .layers import ninit, rms_norm, u_scan
+
+
+def _hs(x, spec):
+    """Head-sharding constraint for the intra-chunk SSD tensors
+    (REPRO_SSM_SHARD_HEADS=1; no-op without an ambient mesh).  §Perf: the
+    [B,nc,Q,Q,H] decay/score tensors otherwise replicate on the model
+    axis and dominate per-device memory."""
+    if os.environ.get("REPRO_SSM_SHARD_HEADS") != "1":
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init_ssm_block(root, path, cfg, dtype):
+    D, din = cfg.d_model, cfg.d_inner
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    GN = G * N
+    K = cfg.ssm_dconv
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "z_proj": ninit(root, f"{path}/z", (D, din), 0.02, dtype),
+        "x_proj": ninit(root, f"{path}/x", (D, din), 0.02, dtype),
+        "B_proj": ninit(root, f"{path}/B", (D, GN), 0.02, dtype),
+        "C_proj": ninit(root, f"{path}/C", (D, GN), 0.02, dtype),
+        "dt_proj": ninit(root, f"{path}/dt", (D, H), 0.02, dtype),
+        "conv_x_w": ninit(root, f"{path}/cx", (K, din), 0.2, dtype),
+        "conv_x_b": jnp.zeros((din,), dtype),
+        "conv_B_w": ninit(root, f"{path}/cB", (K, GN), 0.2, dtype),
+        "conv_B_b": jnp.zeros((GN,), dtype),
+        "conv_C_w": ninit(root, f"{path}/cC", (K, GN), 0.2, dtype),
+        "conv_C_b": jnp.zeros((GN,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D_skip": jnp.ones((H,), dtype),
+        "dt_bias": jnp.full((H,), np.log(np.e - 1), dtype),
+        "gate_norm": jnp.zeros((din,), dtype),
+        "out_proj": ninit(root, f"{path}/out", (din, D),
+                          0.02 / np.sqrt(2 * cfg.n_layers), dtype),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv1d + silu over [B, S, C] (d_conv taps).
+
+    state: trailing (d_conv - 1) inputs from the previous call (decode).
+    Returns (activated output, new state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(u[:, : K - 1])
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_state = up[:, -(K - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def _project(cfg, params, x):
+    h = rms_norm(x, params["norm"])
+    z = h @ params["z_proj"]
+    xr = h @ params["x_proj"]
+    Br = h @ params["B_proj"]
+    Cr = h @ params["C_proj"]
+    dt = h @ params["dt_proj"]
+    return z, xr, Br, Cr, dt
+
+
+def ssd_forward(cfg, params, x):
+    """Train/prefill path.  x: [B, S, D] -> (x', (ssm_state, conv_states))."""
+    B_, S, D = x.shape
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, "pad sequence to a multiple of ssm_chunk"
+    nc = S // Q
+
+    z, xr, Br, Cr, dt = _project(cfg, params, x)
+    xr, cvx = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"])
+    Br, cvB = _causal_conv(Br, params["conv_B_w"], params["conv_B_b"])
+    Cr, cvC = _causal_conv(Cr, params["conv_C_w"], params["conv_C_b"])
+
+    xin = xr.reshape(B_, S, H, P)
+    Bmat = Br.reshape(B_, S, G, N)
+    Cmat = Cr.reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # [H]
+
+    # chunked SSD — reshape to [B, nc, Q, ...]
+    xc = xin.reshape(B_, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bmat.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    Cc = Cmat.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, nc, Q, H)
+    rep = H // G
+
+    dA = dtc * A                                          # [B,nc,Q,H]
+    cum = jnp.cumsum(dA, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Qq,Qk,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: i<j entries are positive and overflow; masking after
+    # leaks NaN through the backward pass (0 * inf).
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    L = _hs(jnp.exp(seg), PSpec(None, None, None, None, "model"))
+
+    # intra-chunk: y_i += sum_j (C_i . B_j) L_ij dt_j x_j
+    Bh = jnp.repeat(Bc, rep, axis=3)                      # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    cb = _hs(jnp.einsum("bcqhn,bckhn->bcqkh", Ch, Bh),
+             PSpec(None, None, None, None, "model"))
+    w = _hs(cb * L * dtc[:, :, None, :, :],
+            PSpec(None, None, None, None, "model"))
+    y = jnp.einsum("bcqkh,bckhp->bcqhp", w, xc)
+
+    # chunk states: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)          # [B,nc,Q,H]
+    sb = Bh * (dtc * decay_out)[..., None]                # [B,nc,Q,H,N]
+    chunk_state = jnp.einsum("bcqhn,bcqhp->bchnp", sb, xc)
+
+    # inter-chunk scan: state_{c+1} = exp(sum dA_c) state_c + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,nc,H]
+
+    def scan_fn(state, inp):
+        dec, s_c = inp
+        new = state * dec[:, :, None, None] + s_c
+        return new, state  # emit state ENTERING the chunk
+
+    final_state, states_in = u_scan(
+        scan_fn,
+        jnp.zeros((B_, H, N, P), jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)             # [B,nc,H,N,P]
+
+    # inter-chunk contribution: y_i += C_i . (exp(cum_i) * state_in)
+    y = y + jnp.einsum("bcqhn,bchnp->bcqhp",
+                       Ch * jnp.exp(cum)[..., None], states_in)
+
+    y = y.reshape(B_, S, H, P)
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xc.reshape(B_, S, H, P)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rms_norm(y.astype(x.dtype), params["gate_norm"]) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return x + out, (final_state, (cvx, cvB, cvC))
+
+
+def ssd_decode_step(cfg, params, x, state):
+    """O(1) recurrent step.  x: [B, 1, D]; state = (ssm [B,H,N,P] f32,
+    (conv_x, conv_B, conv_C) trailing inputs)."""
+    ssm_state, (cvx, cvB, cvC) = state
+    B_ = x.shape[0]
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+
+    z, xr, Br, Cr, dt = _project(cfg, params, x)
+    xr, cvx = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"], cvx)
+    Br, cvB = _causal_conv(Br, params["conv_B_w"], params["conv_B_b"], cvB)
+    Cr, cvC = _causal_conv(Cr, params["conv_C_w"], params["conv_C_b"], cvC)
+
+    xin = xr.reshape(B_, H, P)
+    Bv = Br.reshape(B_, G, N)
+    Cv = Cr.reshape(B_, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    rep = H // G
+    Bh = jnp.repeat(Bv, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    Ch = jnp.repeat(Cv, rep, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)                               # [B,H]
+    xf = xin.astype(jnp.float32)
+    ssm_state = (ssm_state * decay[:, :, None, None]
+                 + jnp.einsum("bhn,bhp->bhnp", Bh * dt[..., None], xf))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm_state)
+    y = y + params["D_skip"].astype(jnp.float32)[None, :, None] * xf
+    y = y.reshape(B_, 1, cfg.d_inner)
+    y = rms_norm(y.astype(x.dtype), params["gate_norm"]) * jax.nn.silu(z)
+    return x + y @ params["out_proj"], (ssm_state, (cvx, cvB, cvC))

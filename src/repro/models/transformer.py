@@ -1,0 +1,597 @@
+"""Model zoo: decoder LMs (dense / MoE / SSM / hybrid), enc-dec, VLM, ViT.
+
+One functional ``Model`` API per architecture family:
+    init(seed) -> params                        (layer-stacked for lax.scan)
+    loss_fn(params, batch) -> scalar            (train_step payload)
+    prefill(params, batch) -> (last_logits, cache)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Layers are stacked on a leading [L] axis and driven by ``lax.scan`` so HLO
+size (and 1-core compile time for the 512-device dry-run) stays bounded.
+Remat policy per config: full / dots / none.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from .layers import (cross_entropy, geglu, gelu_mlp, key_for, layer_norm,
+                     ninit, rms_norm, rope, swiglu, u_scan)
+
+VOCAB_PAD = 256   # Megatron-style: pad vocab to a multiple of the mesh
+                  # (16 model x 16 data) so embed/lm_head shard evenly.
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def mask_vocab_logits(logits, vocab: int):
+    """-inf the padded tail so it never wins CE/argmax."""
+    if logits.shape[-1] == vocab:
+        return logits
+    keep = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(keep, logits, jnp.float32(-1e30))
+
+
+# ======================================================================
+# blocks
+# ======================================================================
+def init_attn(root, path, cfg: ArchConfig, dtype, d_model=None):
+    D = d_model or cfg.d_model
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "norm": jnp.zeros((D,), dtype),
+        "wq": ninit(root, f"{path}/wq", (D, H * dh), 0.02, dtype),
+        "wk": ninit(root, f"{path}/wk", (D, KV * dh), 0.02, dtype),
+        "wv": ninit(root, f"{path}/wv", (D, KV * dh), 0.02, dtype),
+        "wo": ninit(root, f"{path}/wo", (H * dh, D),
+                    0.02 / np.sqrt(2 * max(cfg.n_layers, 1)), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _qkv(cfg, p, x, kv_x=None, *, positions=None, rope_on=True):
+    B, Sq = x.shape[:2]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = (x @ p["wq"]).reshape(B, Sq, H, dh)
+    k = (kv_x @ p["wk"]).reshape(B, Skv, KV, dh)
+    v = (kv_x @ p["wv"]).reshape(B, Skv, KV, dh)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_on:
+        qpos = positions if positions is not None else jnp.arange(Sq)
+        kpos = jnp.arange(Skv)
+        q = rope(q, jnp.broadcast_to(qpos, (B, Sq)), cfg.rope_theta)
+        k = rope(k, jnp.broadcast_to(kpos, (B, Skv)), cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(cfg, p, x, *, mode="causal", prefix_len=0, kv_x=None,
+               rope_on=True):
+    h = rms_norm(x, p["norm"])
+    # cross-attention: kv_x (encoder memory) is already normalized
+    q, k, v = _qkv(cfg, p, h, kv_x=kv_x, rope_on=rope_on)
+    y = A.full_or_blockwise(q, k, v, mode=mode, window=cfg.swa_window,
+                            prefix_len=prefix_len)
+    B, Sq = x.shape[:2]
+    return x + y.reshape(B, Sq, -1) @ p["wo"]
+
+
+def attn_prefill(cfg, p, x, *, mode="causal", prefix_len=0):
+    """Like attn_train but also returns (k, v) for the cache."""
+    h = rms_norm(x, p["norm"])
+    q, k, v = _qkv(cfg, p, h)
+    y = A.full_or_blockwise(q, k, v, mode=mode, window=cfg.swa_window,
+                            prefix_len=prefix_len)
+    B, Sq = x.shape[:2]
+    return x + y.reshape(B, Sq, -1) @ p["wo"], (k, v)
+
+
+def attn_decode(cfg, p, x, kc, vc, pos, *, rope_on=True):
+    """x: [B,1,D]; kc/vc: [B,Smax,KV,dh]; pos: scalar i32."""
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["norm"])
+    q = (h @ p["wq"]).reshape(B, 1, H, dh)
+    k = (h @ p["wk"]).reshape(B, 1, KV, dh)
+    v = (h @ p["wv"]).reshape(B, 1, KV, dh)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_on:
+        ppos = jnp.broadcast_to(pos, (B, 1))
+        q = rope(q, ppos, cfg.rope_theta)
+        k = rope(k, ppos, cfg.rope_theta)
+    wpos = jnp.minimum(pos, kc.shape[1] - 1)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, wpos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, wpos, 0, 0))
+    y = A.decode_attention(q, kc, vc, pos, window=cfg.swa_window)
+    return x + y.reshape(B, 1, -1) @ p["wo"], kc, vc
+
+
+def init_mlp(root, path, cfg, dtype, kind="swiglu", d_model=None, d_ff=None):
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    if kind == "gelu":   # ViT-style with biases + LayerNorm
+        return {
+            "norm_w": jnp.ones((D,), dtype), "norm_b": jnp.zeros((D,), dtype),
+            "w1": ninit(root, f"{path}/w1", (D, F), 0.02, dtype),
+            "b1": jnp.zeros((F,), dtype),
+            "w2": ninit(root, f"{path}/w2", (F, D),
+                        0.02 / np.sqrt(2 * cfg.n_layers), dtype),
+            "b2": jnp.zeros((D,), dtype),
+        }
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "wg": ninit(root, f"{path}/wg", (D, F), 0.02, dtype),
+        "wu": ninit(root, f"{path}/wu", (D, F), 0.02, dtype),
+        "wd": ninit(root, f"{path}/wd", (F, D),
+                    0.02 / np.sqrt(2 * max(cfg.n_layers, 1)), dtype),
+    }
+
+
+def mlp_apply(p, x, kind="swiglu"):
+    if kind == "gelu":
+        h = layer_norm(x, p["norm_w"], p["norm_b"])
+        return x + gelu_mlp(h, p["w1"], p["b1"], p["w2"], p["b2"])
+    h = rms_norm(x, p["norm"])
+    fn = geglu if kind == "geglu" else swiglu
+    return x + fn(h, p["wg"], p["wu"], p["wd"])
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # full
+
+
+# ======================================================================
+# the Model API
+# ======================================================================
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        root = jax.random.PRNGKey(seed)
+        dt = jnp.dtype(cfg.param_dtype)
+        fam = cfg.family
+        p: dict[str, Any] = {}
+
+        def stack(fn):
+            """Init per-layer params and stack on a leading [L] axis."""
+            leaves = [fn(i) for i in range(cfg.n_layers)]
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *leaves)
+
+        if fam in ("dense", "moe"):
+            p["embed"] = ninit(root, "embed", (padded_vocab(cfg.vocab), cfg.d_model), 0.02, dt)
+            if fam == "dense":
+                p["layers"] = stack(lambda i: {
+                    "attn": init_attn(root, f"l{i}/attn", cfg, dt),
+                    "mlp": init_mlp(root, f"l{i}/mlp", cfg, dt),
+                })
+            else:
+                p["layers"] = stack(lambda i: {
+                    "attn": init_attn(root, f"l{i}/attn", cfg, dt),
+                    "moe": M.init_moe_block(root, f"l{i}/moe", cfg, dt),
+                })
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["lm_head"] = ninit(root, "lm_head",
+                                 (cfg.d_model, padded_vocab(cfg.vocab)),
+                                 0.02, dt)
+        elif fam == "ssm":
+            p["embed"] = ninit(root, "embed", (padded_vocab(cfg.vocab), cfg.d_model), 0.02, dt)
+            p["layers"] = stack(
+                lambda i: S.init_ssm_block(root, f"l{i}", cfg, dt))
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["lm_head"] = ninit(root, "lm_head",
+                                 (cfg.d_model, padded_vocab(cfg.vocab)),
+                                 0.02, dt)
+        elif fam == "hybrid":
+            p["embed"] = ninit(root, "embed", (padded_vocab(cfg.vocab), cfg.d_model), 0.02, dt)
+            p["layers"] = stack(
+                lambda i: S.init_ssm_block(root, f"l{i}", cfg, dt))
+            p["shared"] = {
+                "proj": ninit(root, "shared/proj",
+                              (2 * cfg.d_model, cfg.d_model), 0.02, dt),
+                "attn": init_attn(root, "shared/attn", cfg, dt),
+                "mlp": init_mlp(root, "shared/mlp", cfg, dt),
+            }
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["lm_head"] = ninit(root, "lm_head",
+                                 (cfg.d_model, padded_vocab(cfg.vocab)),
+                                 0.02, dt)
+        elif fam == "encdec":
+            p["enc_layers"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[
+                    {"attn": init_attn(root, f"e{i}/attn", cfg, dt),
+                     "mlp": init_mlp(root, f"e{i}/mlp", cfg, dt)}
+                    for i in range(cfg.enc_layers)])
+            p["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["embed"] = ninit(root, "embed", (padded_vocab(cfg.vocab), cfg.d_model), 0.02, dt)
+            p["layers"] = stack(lambda i: {
+                "attn": init_attn(root, f"d{i}/attn", cfg, dt),
+                "cross": init_attn(root, f"d{i}/cross", cfg, dt),
+                "mlp": init_mlp(root, f"d{i}/mlp", cfg, dt),
+            })
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["lm_head"] = ninit(root, "lm_head",
+                                 (cfg.d_model, padded_vocab(cfg.vocab)),
+                                 0.02, dt)
+        elif fam == "vlm":
+            p["embed"] = ninit(root, "embed", (padded_vocab(cfg.vocab), cfg.d_model), 0.02, dt)
+            p["vis_proj"] = ninit(root, "vis_proj",
+                                  (cfg.d_model, cfg.d_model), 0.02, dt)
+            p["layers"] = stack(lambda i: {
+                "attn": init_attn(root, f"l{i}/attn", cfg, dt),
+                "mlp": init_mlp(root, f"l{i}/mlp", cfg, dt),
+            })
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["lm_head"] = ninit(root, "lm_head",
+                                 (cfg.d_model, padded_vocab(cfg.vocab)),
+                                 0.02, dt)
+        elif fam == "vit":
+            p["pos_embed"] = ninit(root, "pos", (cfg.vis_tokens, cfg.d_model),
+                                   0.02, dt)
+            p["patch_proj"] = ninit(root, "patch_proj",
+                                    (cfg.d_model, cfg.d_model), 0.02, dt)
+            p["layers"] = stack(lambda i: {
+                "attn": init_attn(root, f"l{i}/attn", cfg, dt),
+                "mlp": init_mlp(root, f"l{i}/mlp", cfg, dt, kind="gelu"),
+            })
+            p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            p["head"] = ninit(root, "head", (cfg.d_model, padded_vocab(cfg.vocab)), 0.02, dt)
+        else:  # pragma: no cover
+            raise ValueError(fam)
+        return p
+
+    # ------------------------------------------------------------------
+    # decoder trunk (shared by train / prefill / decode)
+    # ------------------------------------------------------------------
+    def _mlp_kind(self):
+        return "geglu" if self.cfg.family == "vlm" else "swiglu"
+
+    def _trunk_train(self, params, x, *, mode="causal", prefix_len=0,
+                     enc_out=None):
+        cfg = self.cfg
+        fam = cfg.family
+        kind = self._mlp_kind()
+        aux0 = jnp.zeros((), jnp.float32)
+        if fam == "hybrid":
+            return self._hybrid_train(params, x)
+
+        if fam in ("dense", "vlm"):
+            def body(carry, lp):
+                h, aux = carry
+                h = attn_train(cfg, lp["attn"], h, mode=mode,
+                               prefix_len=prefix_len)
+                h = mlp_apply(lp["mlp"], h, kind)
+                return (h, aux), None
+        elif fam == "moe":
+            def body(carry, lp):
+                h, aux = carry
+                h = attn_train(cfg, lp["attn"], h, mode=mode)
+                y, a = M.moe_forward(cfg, lp["moe"], h)
+                return (h + y, aux + a), None
+        elif fam == "ssm":
+            def body(carry, lp):
+                h, aux = carry
+                h, _ = S.ssd_forward(cfg, lp, h)
+                return (h, aux), None
+        elif fam == "encdec":
+            def body(carry, lp):
+                h, aux = carry
+                h = attn_train(cfg, lp["attn"], h, mode="causal")
+                h = attn_train(cfg, lp["cross"], h, mode="bidir",
+                               kv_x=enc_out, rope_on=False)
+                h = mlp_apply(lp["mlp"], h, kind)
+                return (h, aux), None
+        else:
+            raise ValueError(fam)
+
+        body = _remat(body, cfg.remat)
+        (x, aux), _ = u_scan(body, (x, aux0), params["layers"])
+        return x, aux
+
+    def _hybrid_train(self, params, x):
+        cfg = self.cfg
+        x0 = x
+        period = cfg.shared_attn_period
+        shared = params["shared"]
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, inp):
+            h, aux = carry
+            lp, idx = inp
+            h, _ = S.ssd_forward(cfg, lp, h)
+
+            def with_shared(h):
+                z = jnp.concatenate([h, x0], axis=-1) @ shared["proj"]
+                z = attn_train(cfg, shared["attn"], z, mode="causal")
+                z = mlp_apply(shared["mlp"], z, "swiglu")
+                return h + z
+
+            h = jax.lax.cond((idx + 1) % period == 0, with_shared,
+                             lambda h: h, h)
+            return (h, aux), None
+
+        body = _remat(body, cfg.remat)
+        (x, aux), _ = u_scan(
+            body, (x, aux0),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # train loss
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        params = jax.tree_util.tree_map(lambda a: a.astype(cdt), params)
+        fam = cfg.family
+
+        if fam == "vit":
+            x = batch["patches"].astype(cdt) @ params["patch_proj"]
+            x = x + params["pos_embed"][None]
+
+            def body(h, lp):
+                hh = rms_norm(h, lp["attn"]["norm"])
+                q, k, v = _qkv(cfg, lp["attn"], hh, rope_on=False)
+                y = A.attention(q, k, v, mode="bidir")
+                h = h + y.reshape(h.shape[0], h.shape[1], -1) @ lp["attn"]["wo"]
+                h = mlp_apply(lp["mlp"], h, "gelu")
+                return h, None
+
+            x, _ = u_scan(_remat(body, cfg.remat), x, params["layers"])
+            x = rms_norm(x, params["final_norm"]).mean(axis=1)
+            logits = mask_vocab_logits(
+                (x @ params["head"]).astype(jnp.float32), cfg.vocab)
+            onehot = jax.nn.one_hot(batch["labels"], logits.shape[-1])
+            return -jnp.mean(
+                jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1))
+
+        prefix_len = 0
+        mode = "causal"
+        enc_out = None
+        if fam == "encdec":
+            enc = batch["frames"].astype(cdt)
+
+            def ebody(h, lp):
+                h = attn_train(cfg, lp["attn"], h, mode="bidir",
+                               rope_on=True)
+                h = mlp_apply(lp["mlp"], h, "swiglu")
+                return h, None
+
+            enc, _ = u_scan(_remat(ebody, cfg.remat), enc,
+                                  params["enc_layers"])
+            enc_out = rms_norm(enc, params["enc_norm"])
+
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if fam == "vlm":
+            vis = batch["patches"].astype(cdt) @ params["vis_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+            prefix_len = cfg.vis_tokens
+            mode = "prefix"
+
+        x, aux = self._trunk_train(params, x, mode=mode,
+                                   prefix_len=prefix_len, enc_out=enc_out)
+        x = rms_norm(x, params["final_norm"])
+        if fam == "vlm":   # strip image positions from the loss
+            x = x[:, cfg.vis_tokens:]
+        logits = mask_vocab_logits(
+            (x @ params["lm_head"]).astype(jnp.float32), cfg.vocab)
+        loss = cross_entropy(logits, batch["targets"])
+        return loss + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # serving: prefill + decode
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, pad_to: int | None = None):
+        """pad_to: total cache capacity (prompt + expected decode
+        steps); without it the first decode step would have no free slot
+        and would overwrite the last cached position."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        params = jax.tree_util.tree_map(lambda a: a.astype(cdt), params)
+        fam = cfg.family
+
+        enc_out = None
+        if fam == "encdec":
+            enc = batch["frames"].astype(cdt)
+
+            def ebody(h, lp):
+                h = attn_train(cfg, lp["attn"], h, mode="bidir")
+                h = mlp_apply(lp["mlp"], h, "swiglu")
+                return h, None
+
+            enc, _ = u_scan(ebody, enc, params["enc_layers"])
+            enc_out = rms_norm(enc, params["enc_norm"])
+
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        prefix_len, mode = 0, "causal"
+        if fam == "vlm":
+            vis = batch["patches"].astype(cdt) @ params["vis_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+            prefix_len, mode = cfg.vis_tokens, "prefix"
+
+        kind = self._mlp_kind()
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            def body(h, lp):
+                h, (k, v) = attn_prefill(cfg, lp["attn"], h, mode=mode,
+                                         prefix_len=prefix_len)
+                if fam == "encdec":
+                    h = attn_train(cfg, lp["cross"], h, mode="bidir",
+                                   kv_x=enc_out, rope_on=False)
+                if fam == "moe":
+                    y, _ = M.moe_forward(cfg, lp["moe"], h)
+                    h = h + y
+                else:
+                    h = mlp_apply(lp["mlp"], h, kind)
+                return h, (k, v)
+
+            x, (kc, vc) = u_scan(body, x, params["layers"])
+            if pad_to is not None and pad_to > kc.shape[2]:
+                pads = [(0, 0), (0, 0), (0, pad_to - kc.shape[2]),
+                        (0, 0), (0, 0)]
+                kc = jnp.pad(kc, pads)
+                vc = jnp.pad(vc, pads)
+            cache = {"k": kc, "v": vc,
+                     "pos": jnp.asarray(x.shape[1], jnp.int32)}
+            if fam == "encdec":
+                cache["enc_out"] = enc_out
+        elif fam in ("ssm", "hybrid"):
+            def body(h, lp):
+                h, (st, cv) = S.ssd_forward(cfg, lp, h)
+                return h, (st, cv)
+
+            x0 = x
+            if fam == "hybrid":
+                # python-loop prefill for the shared block boundaries
+                states, convs = [], []
+                shared_kv = []
+                shared = params["shared"]
+                for i in range(cfg.n_layers):
+                    lp = jax.tree_util.tree_map(lambda a: a[i],
+                                                params["layers"])
+                    x, (st, cv) = S.ssd_forward(cfg, lp, x)
+                    states.append(st)
+                    convs.append(cv)
+                    if (i + 1) % cfg.shared_attn_period == 0:
+                        z = jnp.concatenate([x, x0], axis=-1) @ shared["proj"]
+                        z, (k, v) = attn_prefill(cfg, shared["attn"], z)
+                        z = mlp_apply(shared["mlp"], z, "swiglu")
+                        x = x + z
+                        shared_kv.append((k, v))
+                cvx, cvB, cvC = (jnp.stack([c[i] for c in convs])
+                                 for i in range(3))
+                sk = jnp.stack([k for k, _ in shared_kv])
+                sv = jnp.stack([v for _, v in shared_kv])
+                if pad_to is not None and pad_to > sk.shape[2]:
+                    pads = [(0, 0), (0, 0), (0, pad_to - sk.shape[2]),
+                            (0, 0), (0, 0)]
+                    sk = jnp.pad(sk, pads)
+                    sv = jnp.pad(sv, pads)
+                cache = {
+                    "state": jnp.stack(states),
+                    "conv_x": cvx, "conv_B": cvB, "conv_C": cvC,
+                    "shared_k": sk,
+                    "shared_v": sv,
+                    "pos": jnp.asarray(x.shape[1], jnp.int32),
+                }
+            else:
+                x, (st, (cvx, cvB, cvC)) = u_scan(
+                    body, x, params["layers"])
+                cache = {"state": st, "conv_x": cvx, "conv_B": cvB,
+                         "conv_C": cvC,
+                         "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = mask_vocab_logits(
+            (x[:, -1:] @ params["lm_head"]).astype(jnp.float32), cfg.vocab)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: [B] int32 — one decode step; returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        params = jax.tree_util.tree_map(lambda a: a.astype(cdt), params)
+        fam = cfg.family
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+
+        kind = self._mlp_kind()
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            def body(h, lp_kv):
+                lp, kc, vc = lp_kv
+                h, kc, vc = attn_decode(cfg, lp["attn"], h, kc, vc, pos)
+                if fam == "encdec":
+                    h = attn_train(cfg, lp["cross"], h, mode="bidir",
+                                   kv_x=cache["enc_out"], rope_on=False)
+                if fam == "moe":
+                    y, _ = M.moe_forward(cfg, lp["moe"], h)
+                    h = h + y
+                else:
+                    h = mlp_apply(lp["mlp"], h, kind)
+                return h, (kc, vc)
+
+            x, (kc, vc) = u_scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kc, v=vc, pos=pos + 1)
+        elif fam == "ssm":
+            def body(h, lp_st):
+                lp, st, cv3 = lp_st
+                h, (st, cv3) = S.ssd_decode_step(cfg, lp, h, (st, cv3))
+                return h, (st, cv3)
+
+            x, (st, (cvx, cvB, cvC)) = u_scan(
+                body, x,
+                (params["layers"], cache["state"],
+                 (cache["conv_x"], cache["conv_B"], cache["conv_C"])))
+            cache = dict(cache, state=st, conv_x=cvx, conv_B=cvB,
+                         conv_C=cvC, pos=pos + 1)
+        elif fam == "hybrid":
+            shared = params["shared"]
+            x0 = x
+            states = cache["state"]
+            convs = (cache["conv_x"], cache["conv_B"], cache["conv_C"])
+            sk, sv = cache["shared_k"], cache["shared_v"]
+            new_states, new_convs = [], []
+            new_sk, new_sv = [], []
+            inv = 0
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                cv3 = tuple(c[i] for c in convs)
+                x, (st, cv3) = S.ssd_decode_step(
+                    cfg, lp, x, (states[i], cv3))
+                new_states.append(st)
+                new_convs.append(cv3)
+                if (i + 1) % cfg.shared_attn_period == 0:
+                    z = jnp.concatenate([x, x0], axis=-1) @ shared["proj"]
+                    z, kc, vc = attn_decode(cfg, shared["attn"], z,
+                                            sk[inv], sv[inv], pos)
+                    z = mlp_apply(shared["mlp"], z, "swiglu")
+                    x = x + z
+                    new_sk.append(kc)
+                    new_sv.append(vc)
+                    inv += 1
+            cvx, cvB, cvC = (jnp.stack([c[i] for c in new_convs])
+                             for i in range(3))
+            cache = dict(cache, state=jnp.stack(new_states),
+                         conv_x=cvx, conv_B=cvB, conv_C=cvC,
+                         shared_k=jnp.stack(new_sk),
+                         shared_v=jnp.stack(new_sv), pos=pos + 1)
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = mask_vocab_logits(
+            (x[:, 0] @ params["lm_head"]).astype(jnp.float32), cfg.vocab)
+        return logits, cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,84 @@
+"""Sharded AdamW with global-norm clipping, warmup-cosine schedule, and
+ZeRO-1 moment partitioning (moments sharded over the "data" axis on top of
+the tensor-parallel param sharding).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+def init_moments(params, moment_dtype: str):
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return (jax.tree_util.tree_map(zeros, params),
+            jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, m, v, step):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, mi, vi):
+        gf = g.astype(jnp.float32) * scale
+        mn = cfg.beta1 * mi.astype(jnp.float32) + (1 - cfg.beta1) * gf
+        vn = cfg.beta2 * vi.astype(jnp.float32) + (1 - cfg.beta2) * gf * gf
+        upd = (mn / bc1) / (jnp.sqrt(vn / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pn = pf - lr * (upd + cfg.weight_decay * pf)
+        return pn.astype(p.dtype), mn.astype(mi.dtype), vn.astype(vi.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_m, new_v, gnorm
+
+
+def zero1_pspecs(param_pspecs, params, data_size: int = 16):
+    """ZeRO-1: additionally shard each moment leaf's first large,
+    still-replicated, divisible dim over the "data" axis."""
+    def z(spec: P, p):
+        dims = list(spec) + [None] * (p.ndim - len(spec))
+        for i, d in enumerate(dims):
+            if d is None and p.shape[i] % data_size == 0 and p.shape[i] >= data_size:
+                dims[i] = "data"
+                return P(*dims)
+        return P(*dims)
+
+    return jax.tree_util.tree_map(z, param_pspecs, params)

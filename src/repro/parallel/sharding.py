@@ -1,0 +1,134 @@
+"""Sharding rules: parameter and activation PartitionSpecs.
+
+Axes of the production mesh (launch/mesh.py):
+    pod   — multi-pod data parallelism (2-way in the 512-chip dry-run)
+    data  — in-pod data parallelism (16-way); also the ZeRO-1 shard axis
+    model — tensor/expert parallelism (16-way)
+
+Parameter rules are name+shape based (Megatron-style):
+    column-parallel (out-dim on "model"): wq wk wv wg wu w1 z_proj x_proj
+        dt_proj shared_wg shared_wu lm_head head vis_proj patch_proj
+    row-parallel (in-dim on "model"):     wo wd w2 out_proj shared_wd
+    vocab-parallel:                       embed (dim 0)
+    expert-parallel (dim E on "model"):   moe wg/wu/wd
+    head-parallel small vectors:          A_log D_skip dt_bias gate_norm
+                                          conv_x_* (SSM d_inner shards)
+    replicated:                           norms, biases, router, B/C proj
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# name -> (rule) where rule picks the sharded dim
+_COL = {"wq", "wk", "wv", "wg", "wu", "w1", "z_proj", "x_proj", "dt_proj",
+        "shared_wg", "shared_wu", "lm_head", "head", "vis_proj",
+        "patch_proj"}
+_ROW = {"wo", "wd", "w2", "out_proj", "shared_wd"}
+_VEC_MODEL = {"A_log", "D_skip", "dt_bias", "gate_norm", "conv_x_w",
+              "conv_x_b"}
+_REPL = {"norm", "norm_w", "norm_b", "q_norm", "k_norm", "b1", "b2",
+         "router", "B_proj", "C_proj", "conv_B_w", "conv_B_b", "conv_C_w",
+         "conv_C_b", "final_norm", "enc_norm", "pos_embed", "proj"}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _spec_for(path: tuple, leaf) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1]
+    in_moe = any(n in ("moe",) for n in names)
+    nd = leaf.ndim
+
+    if name == "embed":
+        return P(*(["model"] + [None] * (nd - 1)))
+    if in_moe and name in ("wg", "wu", "wd"):
+        # [L, E, D, F] or [E, D, F]: shard E (dim -3) over model
+        spec = [None] * nd
+        spec[nd - 3] = "model"
+        return P(*spec)
+    if name in _COL:
+        spec = [None] * nd
+        spec[nd - 1] = "model"
+        return P(*spec)
+    if name in _ROW:
+        spec = [None] * nd
+        spec[nd - 2] = "model"
+        return P(*spec)
+    if name in _VEC_MODEL:
+        spec = [None] * nd
+        spec[nd - 1] = "model"
+        return P(*spec)
+    return P()  # replicated (norms, biases, router, B/C projections)
+
+
+def param_pspecs(params) -> Any:
+    """PartitionSpec pytree matching a parameter pytree."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params)
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params))
+
+
+# ----------------------------------------------------------------------
+# activation / batch specs
+# ----------------------------------------------------------------------
+def batch_pspecs(mesh: Mesh, specs: dict, *, seq_axis_for_cache=True) -> dict:
+    """PartitionSpecs for an input_specs() dict (train/prefill/decode)."""
+    da = data_axes(mesh)
+    out = {}
+    for key, val in specs.items():
+        if key == "cache":
+            out[key] = {k: _cache_spec(mesh, k, v) for k, v in val.items()}
+        else:
+            out[key] = _batch_spec(da, key, val)
+    return out
+
+
+def _batch_spec(da, key, v):
+    if v.ndim == 0 or v.shape[0] == 1:
+        # batch=1 cells (long_500k): parallelism lives in the sequence /
+        # state dims; the batch dim is replicated.
+        return P(*([None] * v.ndim))
+    return P(da, *([None] * (v.ndim - 1)))
+
+
+def _cache_spec(mesh, key, v):
+    """Decode-cache shardings.  Batch over data axes; the long sequence
+    dimension of KV caches over "model" (sequence-parallel cache); SSM
+    states over heads ("model").  batch=1 long-context cells shard the
+    sequence over data+model instead (DESIGN.md Sec. 5)."""
+    da = data_axes(mesh)
+    if v.ndim == 0:
+        return P()
+    if key in ("k", "v", "shared_k", "shared_v"):
+        # [L, B, S, kv, dh]
+        B = v.shape[1]
+        if B == 1:
+            return P(None, None, da + ("model",), None, None)
+        return P(None, da, "model", None, None)
+    if key == "state":        # [L, B, H, N, P]
+        B = v.shape[1]
+        return P(None, None if B == 1 else da, "model", None, None)
+    if key in ("conv_x",):    # [L, B, K-1, d_inner]
+        B = v.shape[1]
+        return P(None, None if B == 1 else da, None, "model")
+    if key in ("conv_B", "conv_C"):
+        B = v.shape[1]
+        return P(None, None if B == 1 else da, None, None)
+    if key == "enc_out":      # [B, Sf, D]
+        return P(da, None, None)
+    return P()
+
+
+def logical_out_shardings(mesh: Mesh, tree_spec) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_spec)

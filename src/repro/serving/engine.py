@@ -1,0 +1,88 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+CPU/testbed-scale engine with the production control flow: requests are
+admitted into fixed batch slots, prefilled (padded to the bucket), then
+decoded step-locked as a batch; finished slots are recycled for waiting
+requests.  The decode step is the same jitted ``serve_step`` the dry-run
+lowers at 32k/500k scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..models import build_model, input_specs, make_concrete
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, *, batch_size: int = 4,
+                 prompt_len: int = 32, max_len: int = 96, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = self.model.init(seed)
+        self.B, self.S, self.max_len = batch_size, prompt_len, max_len
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, pad_to=self.max_len))
+        self._decode = jax.jit(self.model.decode_step)
+        self.queue: list[Request] = []
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _batchify(self, reqs: list[Request]) -> dict:
+        toks = np.zeros((self.B, self.S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.prompt)] = r.prompt[:self.S]
+        batch = {"tokens": jnp.asarray(toks)}
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (self.B, cfg.vis_tokens, cfg.d_model), cfg.compute_dtype)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (self.B, cfg.enc_frames, cfg.d_model), cfg.compute_dtype)
+        return batch
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        finished: list[Request] = []
+        while self.queue:
+            reqs = [self.queue.pop(0) for _ in
+                    range(min(self.B, len(self.queue)))]
+            while len(reqs) < self.B:       # pad the batch
+                reqs.append(Request(rid=-1, prompt=np.zeros(1, np.int32),
+                                    max_new_tokens=0, done=True))
+            batch = self._batchify(reqs)
+            logits, cache = self._prefill(self.params, batch)
+            self.stats["prefills"] += 1
+            toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            steps = max((r.max_new_tokens for r in reqs), default=0)
+            for _ in range(steps):
+                for i, r in enumerate(reqs):
+                    if not r.done:
+                        r.out_tokens.append(int(toks[i]))
+                        if len(r.out_tokens) >= r.max_new_tokens:
+                            r.done = True
+                logits, cache = self._decode(self.params, cache, toks)
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                self.stats["decode_steps"] += 1
+                self.stats["tokens"] += sum(1 for r in reqs if not r.done)
+                if all(r.done for r in reqs):
+                    break
+            finished.extend(r for r in reqs if r.rid >= 0)
+        return finished

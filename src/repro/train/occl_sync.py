@@ -1,0 +1,142 @@
+"""OCCL-based gradient synchronization (the paper's DNN-training use).
+
+Gradients are flattened into size-bounded BUCKETS (paper Sec. 5.3.1: 161
+all-reduces for ResNet50, one per parameter tensor group).  Each bucket is
+registered once as an OCCL all-reduce on the DP communicator; every step
+the ranks submit their buckets **in backward order with rising priority**
+(the Priority-based Ordering policy of Sec. 3.2 — later gradients are
+needed first by the optimizer of the next layer-ordered pass, so they
+overlap with remaining backward compute), and the daemon gang-schedules
+them decentrally.
+
+Ranks here are the simulated DP workers of the sim backend (one device,
+vmapped) — the same scheduler core drives the shard_map mesh backend on a
+real fleet.  The "static" comparator (statically-sequenced NCCL of the
+paper's Sec. 5) is plain jnp summation in a fixed bucket order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CollKind, OcclConfig, OcclRuntime, OrderPolicy
+
+
+@dataclasses.dataclass
+class Bucket:
+    coll_id: int
+    leaf_ids: list[int]
+    sizes: list[int]
+    total: int
+
+
+class OcclGradSync:
+    """compress_wire: bf16 gradient payloads on the connector fabric
+    (half the wire bytes; accumulation stays f32 on-host via the heap
+    dtype) — the gradient-compression option of DESIGN.md §6."""
+
+    def __init__(self, grads_template, n_ranks: int,
+                 bucket_elems: int = 4096, slice_elems: int = 256,
+                 priority_preempts: bool = False,
+                 compress_wire: bool = False):
+        leaves = jax.tree_util.tree_leaves(grads_template)
+        self.treedef = jax.tree_util.tree_structure(grads_template)
+        self.shapes = [l.shape for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.n_ranks = n_ranks
+
+        # --- bucketize leaves in reverse (backward) order ----------------
+        buckets: list[Bucket] = []
+        cur_ids: list[int] = []
+        cur_sizes: list[int] = []
+        cur_total = 0
+        for i in reversed(range(len(leaves))):
+            n = int(np.prod(leaves[i].shape))
+            if cur_total + n > bucket_elems and cur_ids:
+                buckets.append(Bucket(-1, cur_ids, cur_sizes, cur_total))
+                cur_ids, cur_sizes, cur_total = [], [], 0
+            cur_ids.append(i)
+            cur_sizes.append(n)
+            cur_total += n
+        if cur_ids:
+            buckets.append(Bucket(-1, cur_ids, cur_sizes, cur_total))
+        self.buckets = buckets
+
+        heap = sum(2 * b.total + 64 * len(buckets) for b in buckets)
+        self.compress_wire = compress_wire
+        self.occl = OcclRuntime(OcclConfig(
+            n_ranks=n_ranks,
+            max_colls=max(8, len(buckets)),
+            max_comms=1,
+            slice_elems=slice_elems,
+            conn_depth=8,
+            heap_elems=max(1 << 14, 4 * heap),
+            order_policy=OrderPolicy.PRIORITY,
+            priority_preempts=priority_preempts,
+            superstep_budget=1 << 16,
+            dtype="bfloat16" if compress_wire else "float32",
+        ))
+        comm = self.occl.communicator(list(range(n_ranks)))
+        for b in buckets:
+            b.coll_id = self.occl.register(
+                CollKind.ALL_REDUCE, comm, n_elems=b.total)
+
+    # ------------------------------------------------------------------
+    def _pack(self, grads, bucket: Bucket) -> np.ndarray:
+        leaves = jax.tree_util.tree_leaves(grads)
+        parts = [np.asarray(leaves[i], np.float32).ravel()
+                 for i in bucket.leaf_ids]
+        out = np.concatenate(parts)
+        if self.compress_wire:
+            out = np.asarray(jnp.asarray(out, jnp.bfloat16))
+        return out
+
+    def all_reduce(self, per_rank_grads: Sequence) -> list:
+        """Average gradients across ranks via OCCL collectives.
+
+        per_rank_grads: list of grad pytrees (one per DP rank, any
+        submission order is fine — the runtime is deadlock-free)."""
+        assert len(per_rank_grads) == self.n_ranks
+        writes = {}
+        for prio, b in enumerate(self.buckets):
+            for r in range(self.n_ranks):
+                writes[(r, b.coll_id)] = self._pack(per_rank_grads[r], b)
+                self.occl.submit(r, b.coll_id, prio=prio)
+        self.occl.write_inputs_bulk(writes)   # one transfer per step
+        self.occl.drive()
+        reads = self.occl.read_outputs_bulk(
+            [(r, b.coll_id) for r in range(self.n_ranks)
+             for b in self.buckets])
+
+        outs = []
+        for r in range(self.n_ranks):
+            leaves = [None] * len(self.shapes)
+            for b in self.buckets:
+                flat = np.asarray(reads[(r, b.coll_id)],
+                                  np.float32) / self.n_ranks
+                off = 0
+                for i, n in zip(b.leaf_ids, b.sizes):
+                    leaves[i] = jnp.asarray(
+                        flat[off:off + n].reshape(self.shapes[i]),
+                        self.dtypes[i])
+                    off += n
+            outs.append(jax.tree_util.tree_unflatten(self.treedef, leaves))
+        return outs
+
+    def stats(self):
+        return self.occl.stats()
+
+
+def static_all_reduce(per_rank_grads: Sequence) -> list:
+    """The statically-sequenced baseline: fixed-order averaging."""
+    n = len(per_rank_grads)
+    avg = jax.tree_util.tree_map(
+        lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
+        *per_rank_grads)
+    return [jax.tree_util.tree_map(
+        lambda a, t: a.astype(t.dtype), avg, per_rank_grads[0])
+        for _ in range(n)]

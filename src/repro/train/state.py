@@ -1,0 +1,55 @@
+"""Train state pytree + sharding specs."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import build_model
+from ..optim.adamw import init_moments, zero1_pspecs
+from ..parallel.sharding import param_pspecs
+
+
+class TrainState(NamedTuple):
+    params: Any
+    m: Any
+    v: Any
+    step: jnp.ndarray      # [] i32
+
+
+def init_state(cfg: ArchConfig, seed: int = 0) -> TrainState:
+    model = build_model(cfg)
+    params = model.init(seed)
+    m, v = init_moments(params, cfg.moment_dtype)
+    return TrainState(params, m, v, jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ArchConfig) -> TrainState:
+    """ShapeDtypeStruct state (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_state(cfg))
+
+
+def state_pspecs(cfg: ArchConfig, state: TrainState,
+                 data_size: int = 16) -> TrainState:
+    ps = param_pspecs(state.params)
+    if cfg.zero1:
+        mom = zero1_pspecs(ps, state.params, data_size)
+    else:
+        mom = ps
+    return TrainState(params=ps, m=mom, v=mom, step=P())
+
+
+def state_shardings(mesh: Mesh, cfg: ArchConfig,
+                    state: TrainState) -> TrainState:
+    data_size = 1
+    for name, size in zip(mesh.axis_names, mesh.devices.shape):
+        if name == "data":
+            data_size = size
+    specs = state_pspecs(cfg, state, data_size)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

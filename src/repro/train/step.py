@@ -1,0 +1,79 @@
+"""train_step / serve_step builders.
+
+``make_train_step`` returns the canonical data/tensor-parallel training
+step: loss -> grads (DP all-reduce inserted by SPMD) -> clip -> AdamW.
+Gradient synchronization is the OCCL integration point: with
+``grad_sync="xla"`` the reduction is the statically-sequenced XLA psum
+(the paper's "statically sequenced NCCL" baseline); ``grad_sync="occl"``
+routes bucketed gradients through the OCCL runtime between the backward
+and optimizer phases (host-driven, see train/occl_sync.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import build_model
+from ..optim.adamw import AdamWConfig, adamw_update
+from .state import TrainState
+
+
+def make_train_step(cfg: ArchConfig,
+                    opt: AdamWConfig = AdamWConfig()) -> Callable:
+    model = build_model(cfg)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch)
+        new_p, new_m, new_v, gnorm = adamw_update(
+            opt, state.params, grads, state.m, state.v, state.step)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return TrainState(new_p, new_m, new_v, state.step + 1), metrics
+
+    return train_step
+
+
+def make_grads_step(cfg: ArchConfig) -> Callable:
+    """Backward only — used by the OCCL-grad-sync integration, which
+    synchronizes gradient buckets itself (train/occl_sync.py) and then
+    applies make_apply_step."""
+    model = build_model(cfg)
+
+    def grads_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch)
+        return loss.astype(jnp.float32), grads
+
+    return grads_step
+
+
+def make_apply_step(cfg: ArchConfig,
+                    opt: AdamWConfig = AdamWConfig()) -> Callable:
+    def apply_step(state: TrainState, grads) -> TrainState:
+        new_p, new_m, new_v, _ = adamw_update(
+            opt, state.params, grads, state.m, state.v, state.step)
+        return TrainState(new_p, new_m, new_v, state.step + 1)
+
+    return apply_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

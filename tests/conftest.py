@@ -1,0 +1,6 @@
+import os
+import pathlib
+import sys
+
+# Tests see ONE device (the dry-run alone forces 512 in its own process).
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))

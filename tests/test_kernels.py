@@ -1,0 +1,66 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode,
+plus hypothesis property tests on the fused-primitive semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.chunk_combine import chunk_combine_pallas
+from repro.kernels.fused_slice import fused_primitive_pallas
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S", [(1, 8), (1, 64), (3, 512), (2, 1024),
+                                 (4, 96)])
+def test_fused_primitive_sweep(dtype, B, S):
+    rng = np.random.RandomState(B * 1000 + S)
+    p = jnp.asarray(rng.randn(B, S), dtype)
+    l = jnp.asarray(rng.randn(B, S), dtype)
+    f = jnp.asarray(rng.randint(0, 2, (B, 4)), jnp.int32)
+    f = f.at[:, 3].set(jnp.asarray(rng.randint(0, 4, (B,)), jnp.int32))
+    got = fused_primitive_pallas(p, l, f, interpret=True)
+    want = ops.fused_primitive_ref(p, l, f)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T", [8, 1000, 1024, 4096, 5000])
+@pytest.mark.parametrize("op", [0, 1, 2, 3])
+def test_chunk_combine_sweep(dtype, T, op):
+    rng = np.random.RandomState(T + op)
+    a = jnp.asarray(rng.randn(T), dtype)
+    b = jnp.asarray(rng.randn(T), dtype)
+    got = chunk_combine_pallas(a, b, op, interpret=True)
+    want = ops.chunk_combine_ref(a, b, op)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fused_primitive_props(data):
+    """Semantics: reduce==op(payload,local); recv-only==payload;
+    reads-only==local; neither==0."""
+    S = data.draw(st.sampled_from([8, 32, 128]))
+    rng = np.random.RandomState(data.draw(st.integers(0, 999)))
+    p = jnp.asarray(rng.randn(1, S), jnp.float32)
+    l = jnp.asarray(rng.randn(1, S), jnp.float32)
+    recv = data.draw(st.integers(0, 1))
+    red = data.draw(st.integers(0, 1))
+    reads = data.draw(st.integers(0, 1))
+    op = data.draw(st.integers(0, 3))
+    f = jnp.asarray([[recv, red, reads, op]], jnp.int32)
+    got = np.asarray(fused_primitive_pallas(p, l, f, interpret=True))[0]
+    pn, ln = np.asarray(p)[0], np.asarray(l)[0]
+    if red:
+        want = {0: pn + ln, 1: np.maximum(pn, ln),
+                2: np.minimum(pn, ln), 3: pn * ln}[op]
+    elif recv:
+        want = pn
+    elif reads:
+        want = ln
+    else:
+        want = np.zeros(S, np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

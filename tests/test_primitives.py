@@ -1,0 +1,67 @@
+"""Unit tests: primitive programs (paper Sec. 2.3) and slicing invariants."""
+import numpy as np
+import pytest
+
+from repro.core.primitives import (CollKind, Prim, PRIM_RECV, PRIM_SEND,
+                                   build_program, derive_slicing,
+                                   io_chunked, program_len)
+
+
+@pytest.mark.parametrize("kind", list(CollKind))
+@pytest.mark.parametrize("R", [2, 3, 4, 8])
+def test_program_lengths(kind, R):
+    for m in range(R):
+        prog = build_program(kind, m, R)
+        assert len(prog) == program_len(kind, R)
+
+
+@pytest.mark.parametrize("R", [2, 3, 4, 8])
+def test_allreduce_transfer_counts(R):
+    """Ring all-reduce: every rank sends and receives exactly 2(R-1)
+    chunks (the bandwidth-optimality invariant)."""
+    for m in range(R):
+        prog = build_program(CollKind.ALL_REDUCE, m, R)
+        sends = sum(PRIM_SEND[p] for p, _ in prog)
+        recvs = sum(PRIM_RECV[p] for p, _ in prog)
+        assert sends == 2 * (R - 1)
+        assert recvs == 2 * (R - 1)
+
+
+@pytest.mark.parametrize("R", [2, 3, 4, 8])
+def test_allreduce_chunk_coverage(R):
+    """Each rank's copy-steps cover all R chunks exactly once."""
+    from repro.core.primitives import PRIM_COPY
+    for m in range(R):
+        prog = build_program(CollKind.ALL_REDUCE, m, R)
+        copies = sorted(c for p, c in prog if PRIM_COPY[p])
+        assert copies == list(range(R))
+
+
+@pytest.mark.parametrize("R", [2, 4, 8])
+def test_reduce_scatter_final_chunk(R):
+    """Rank m finalizes chunk m (recvReduceCopy last)."""
+    for m in range(R):
+        prog = build_program(CollKind.REDUCE_SCATTER, m, R)
+        prim, chunk = prog[-1]
+        assert prim == Prim.RECV_REDUCE_COPY
+        assert chunk == m
+
+
+@pytest.mark.parametrize("R", [2, 3, 5])
+@pytest.mark.parametrize("root", [0, 1])
+def test_broadcast_roles(R, root):
+    progs = [build_program(CollKind.BROADCAST, m, R, root) for m in range(R)]
+    # root only sends; the last-in-chain rank only receives
+    assert all(p == Prim.COPY_SEND for p, _ in progs[root])
+    last = (root - 1) % R
+    assert all(p == Prim.RECV for p, _ in progs[last])
+
+
+def test_slicing_caps_rounds():
+    """Per-round slices <= conn_depth - 1 (the wedge-freedom invariant)."""
+    for n in [1, 5, 64, 1000, 12345]:
+        for R in [2, 4, 8]:
+            for K in [2, 4, 8]:
+                per, rounds = derive_slicing(n, R, 16, K)
+                assert per <= K - 1
+                assert per * rounds * 16 * R >= n

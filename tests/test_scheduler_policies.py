@@ -1,0 +1,142 @@
+"""Scheduler/stickiness behaviors: two-phase blocking, preemptive priority,
+Fig. 9 observability, voluntary quit + event-driven restart, head-of-line
+resubmission."""
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime, OrderPolicy,
+                        DeadlockTimeout)
+
+
+def test_two_phase_blocking_nonpreemptive_while_runnable():
+    """A runnable current collective is NOT preempted by priority alone
+    (paper Sec. 3.2: priority affects queue order; preemption only fires
+    on spin-threshold overrun)."""
+    cfg = OcclConfig(n_ranks=2, max_colls=4, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=1 << 13,
+                     order_policy=OrderPolicy.PRIORITY)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    lo = rt.register(CollKind.ALL_REDUCE, cm, n_elems=128)
+    hi = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    order = []
+    for r in range(2):
+        rt.submit(r, lo, prio=0, data=np.ones(128, np.float32),
+                  callback=lambda rk, c: order.append("lo"))
+        rt.submit(r, hi, prio=5, data=np.ones(8, np.float32),
+                  callback=lambda rk, c: order.append("hi"))
+    rt.drive()
+    assert order[0] == "lo"          # lo kept running (never stuck)
+
+
+def test_priority_preempts_flag():
+    cfg = OcclConfig(n_ranks=2, max_colls=4, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=1 << 13,
+                     order_policy=OrderPolicy.PRIORITY,
+                     priority_preempts=True)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    lo = rt.register(CollKind.ALL_REDUCE, cm, n_elems=128)
+    hi = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    order = []
+    for r in range(2):
+        rt.submit(r, lo, prio=0, data=np.ones(128, np.float32),
+                  callback=lambda rk, c: order.append("lo"))
+        rt.submit(r, hi, prio=5, data=np.ones(8, np.float32),
+                  callback=lambda rk, c: order.append("hi"))
+    rt.drive()
+    assert order[0] == "hi"          # hi overtook mid-flight
+    assert rt.stats()["preempts"].sum() > 0
+    np.testing.assert_allclose(rt.read_output(0, lo), 2 * np.ones(128),
+                               rtol=1e-5)
+
+
+def test_voluntary_quit_and_event_driven_restart():
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=512, quit_threshold=8)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    ar = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    rt.submit(0, ar, data=np.ones(8, np.float32))
+    assert rt.launch_once() == 0           # peer missing -> voluntary quit
+    st = rt.stats()
+    assert int(st["supersteps"].max()) < cfg.superstep_budget  # quit early
+    rt.submit(1, ar, data=np.ones(8, np.float32))
+    rt.drive()                              # restart completes it
+    np.testing.assert_allclose(rt.read_output(1, ar), 2 * np.ones(8),
+                               rtol=1e-5)
+    assert rt.launches >= 2
+
+
+def test_orphan_collective_times_out():
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=512, quit_threshold=8,
+                     superstep_budget=256)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    ar = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    rt.submit(0, ar, data=np.ones(8, np.float32))
+    with pytest.raises(DeadlockTimeout):
+        rt.drive(max_launches=3)
+
+
+def test_repeat_submission_same_collective():
+    """Head-of-line: resubmitting an in-flight collective waits, then runs
+    with fresh buffers (iteration loop, monotonic connector counters)."""
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=512)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    ar = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    for it in range(3):
+        for r in range(2):
+            rt.submit(r, ar, data=(it + 1) * np.ones(8, np.float32))
+        rt.drive()
+        np.testing.assert_allclose(
+            rt.read_output(0, ar), 2 * (it + 1) * np.ones(8), rtol=1e-5)
+    assert int(rt.stats()["completed"].max()) == 3
+
+
+def test_fig9_observability():
+    """Per-collective context-switch counts and queue lengths at fetch
+    (the paper's Fig. 9 instrumentation) are exposed."""
+    cfg = OcclConfig(n_ranks=4, max_colls=8, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=1 << 13)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator(list(range(4)))
+    ids = [rt.register(CollKind.ALL_REDUCE, cm, n_elems=16)
+           for _ in range(4)]
+    rng = np.random.RandomState(0)
+    for r in range(4):
+        order = rng.permutation(4)
+        for i in order:
+            rt.submit(r, ids[i], data=np.ones(16, np.float32))
+    rt.drive()
+    st = rt.stats()
+    assert st["preempts"].shape == (4, 8)
+    assert st["qlen_at_fetch"].max() >= 1
+    assert st["slices_moved"].sum() > 0
+
+
+def test_stickiness_reduces_context_switches():
+    """Fig. 9 ablation: with the stickiness scheme ON, adversarial-order
+    workloads context-switch no more than with it OFF."""
+    def run(stick):
+        cfg = OcclConfig(n_ranks=4, max_colls=8, max_comms=1,
+                         slice_elems=4, conn_depth=2, heap_elems=1 << 14,
+                         stickiness=stick)
+        rt = OcclRuntime(cfg)
+        cm = rt.communicator(list(range(4)))
+        ids = [rt.register(CollKind.ALL_REDUCE, cm, n_elems=64)
+               for _ in range(6)]
+        rng = np.random.RandomState(7)
+        for r in range(4):
+            for i in rng.permutation(6):
+                rt.submit(r, ids[i], data=np.ones(64, np.float32))
+        rt.drive()
+        st = rt.stats()
+        return int(st["preempts"].sum()), int(st["supersteps"].max())
+
+    sw_on, steps_on = run(True)
+    sw_off, steps_off = run(False)
+    assert sw_on <= sw_off + 2            # not worse (usually far better)

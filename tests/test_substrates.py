@@ -1,0 +1,156 @@
+"""Substrate tests: data pipeline, checkpointing, fault tolerance,
+optimizer, straggler detector."""
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step, restore,
+                                   save)
+from repro.data.pipeline import SyntheticPipeline
+from repro.fabric.ft import FTConfig, TrainController
+from repro.fabric.straggler import StragglerDetector
+from repro.optim.adamw import AdamWConfig, adamw_update, init_moments, schedule
+from repro.train.state import init_state
+from repro.train.step import make_train_step
+
+CELL = ShapeCell("t", 32, 4, "train")
+CFG = get_config("qwen3-0.6b").reduced()
+
+
+# ---------------------------------------------------------------- data
+def test_pipeline_deterministic_and_elastic():
+    p2 = [SyntheticPipeline(CFG, CELL, shard_id=i, n_shards=2)
+          for i in range(2)]
+    p4 = [SyntheticPipeline(CFG, CELL, shard_id=i, n_shards=4)
+          for i in range(4)]
+    b2 = [p.batch_at(7) for p in p2]
+    b4 = [p.batch_at(7) for p in p4]
+    g2 = np.concatenate([b["tokens"] for b in b2])
+    g4 = np.concatenate([b["tokens"] for b in b4])
+    np.testing.assert_array_equal(g2, g4)   # shard count never changes data
+
+
+def test_pipeline_prefetch_and_cursor():
+    p = SyntheticPipeline(CFG, CELL).start()
+    b0, b1 = next(p), next(p)
+    sd = p.state_dict()
+    b2 = next(p)
+    p.load_state_dict(sd)
+    b2b = next(p)
+    p.stop()
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        state = init_state(CFG)
+        for s in (0, 10, 20, 30):
+            save(d, s, state, extras={"x": s}, keep=2)
+        assert latest_step(d) == 30
+        kept = sorted(p.name for p in pathlib.Path(d).glob("step_*"))
+        assert kept == ["step_20", "step_30"]
+        got, extras = restore(d, 30, state)
+        assert extras["x"] == 30
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_corruption_detected():
+    with tempfile.TemporaryDirectory() as d:
+        state = init_state(CFG)
+        path = save(d, 0, state)
+        victim = next(path.glob("*.npy"))
+        arr = np.load(victim)
+        arr = np.asarray(arr).copy()
+        arr.reshape(-1)[0] += 1.0
+        np.save(victim, arr)
+        with pytest.raises(IOError):
+            restore(d, 0, state)
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        state = init_state(CFG)
+        ck.save_async(5, state)
+        ck.wait()
+        assert latest_step(d) == 5
+
+
+# ------------------------------------------------------ fault tolerance
+def test_controller_recovers_from_injected_failure():
+    with tempfile.TemporaryDirectory() as d:
+        state = init_state(CFG)
+        pipe = SyntheticPipeline(CFG, CELL)
+        step_fn = jax.jit(make_train_step(CFG, AdamWConfig(lr=1e-3)))
+        ctrl = TrainController(
+            FTConfig(ckpt_dir=d, ckpt_period=4, max_restarts=2),
+            step_fn, state, pipe, inject_failure_at=6)
+        logs = ctrl.run(10)
+        assert ctrl.restarts == 1
+        assert int(ctrl.state.step) == 10
+        steps = [m["step"] for m in logs]
+        assert steps.count(5) >= 1 and steps.count(4) >= 2  # replayed 4,5
+        # losses replayed from the checkpoint are bitwise identical
+        by_step = {}
+        replays = 0
+        for m in logs:
+            if m["step"] in by_step:
+                assert m["loss"] == by_step[m["step"]]
+                replays += 1
+            by_step[m["step"]] = m["loss"]
+        assert replays >= 1
+
+
+def test_training_loss_decreases():
+    state = init_state(CFG)
+    pipe = SyntheticPipeline(CFG, ShapeCell("t", 32, 4, "train"))
+    # overfit a SINGLE repeated batch: loss must drop
+    batch = pipe.batch_at(0)
+    step_fn = jax.jit(make_train_step(CFG, AdamWConfig(
+        lr=3e-3, warmup_steps=5, total_steps=100)))
+    first = None
+    for i in range(30):
+        state, metrics = step_fn(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    last = float(metrics["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+# ----------------------------------------------------------- optimizer
+def test_adamw_matches_reference_step():
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(4, 4), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.randn(4, 4), jnp.float32)}
+    m, v = init_moments(params, "float32")
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0, clip_norm=1e9)
+    p2, m2, v2, gn = adamw_update(cfg, params, grads, m, v,
+                                  jnp.zeros((), jnp.int32))
+    g = np.asarray(grads["w"])
+    mm = 0.1 * g
+    vv = 0.05 * g * g
+    upd = (mm / (1 - 0.9)) / (np.sqrt(vv / (1 - 0.95)) + 1e-8)
+    lr = float(schedule(cfg, jnp.zeros((), jnp.int32)))
+    want = np.asarray(params["w"]) - lr * upd
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+
+
+# ------------------------------------------------------------ straggler
+def test_straggler_detector():
+    d = StragglerDetector(n_ranks=4)
+    for t in range(10):
+        for r in range(4):
+            d.observe(r, 1.0 if r != 2 else 5.0)
+    assert d.stragglers() == [2]
+    assert d.healthy_ranks() == [0, 1, 3]
