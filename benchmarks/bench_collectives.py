@@ -1,5 +1,8 @@
 """Paper Fig. 6/7: latency & algorithm bandwidth of the 5 collectives,
-OCCL vs the statically-sequenced baseline.
+OCCL vs the statically-sequenced baseline — plus the slice-burst sweep
+(``run_burst_sweep``) that records supersteps/sec, slices/sec and
+per-collective latency for burst_slices in {1, 4, 8} into
+BENCH_collectives.json (the repo's perf trajectory record).
 
 Two metrics per (collective, size):
   * wall-clock per iteration on this host (CPU; both systems pay XLA
@@ -12,12 +15,20 @@ The static baseline is the same ring algorithm executed in a consistent
 global order with no scheduling layer (direct jnp reduction) — the
 "statically sequenced NCCL" of Sec. 5.
 """
+import json
+import pathlib
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from common import row, timeit
 from repro.core import CollKind, OcclConfig, OcclRuntime
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_collectives.json"
+BURST_SLICE_ELEMS = 64      # slice width used by the burst sweep configs
 
 KINDS = {
     "all_reduce": CollKind.ALL_REDUCE,
@@ -98,5 +109,101 @@ def run(sizes=(64, 1024, 16384, 262144), R=8, iters=3):
     return results
 
 
+def _bench_one_kind(kind: CollKind, burst: int, n: int, R: int,
+                    conn_depth: int, iters: int) -> dict:
+    """Latency/throughput of one collective at one burst width.
+
+    Inputs are pre-written to the heap so the measurement is the daemon
+    superstep loop (the optimized hot path), not host-side data staging.
+    ``conn_depth`` must cover the burst bandwidth-delay product (~3B for
+    the 3-superstep credit round trip) or the ring settles into the
+    1-slice/step credit-return equilibrium — see scheduler.py.
+    """
+    cfg = OcclConfig(n_ranks=R, max_colls=2, max_comms=1,
+                     slice_elems=BURST_SLICE_ELEMS,
+                     conn_depth=conn_depth, burst_slices=burst,
+                     heap_elems=1 << 18, superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    cid = rt.register(kind, comm, n_elems=n)
+    rng = np.random.RandomState(0)
+    for r in range(R):
+        if kind == CollKind.ALL_GATHER:
+            data = rng.randn(-(-n // R)).astype(np.float32)
+        else:
+            data = rng.randn(n).astype(np.float32)
+        if kind == CollKind.BROADCAST and r != 0:
+            continue
+        rt.write_input(r, cid, data)
+
+    def once():
+        for r in range(R):
+            rt.submit(r, cid)
+        rt.drive()
+
+    once()                                   # warmup: compile + converge
+    s0 = rt.stats()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        once()
+    dt = (time.perf_counter() - t0) / iters
+    s1 = rt.stats()
+    slices = (int(s1["slices_moved"].sum())
+              - int(s0["slices_moved"].sum())) / iters
+    steps = (int(s1["supersteps"].max())
+             - int(s0["supersteps"].max())) / iters
+    return {
+        "latency_s": dt,
+        "supersteps": steps,
+        "slices": slices,
+        "supersteps_per_sec": steps / dt,
+        "slices_per_sec": slices / dt,
+    }
+
+
+def run_burst_sweep(bursts=(1, 4, 8), n=65536, R=8, conn_depth=32,
+                    iters=3, out_path=BENCH_JSON) -> dict:
+    """The PR's perf record: the 5 collectives at each burst width,
+    written to BENCH_collectives.json so future PRs can see regressions."""
+    record = {
+        "config": {"n_ranks": R, "n_elems": n,
+                   "slice_elems": BURST_SLICE_ELEMS,
+                   "conn_depth": conn_depth, "iters": iters,
+                   "backend": "sim"},
+        "bursts": {},
+    }
+    for burst in bursts:
+        per_kind = {}
+        for name, kind in KINDS.items():
+            per_kind[name] = _bench_one_kind(
+                kind, burst, n, R, conn_depth, iters)
+            row(f"collectives/burst{burst}_{name}",
+                per_kind[name]["latency_s"] * 1e6,
+                f"slices_per_sec={per_kind[name]['slices_per_sec']:.0f};"
+                f"supersteps_per_sec="
+                f"{per_kind[name]['supersteps_per_sec']:.0f}")
+        total_t = sum(k["latency_s"] for k in per_kind.values())
+        total_slices = sum(k["slices"] for k in per_kind.values())
+        total_steps = sum(k["supersteps"] for k in per_kind.values())
+        record["bursts"][str(burst)] = {
+            "per_collective": per_kind,
+            "total": {
+                "latency_s": total_t,
+                "slices_per_sec": total_slices / total_t,
+                "supersteps_per_sec": total_steps / total_t,
+            },
+        }
+    b = record["bursts"]
+    if "1" in b:
+        base = b["1"]["total"]["slices_per_sec"]
+        record["speedup_slices_per_sec_vs_burst1"] = {
+            k: v["total"]["slices_per_sec"] / base for k, v in b.items()
+        }
+    out_path.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {out_path}")
+    return record
+
+
 if __name__ == "__main__":
     run()
+    run_burst_sweep()

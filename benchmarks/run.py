@@ -18,6 +18,10 @@ def main() -> None:
     bench_overheads.run(sizes=(64, 1024, 4096))
     import bench_collectives
     bench_collectives.run(sizes=(64, 4096), iters=2)
+    # Machine-readable perf trajectory: supersteps/sec, slices/sec and
+    # per-collective latency at burst_slices in {1, 4, 8}, written to
+    # BENCH_collectives.json at the repo root.
+    bench_collectives.run_burst_sweep(iters=2)
     import bench_deadlock
     bench_deadlock.run(iters=2)
     import bench_gang

@@ -37,6 +37,15 @@ class OcclConfig:
     max_comms: int = 4              # communicator lanes (L); CUDA-block analogue
     slice_elems: int = 64           # elements per slice (preemption granule)
     conn_depth: int = 4             # ring-buffer slots per connector (K)
+    burst_slices: int = 1           # max slices one lane moves per superstep
+                                    # (B); the burst is credit-gated so the
+                                    # deadlock-freedom capacity argument of
+                                    # derive_slicing is unchanged, and a
+                                    # collective stays preemptible between
+                                    # bursts (slice granularity).  For
+                                    # sustained B-slice throughput size
+                                    # conn_depth >= ~3B (credit round trip;
+                                    # see scheduler.py docstring)
     heap_elems: int = 1 << 16       # per-rank data heap (send/recv buffers)
 
     # --- SQ / CQ --------------------------------------------------------
@@ -78,4 +87,5 @@ class OcclConfig:
         assert self.max_comms >= 1
         assert self.conn_depth >= 1
         assert self.slice_elems >= 1
+        assert self.burst_slices >= 1
         assert self.spin_base >= self.spin_min

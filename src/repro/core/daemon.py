@@ -34,7 +34,6 @@ from .scheduler import (
     LocalTables,
     Mailbox,
     SharedTables,
-    empty_mailbox,
     rank_superstep,
 )
 from .state import DaemonState
@@ -70,38 +69,75 @@ def _sim_exchange(fwd_src, rev_src, outbox: Mailbox) -> Mailbox:
     """Deliver per-lane messages along each communicator ring (sim backend).
 
     ``outbox`` fields have shape [R, L, ...]; the message arriving at rank
-    r on lane l was sent by ``fwd_src[l, r]`` (resp. ``rev_src``).
+    r on lane l was sent by ``fwd_src[l, r]`` (resp. ``rev_src``).  One
+    batched gather over the (rank, lane) grid per field — no Python lane
+    loop in the compiled superstep.
     """
+    L = fwd_src.shape[0]
+    lanes = jnp.arange(L)
+
     def pick(field, src):  # field: [R, L, ...] -> gathered [R, L, ...]
-        lanes = []
-        for lane in range(src.shape[0]):
-            lanes.append(field[src[lane], lane])
-        return jnp.stack(lanes, axis=1)
+        return field[src.T, lanes[None, :]]
 
     return Mailbox(
-        fwd_valid=pick(outbox.fwd_valid, fwd_src),
+        fwd_count=pick(outbox.fwd_count, fwd_src),
         fwd_coll=pick(outbox.fwd_coll, fwd_src),
         fwd_payload=pick(outbox.fwd_payload, fwd_src),
-        rev_valid=pick(outbox.rev_valid, rev_src),
+        rev_count=pick(outbox.rev_count, rev_src),
         rev_coll=pick(outbox.rev_coll, rev_src),
     )
 
 
 def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
-    """Deliver messages with one ppermute pair per lane (mesh backend)."""
-    def permute(field, pairs_per_lane):
-        lanes = []
-        for lane, pairs in enumerate(pairs_per_lane):
-            lanes.append(
-                jax.lax.ppermute(field[lane], axis_name, perm=pairs))
-        return jnp.stack(lanes, axis=0)
+    """Deliver messages over the device fabric (mesh backend).
+
+    Lanes whose communicators share a ring permutation are FUSED: their
+    stacked traffic rides one ppermute pair per direction — the forward
+    direction packs (coll, count) headers and the [B, SL] payload burst of
+    every fused lane into a single i32 buffer (exact bitcast for 32-bit
+    heap dtypes), the reverse direction is one i32 credit-header ppermute.
+    With one communicator ring (the common case) the whole superstep costs
+    exactly two ppermutes, vs five per lane in the unfused scheme.
+    """
+    L, B, SL = outbox.fwd_payload.shape
+    dt = outbox.fwd_payload.dtype
+    fuse_payload = dt.itemsize == 4
+
+    fwd_count = jnp.zeros_like(outbox.fwd_count)
+    fwd_coll = jnp.zeros_like(outbox.fwd_coll)
+    fwd_payload = jnp.zeros_like(outbox.fwd_payload)
+    rev_count = jnp.zeros_like(outbox.rev_count)
+    rev_coll = jnp.zeros_like(outbox.rev_coll)
+
+    for group_lanes, fwd_pairs, rev_pairs in t.lane_groups:
+        g = jnp.asarray(group_lanes)
+        hdr = jnp.stack([outbox.fwd_coll[g], outbox.fwd_count[g]], axis=1)
+        pay = outbox.fwd_payload[g].reshape(len(group_lanes), B * SL)
+        if fuse_payload:
+            # Single fwd ppermute: header ++ bitcast payload, all lanes.
+            packed = jnp.concatenate(
+                [hdr, jax.lax.bitcast_convert_type(pay, jnp.int32)
+                 if dt != jnp.int32 else pay], axis=1)
+            moved = jax.lax.ppermute(packed, axis_name, perm=fwd_pairs)
+            got_hdr, got_pay = moved[:, :2], moved[:, 2:]
+            if dt != jnp.int32:
+                got_pay = jax.lax.bitcast_convert_type(got_pay, dt)
+        else:
+            got_hdr = jax.lax.ppermute(hdr, axis_name, perm=fwd_pairs)
+            got_pay = jax.lax.ppermute(pay, axis_name, perm=fwd_pairs)
+        fwd_coll = fwd_coll.at[g].set(got_hdr[:, 0])
+        fwd_count = fwd_count.at[g].set(got_hdr[:, 1])
+        fwd_payload = fwd_payload.at[g].set(
+            got_pay.astype(dt).reshape(len(group_lanes), B, SL))
+
+        rhdr = jnp.stack([outbox.rev_coll[g], outbox.rev_count[g]], axis=1)
+        rgot = jax.lax.ppermute(rhdr, axis_name, perm=rev_pairs)
+        rev_coll = rev_coll.at[g].set(rgot[:, 0])
+        rev_count = rev_count.at[g].set(rgot[:, 1])
 
     return Mailbox(
-        fwd_valid=permute(outbox.fwd_valid, t.fwd_perm_pairs),
-        fwd_coll=permute(outbox.fwd_coll, t.fwd_perm_pairs),
-        fwd_payload=permute(outbox.fwd_payload, t.fwd_perm_pairs),
-        rev_valid=permute(outbox.rev_valid, t.rev_perm_pairs),
-        rev_coll=permute(outbox.rev_coll, t.rev_perm_pairs),
+        fwd_count=fwd_count, fwd_coll=fwd_coll, fwd_payload=fwd_payload,
+        rev_count=rev_count, rev_coll=rev_coll,
     )
 
 
@@ -160,16 +196,16 @@ def _sim_daemon_jit(cfg: OcclConfig) -> Callable:
 def _load_mailbox(st: DaemonState) -> Mailbox:
     """Re-inject messages that were on the wire at the last daemon exit."""
     return Mailbox(
-        fwd_valid=st.mb_fwd_valid, fwd_coll=st.mb_fwd_coll,
+        fwd_count=st.mb_fwd_count, fwd_coll=st.mb_fwd_coll,
         fwd_payload=st.mb_fwd_payload,
-        rev_valid=st.mb_rev_valid, rev_coll=st.mb_rev_coll)
+        rev_count=st.mb_rev_count, rev_coll=st.mb_rev_coll)
 
 
 def _store_mailbox(st: DaemonState, inbox: Mailbox) -> DaemonState:
     return st._replace(
-        mb_fwd_valid=inbox.fwd_valid, mb_fwd_coll=inbox.fwd_coll,
+        mb_fwd_count=inbox.fwd_count, mb_fwd_coll=inbox.fwd_coll,
         mb_fwd_payload=inbox.fwd_payload,
-        mb_rev_valid=inbox.rev_valid, mb_rev_coll=inbox.rev_coll)
+        mb_rev_count=inbox.rev_count, mb_rev_coll=inbox.rev_coll)
 
 
 def build_sim_daemon(cfg: OcclConfig, t: StaticTables) -> Callable:

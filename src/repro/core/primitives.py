@@ -17,6 +17,7 @@ import dataclasses
 import enum
 from typing import Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -219,6 +220,26 @@ class CollectiveSpec:
 
 
 ReduceOpLike = int
+
+
+def burst_quota(burst, room, recv_avail, send_free, needs_recv, needs_send):
+    """Slices a lane may move this superstep (credit-aware gating math).
+
+    Element-wise over lanes: the burst is bounded by the configured width
+    ``burst``, the slices left in the current primitive step ``room`` (a
+    burst never crosses a step boundary, so preemption granularity stays
+    one slice between bursts), the committed-but-unconsumed writes in the
+    recv connector (``recv_avail = head_mirror - tail``) when the primitive
+    receives, and the free connector slots (``send_free = K - (head -
+    tail_mirror)``) when it sends.  Both mirrors lag the peer's true
+    counter, so the quota is conservative: per-slice credit accounting is
+    unchanged and the ``sum(sent - consumed) <= R * (K - 1)`` ring-capacity
+    invariant of :func:`derive_slicing` survives bursts unweakened.
+    """
+    q = jnp.minimum(jnp.asarray(burst, jnp.int32), room)
+    q = jnp.minimum(q, jnp.where(needs_recv, recv_avail, q))
+    q = jnp.minimum(q, jnp.where(needs_send, send_free, q))
+    return jnp.maximum(q, 0)
 
 
 def derive_slicing(n_elems: int, group_size: int, slice_elems: int,

@@ -267,5 +267,8 @@ class OcclRuntime:
             "completed": np.asarray(st.completed),
             "supersteps": np.asarray(st.supersteps),
             "slices_moved": np.asarray(st.slices_moved),
+            "cq_count": np.asarray(st.cq_count),          # [R] — may exceed
+                                                          # cq_len (ring CQ)
+            "burst_slices": self.cfg.burst_slices,
             "launches": self.launches,
         }

@@ -1,12 +1,49 @@
 """Per-rank daemon superstep: the core of the DFCE-framework (paper Sec. 3.1).
 
 One superstep, per rank:
-  A. apply arriving connector messages (slice commits + credits);
+  A. apply arriving connector messages (slice-burst commits + credit counts);
   B. maybe fetch one SQE (order policy controls eagerness, Sec. 3.2);
-  C. per lane: select the current collective (two-phase blocking), gate one
-     slice move of its current primitive on connector state, execute or
-     spin/preempt (spin thresholds + stickiness, Sec. 3.2);
+  C. all lanes at once: select each lane's current collective (two-phase
+     blocking), gate a *burst* of up to ``cfg.burst_slices`` slice moves of
+     its current primitive on connector credit, execute or spin/preempt
+     (spin thresholds + stickiness, Sec. 3.2);
   D. bookkeeping for voluntary quit (Sec. 3.1.3).
+
+Vectorized/burst execution (perf tentpole)
+------------------------------------------
+Phase C is *batched across lanes*: selection, gating and context advance are
+[L, ...] array ops instead of a sequential Python loop of per-lane steps.
+This is semantically faithful because eligibility is lane-partitioned
+(``shared.lane[c] == lane``), so concurrent lanes never touch the same
+collective's counters; the only shared sinks — the output heap, the CQ ring
+and the scalar work counters — are combined with masked scatters
+(``mode='drop'``) and cumulative-sum slot assignment.  The per-superstep
+cost drops from L serialized full-heap ``dynamic_update_slice`` +
+``lax.select`` copies (O(L * H)) to one [L, B * SLICE] windowed scatter, and
+the O(C^2) queue-position comparison matrix is replaced by one batched
+stable double-argsort shared by all lanes (O(L * C log C)).
+
+A *burst* moves up to B contiguous slices of the lane's current primitive in
+one superstep, where B = ``cfg.burst_slices``.  The burst is gated by
+:func:`repro.core.primitives.burst_quota`: it never crosses a primitive-step
+boundary and never exceeds the connector credit visible in the lagging
+``head/tail`` mirrors, which now admit *counts* rather than booleans.  Why
+deadlock freedom survives bursts: every slice of a burst is individually
+credit-accounted, so the ring-capacity invariant from ``derive_slicing`` —
+``sum(sent - consumed) <= R * (K - 1)`` around any communicator ring — still
+guarantees an edge with both data and capacity; and a collective remains
+preemptible *between* bursts (spin thresholds are evaluated every superstep,
+B only bounds the atomic quantum, which is itself bounded by the per-round
+slice cap K - 1).  With B = 1 the schedule is exactly the seed single-slice
+semantics.
+
+Sizing note: sustained burst throughput needs the connector depth to cover
+the burst bandwidth-delay product — credits complete a ~3-superstep round
+trip (commit, consume, credit-return), so K should be >= ~3B.  With a
+shallower connector the ring saturates (in-flight == K) and relaxes into
+the 1-slice/superstep credit-return equilibrium: still correct and
+deadlock-free, just no faster than B = 1 (benchmarks/bench_collectives.py
+uses conn_depth=32 for the B in {1, 4, 8} sweep).
 
 Everything is branch-free fixed-shape array code so the loop compiles into
 a single long-running XLA program — the daemon-kernel analogue.
@@ -60,94 +97,100 @@ class LocalTables(NamedTuple):
 
 
 class Mailbox(NamedTuple):
-    """Per-lane connector traffic for one superstep (fwd data + rev credit)."""
+    """Per-lane connector traffic for one superstep (fwd burst + rev credit).
 
-    fwd_valid: jnp.ndarray    # [L] bool
+    ``fwd_count`` / ``rev_count`` are slice/credit *counts* (0..B), not
+    validity bools: one superstep may commit a whole burst.
+    """
+
+    fwd_count: jnp.ndarray    # [L] i32 — slices committed this superstep
     fwd_coll: jnp.ndarray     # [L] i32
-    fwd_payload: jnp.ndarray  # [L, SLICE]
-    rev_valid: jnp.ndarray    # [L] bool
+    fwd_payload: jnp.ndarray  # [L, B, SLICE]
+    rev_count: jnp.ndarray    # [L] i32 — credits returned this superstep
     rev_coll: jnp.ndarray     # [L] i32
 
 
-def empty_mailbox(cfg: OcclConfig) -> Mailbox:
-    L, SL = cfg.max_comms, cfg.slice_elems
-    return Mailbox(
-        fwd_valid=jnp.zeros((L,), jnp.bool_),
-        fwd_coll=jnp.zeros((L,), jnp.int32),
-        fwd_payload=jnp.zeros((L, SL), jnp.dtype(cfg.dtype)),
-        rev_valid=jnp.zeros((L,), jnp.bool_),
-        rev_coll=jnp.zeros((L,), jnp.int32),
-    )
+def _combine_by_op(op: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Per-lane reduction select: ``op`` is [L], a/b are [L, ...].
+
+    A where-chain over the four ReduceOps is bit-identical to the seed's
+    per-lane ``lax.switch`` (same elementwise ops, same operand order).
+    """
+    opc = jnp.clip(op, 0, 3).reshape(op.shape + (1,) * (a.ndim - 1))
+    return jnp.where(
+        opc == 0, a + b,
+        jnp.where(opc == 1, jnp.maximum(a, b),
+                  jnp.where(opc == 2, jnp.minimum(a, b), a * b)))
 
 
-def _combine(op: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Apply the collective's reduction (static-context ``op``)."""
-    return jax.lax.switch(
-        jnp.clip(op, 0, 3),
-        [
-            lambda x, y: x + y,
-            jnp.maximum,
-            jnp.minimum,
-            lambda x, y: x * y,
-        ],
-        a,
-        b,
-    )
+def _lane_keys(cfg, st, shared, local):
+    """Ascending queue-order key per collective for every lane at once.
 
-
-def _queue_keys(cfg, st, shared, local, lane):
-    """Ascending queue-order key per collective for this lane (front = min)."""
-    eligible = st.tq_active & local.member & (shared.lane == lane)
-    key = st.arrival
+    Returns (eligible [L, C], key [L, C]); front of lane l's queue is
+    ``argmin(key[l])`` (ties broken by lowest collective id, matching the
+    seed's comparison-matrix tie-break).
+    """
+    L = cfg.max_comms
+    lanes = jnp.arange(L, dtype=jnp.int32)
+    eligible = (st.tq_active & local.member)[None, :] \
+        & (shared.lane[None, :] == lanes[:, None])
+    key = jnp.broadcast_to(st.arrival[None, :], eligible.shape)
     if cfg.demand_steering:
         # Data already waiting in the recv connector => ring peers are on
         # this collective; steering toward it is the fastest decentralized
         # gang-convergence signal available (beyond-paper policy).
         demand = (st.tail < st.head_mirror).astype(jnp.int32)
-        key = key - demand * (jnp.int32(1) << 18)
+        key = key - demand[None, :] * (jnp.int32(1) << 18)
     if cfg.order_policy == OrderPolicy.PRIORITY:
         # Higher priority first; FIFO (+demand) within equal priority.
-        key = (-st.prio) * _BIG + key
+        key = (-st.prio[None, :]) * _BIG + key
     key = jnp.where(eligible, key, jnp.iinfo(jnp.int32).max)
     return eligible, key
 
 
-def _positions(eligible, key):
-    """Task-queue position of each eligible collective (0 = front)."""
-    pos = jnp.sum(
-        (key[None, :] < key[:, None])
-        | ((key[None, :] == key[:, None])
-           & (jnp.arange(key.shape[0])[None, :] < jnp.arange(key.shape[0])[:, None])),
-        axis=1,
-    ).astype(jnp.int32)
-    return jnp.where(eligible, pos, jnp.int32(0))
+def _lane_positions(key):
+    """Task-queue position per (lane, collective) — batched stable ranks.
+
+    ``argsort(argsort(key))`` along the collective axis yields each entry's
+    rank in ascending key order with ties broken by index (jnp.argsort is
+    stable), replacing the seed's O(C^2) pairwise comparison matrix.
+    """
+    order = jnp.argsort(key, axis=1)
+    return jnp.argsort(order, axis=1).astype(jnp.int32)
 
 
-def _thresholds(cfg, st, eligible, pos):
-    """Effective spin thresholds (stickiness scheme, Sec. 3.2)."""
+def _thresholds(cfg, st, pos):
+    """Effective spin thresholds (stickiness scheme, Sec. 3.2); [L, C]."""
     if cfg.stickiness:
-        base = cfg.spin_base - pos * cfg.spin_decr + st.boost
+        base = cfg.spin_base - pos * cfg.spin_decr + st.boost[None, :]
     else:
         base = jnp.full_like(pos, cfg.spin_base)
     return jnp.clip(base, cfg.spin_min, cfg.spin_max)
 
 
-def apply_inbox(cfg: OcclConfig, st: DaemonState, inbox: Mailbox) -> DaemonState:
-    """Phase A: commit arriving slices into the recv-connector mirror and
-    arriving credits into the send-side tail mirror."""
-    K = cfg.conn_depth
-    head_mirror, tail_mirror, payload = st.head_mirror, st.tail_mirror, st.payload
-    for lane in range(cfg.max_comms):
-        c = inbox.fwd_coll[lane]
-        v = inbox.fwd_valid[lane]
-        slot = head_mirror[c] % K
-        payload = payload.at[c, slot].set(
-            jnp.where(v, inbox.fwd_payload[lane], payload[c, slot])
-        )
-        head_mirror = head_mirror.at[c].add(jnp.where(v, 1, 0))
-        rc = inbox.rev_coll[lane]
-        rv = inbox.rev_valid[lane]
-        tail_mirror = tail_mirror.at[rc].add(jnp.where(rv, 1, 0))
+def apply_inbox(cfg: OcclConfig, st: DaemonState, inbox: Mailbox
+                ) -> DaemonState:
+    """Phase A: commit arriving slice bursts into the recv-connector mirror
+    and arriving credit counts into the send-side tail mirror — one batched
+    scatter over all lanes."""
+    K, B, C = cfg.conn_depth, cfg.burst_slices, cfg.max_colls
+    bidx = jnp.arange(B, dtype=jnp.int32)
+
+    c = jnp.clip(inbox.fwd_coll, 0, C - 1)                  # [L]
+    cnt = jnp.clip(inbox.fwd_count, 0, B)                   # [L]
+    take = bidx[None, :] < cnt[:, None]                     # [L, B]
+    slot = (st.head_mirror[c][:, None] + bidx[None, :]) % K
+    # Lanes are coll-disjoint (a collective is bound to one lane); masked
+    # entries are routed to row C and dropped.
+    row = jnp.where(take, c[:, None], C)
+    payload = st.payload.at[row, slot].set(
+        inbox.fwd_payload.astype(st.payload.dtype), mode="drop")
+    head_mirror = st.head_mirror.at[c].add(cnt)
+
+    rc = jnp.clip(inbox.rev_coll, 0, C - 1)
+    tail_mirror = st.tail_mirror.at[rc].add(
+        jnp.maximum(inbox.rev_count, 0))
     return st._replace(
         head_mirror=head_mirror, tail_mirror=tail_mirror, payload=payload
     )
@@ -200,53 +243,60 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     return st, ok
 
 
-def lane_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
-              local: LocalTables, lane: int
-              ) -> tuple[DaemonState, jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                         jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Phase C for one lane: two-phase-blocking selection + one slice move.
+def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
+               local: LocalTables
+               ) -> tuple[DaemonState, jnp.ndarray, Mailbox]:
+    """Phase C for ALL lanes: two-phase-blocking selection + one credit-gated
+    slice burst per lane, fully vectorized over the lane axis.
 
-    Returns (state, moved, fwd_valid, fwd_coll, fwd_payload, rev_valid,
-    rev_coll).
+    Returns (state, moved_any, outbox).
     """
-    K, SL = cfg.conn_depth, cfg.slice_elems
-    C = cfg.max_colls
+    K, SL, B = cfg.conn_depth, cfg.slice_elems, cfg.burst_slices
+    C, L = cfg.max_colls, cfg.max_comms
+    lanes = jnp.arange(L, dtype=jnp.int32)
+    bidx = jnp.arange(B, dtype=jnp.int32)
 
-    eligible, key = _queue_keys(cfg, st, shared, local, lane)
-    pos = _positions(eligible, key)
-    thr = _thresholds(cfg, st, eligible, pos)
+    eligible, key = _lane_keys(cfg, st, shared, local)
+    pos = _lane_positions(key)
+    thr = _thresholds(cfg, st, pos)
 
-    cur = st.cur[lane]
-    cur_ok = (cur >= 0) & eligible[jnp.clip(cur, 0, C - 1)]
+    cur = st.cur                                            # [L]
     cur_c = jnp.clip(cur, 0, C - 1)
-    overspun = cur_ok & (st.spin[cur_c] > thr[cur_c])
+    cur_ok = (cur >= 0) & eligible[lanes, cur_c]
+    overspun = cur_ok & (st.spin[cur_c] > thr[lanes, cur_c])
     if cfg.priority_preempts:
-        higher = jnp.any(eligible & (st.prio > st.prio[cur_c]))
+        higher = jnp.any(
+            eligible & (st.prio[None, :] > st.prio[cur_c][:, None]), axis=1)
         overspun = overspun | (cur_ok & higher)
 
     # Preempt: context switch — dynamic context stays in the context buffer
     # (it already lives in ctx_* arrays: the lazy-saving optimization of
-    # Sec. 4 is structural here), rotate to the back of the queue.
+    # Sec. 4 is structural here), rotate to the back of the queue.  Overspun
+    # lanes own disjoint collectives, so the scatter-add mask is exact.
+    rot = jnp.zeros((C,), jnp.int32).at[cur_c].add(
+        overspun.astype(jnp.int32)) > 0
     st = st._replace(
-        preempts=st.preempts.at[cur_c].add(jnp.where(overspun, 1, 0)),
-        arrival=st.arrival.at[cur_c].set(
-            jnp.where(overspun, st.supersteps + 1, st.arrival[cur_c])),
-        spin=st.spin.at[cur_c].set(jnp.where(overspun, 0, st.spin[cur_c])),
-        boost=st.boost.at[cur_c].set(jnp.where(overspun, 0, st.boost[cur_c])),
+        preempts=st.preempts + rot.astype(st.preempts.dtype),
+        arrival=jnp.where(rot, st.supersteps + 1, st.arrival),
+        spin=jnp.where(rot, 0, st.spin),
+        boost=jnp.where(rot, 0, st.boost),
     )
     keep = cur_ok & ~overspun
 
-    # Queue front after a possible rotation.
-    eligible, key = _queue_keys(cfg, st, shared, local, lane)
-    front = jnp.argmin(key).astype(jnp.int32)
-    any_eligible = jnp.any(eligible)
+    # Queue front after a possible rotation (only `arrival` changed).
+    eligible, key = _lane_keys(cfg, st, shared, local)
+    front = jnp.argmin(key, axis=1).astype(jnp.int32)       # [L]
+    any_eligible = jnp.any(eligible, axis=1)
     cand = jnp.where(keep, cur, jnp.where(any_eligible, front, -1))
-    c = jnp.clip(cand, 0, C - 1)
+    c = jnp.clip(cand, 0, C - 1)                            # [L]
     valid = cand >= 0
+    # Valid lanes select distinct collectives (lane-partitioned
+    # eligibility); invalid lanes are routed to dropped scatter targets.
+    cv = jnp.where(valid, c, C)                             # valid-gated tgt
 
-    # --- gate one slice move of the current primitive --------------------
+    # --- gate a slice burst of the current primitive ---------------------
     step = jnp.clip(st.ctx_step[c], 0, local.prog_kind.shape[1] - 1)
-    prim = local.prog_kind[c, step]
+    prim = local.prog_kind[c, step]                         # [L]
     chunk = local.prog_chunk[c, step]
     sl = st.ctx_slice[c]
     needs_recv = PRIM_RECV[prim] > 0
@@ -255,14 +305,17 @@ def lane_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     does_copy = PRIM_COPY[prim] > 0
     reads_in = PRIM_READS_IN[prim] > 0
 
-    can_recv = st.tail[c] < st.head_mirror[c]
-    can_send = (st.head[c] - st.tail_mirror[c]) < K
-    gate = valid & (prim != Prim.NULL) & \
-        (~needs_recv | can_recv) & (~needs_send | can_send)
-
-    # --- execute the fused actions (paper Fig. 3) ------------------------
-    recv_val = st.payload[c, st.tail[c] % K]
     nsl = shared.n_slices[c]
+    recv_avail = st.head_mirror[c] - st.tail[c]
+    send_free = K - (st.head[c] - st.tail_mirror[c])
+    quota = P.burst_quota(B, nsl - sl, recv_avail, send_free,
+                          needs_recv, needs_send)
+    gate = valid & (prim != Prim.NULL) & (quota > 0)
+    n = jnp.where(gate, quota, 0)                           # [L] burst size
+
+    # --- execute the fused actions on the burst (paper Fig. 3) -----------
+    slots = (st.tail[c][:, None] + bidx[None, :]) % K       # [L, B] ring read
+    recv_val = st.payload[c[:, None], slots]                # [L, B, SL]
     rnd = st.ctx_round[c]
     chunk_stride = shared.n_rounds[c] * nsl * SL   # padded chunk extent
     within = (rnd * nsl + sl) * SL                 # (round, slice) offset
@@ -272,72 +325,111 @@ def lane_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     out_base = (st.out_off[c]
                 + jnp.where(shared.out_chunked[c] > 0, chunk, 0) * chunk_stride
                 + within)
-    in_val = jax.lax.dynamic_slice(st.heap_in, (in_base,), (SL,))
+    # Per-lane contiguous [B*SL] windows (bursts never straddle a step
+    # boundary, so the slice range is contiguous in the heap).  L is a
+    # small static constant; dynamic_slice stays a memcpy where a batched
+    # elementwise gather/scatter would serialize on CPU/TPU backends.
+    span = jnp.arange(B * SL, dtype=jnp.int32)
+    in_val = jnp.stack([
+        jax.lax.dynamic_slice(st.heap_in, (in_base[l],), (B * SL,))
+        for l in range(L)
+    ]).reshape(L, B, SL)
+
+    opv = shared.op[c]
     if cfg.use_pallas:
         from ..kernels import ops as kops
-        value = kops.fused_primitive(
-            recv_val, in_val, shared.op[c],
-            needs_recv, does_reduce, reads_in)
+        flags = jnp.stack([
+            needs_recv.astype(jnp.int32), does_reduce.astype(jnp.int32),
+            reads_in.astype(jnp.int32), opv.astype(jnp.int32),
+        ], axis=1)                                          # [L, 4]
+        flags_lb = jnp.broadcast_to(
+            flags[:, None, :], (L, B, 4)).reshape(L * B, 4)
+        value = kops.fused_primitive_batch(
+            recv_val.reshape(L * B, SL), in_val.reshape(L * B, SL),
+            flags_lb).reshape(L, B, SL)
     else:
-        reduced = _combine(shared.op[c], recv_val, in_val)
+        reduced = _combine_by_op(opv, recv_val, in_val)
+        sel = lambda m: m[:, None, None]
         value = jnp.where(
-            does_reduce, reduced,
-            jnp.where(needs_recv, recv_val,
-                      jnp.where(reads_in, in_val, jnp.zeros_like(in_val))))
+            sel(does_reduce), reduced,
+            jnp.where(sel(needs_recv), recv_val,
+                      jnp.where(sel(reads_in), in_val,
+                                jnp.zeros_like(in_val))))
 
+    # Per-lane [B*SL] read-modify-write windows replace the seed's L
+    # serialized full-heap dynamic_update_slice + lax.select copies
+    # (O(L * B * SLICE) moved instead of O(L * H)).  The heap carries
+    # B*SLICE scratch padding (state.init_state) so windows at the top of
+    # the allocated region never clamp-shift.
     write_out = gate & does_copy
-    new_heap_out = jax.lax.dynamic_update_slice(
-        st.heap_out, value.astype(st.heap_out.dtype), (out_base,))
-    heap_out = jax.lax.select(write_out, new_heap_out, st.heap_out)
+    out_limit = jnp.where(write_out, n, 0) * SL             # elems to write
+    vals = value.reshape(L, B * SL).astype(st.heap_out.dtype)
+    heap_out = st.heap_out
+    for l in range(L):
+        window = jax.lax.dynamic_slice(heap_out, (out_base[l],), (B * SL,))
+        blend = jnp.where(span < out_limit[l], vals[l], window)
+        heap_out = jax.lax.dynamic_update_slice(heap_out, blend,
+                                                (out_base[l],))
 
-    did_recv = gate & needs_recv
-    did_send = gate & needs_send
+    n_recv = jnp.where(gate & needs_recv, n, 0)
+    n_send = jnp.where(gate & needs_send, n, 0)
 
     # --- advance the dynamic context (round, primitive, slice) -----------
-    nslices = shared.n_slices[c]
-    new_slice = sl + 1
-    step_done = gate & (new_slice >= nslices)
+    new_slice = sl + n
+    step_done = gate & (new_slice >= nsl)
     seq_done = step_done & (st.ctx_step[c] + 1 >= shared.n_steps[c])
     next_step = jnp.where(
         seq_done, 0,
         jnp.where(step_done, st.ctx_step[c] + 1, st.ctx_step[c]))
-    next_slice = jnp.where(gate, jnp.where(step_done, 0, new_slice), sl)
+    next_slice = jnp.where(step_done, 0, new_slice)
     next_round = jnp.where(seq_done, rnd + 1, rnd)
     coll_done = seq_done & (next_round >= shared.n_rounds[c])
 
+    cg = jnp.where(gate, c, C)                              # gate-gated tgt
     st = st._replace(
         heap_out=heap_out,
-        tail=st.tail.at[c].add(jnp.where(did_recv, 1, 0)),
-        head=st.head.at[c].add(jnp.where(did_send, 1, 0)),
-        ctx_step=st.ctx_step.at[c].set(jnp.where(gate, next_step, st.ctx_step[c])),
-        ctx_slice=st.ctx_slice.at[c].set(next_slice),
-        ctx_round=st.ctx_round.at[c].set(next_round),
-        spin=st.spin.at[c].set(
-            jnp.where(gate, 0, jnp.where(valid, st.spin[c] + 1, st.spin[c]))),
+        tail=st.tail.at[c].add(n_recv),
+        head=st.head.at[c].add(n_send),
+        ctx_step=st.ctx_step.at[cg].set(next_step, mode="drop"),
+        ctx_slice=st.ctx_slice.at[cg].set(next_slice, mode="drop"),
+        ctx_round=st.ctx_round.at[cg].set(next_round, mode="drop"),
+        spin=st.spin.at[cv].set(
+            jnp.where(gate, 0, st.spin[c] + 1), mode="drop"),
         # Stickiness: a successful primitive boosts its successors' spin
         # thresholds (gang-convergence pressure, Sec. 3.2).
         boost=st.boost.at[c].add(
             jnp.where(step_done & ~coll_done & jnp.bool_(cfg.stickiness),
                       cfg.spin_boost, 0)),
-        slices_moved=st.slices_moved + jnp.where(gate, 1, 0),
+        slices_moved=st.slices_moved + jnp.sum(n),
     )
 
-    # --- completion: write the CQE (paper Sec. 3.1.2) ---------------------
-    cq_slot = jnp.clip(st.cq_count, 0, cfg.cq_len - 1)
+    # --- completion: write the CQEs (paper Sec. 3.1.2) --------------------
+    # The CQ is a RING: slots wrap modulo cq_len so completions past cq_len
+    # per launch rotate through the buffer instead of silently overwriting
+    # the last CQE (host reconciliation counts completions exactly via the
+    # cumulative `completed` matrix, sqcq.HostQueues.reconcile).
+    done_i = coll_done.astype(jnp.int32)
+    slot_off = jnp.cumsum(done_i) - done_i                  # exclusive scan
+    cq_slot = (st.cq_count + slot_off) % cfg.cq_len
+    cq_tgt = jnp.where(coll_done, cq_slot, cfg.cq_len)
+    cd = jnp.where(coll_done, c, C)
     st = st._replace(
-        tq_active=st.tq_active.at[c].set(
-            jnp.where(coll_done, False, st.tq_active[c])),
-        inflight=st.inflight.at[c].set(
-            jnp.where(coll_done, False, st.inflight[c])),
-        completed=st.completed.at[c].add(jnp.where(coll_done, 1, 0)),
-        cq_coll=st.cq_coll.at[cq_slot].set(
-            jnp.where(coll_done, c, st.cq_coll[cq_slot])),
-        cq_count=st.cq_count + jnp.where(coll_done, 1, 0),
-        cur=st.cur.at[lane].set(jnp.where(coll_done | ~valid, -1, cand)),
+        tq_active=st.tq_active.at[cd].set(False, mode="drop"),
+        inflight=st.inflight.at[cd].set(False, mode="drop"),
+        completed=st.completed.at[c].add(done_i),
+        cq_coll=st.cq_coll.at[cq_tgt].set(c, mode="drop"),
+        cq_count=st.cq_count + jnp.sum(done_i),
+        cur=jnp.where(coll_done | ~valid, -1, cand),
     )
 
-    fwd_payload = value.astype(st.payload.dtype)
-    return st, gate, did_send, c, fwd_payload, did_recv, c
+    outbox = Mailbox(
+        fwd_count=n_send,
+        fwd_coll=c,
+        fwd_payload=value.astype(st.payload.dtype),
+        rev_count=n_recv,
+        rev_coll=c,
+    )
+    return st, jnp.any(gate), outbox
 
 
 def rank_superstep(cfg: OcclConfig, shared: SharedTables, local: LocalTables,
@@ -346,31 +438,12 @@ def rank_superstep(cfg: OcclConfig, shared: SharedTables, local: LocalTables,
     """One full superstep for one rank."""
     st = apply_inbox(cfg, st, inbox)
     st, fetched = fetch_sqe(cfg, st, shared, local)
-
-    L, SL = cfg.max_comms, cfg.slice_elems
-    fwd_valid, fwd_coll, rev_valid, rev_coll = [], [], [], []
-    fwd_payload = []
-    moved_any = jnp.bool_(False)
-    for lane in range(L):
-        st, moved, fv, fc, fp, rv, rc = lane_step(cfg, st, shared, local, lane)
-        moved_any = moved_any | moved
-        fwd_valid.append(fv)
-        fwd_coll.append(fc)
-        fwd_payload.append(fp)
-        rev_valid.append(rv)
-        rev_coll.append(rc)
+    st, moved_any, outbox = lanes_step(cfg, st, shared, local)
 
     progress = moved_any | fetched
     st = st._replace(
         supersteps=st.supersteps + 1,
         no_prog=jnp.where(progress, 0, st.no_prog + 1),
         made_prog_prev=moved_any,
-    )
-    outbox = Mailbox(
-        fwd_valid=jnp.stack(fwd_valid),
-        fwd_coll=jnp.stack(fwd_coll),
-        fwd_payload=jnp.stack(fwd_payload),
-        rev_valid=jnp.stack(rev_valid),
-        rev_coll=jnp.stack(rev_coll),
     )
     return st, outbox

@@ -47,6 +47,12 @@ class HostQueues:
         ]
         self.submitted = np.zeros(cfg.n_ranks, np.int64)
         self.completed = np.zeros(cfg.n_ranks, np.int64)
+        # Last-seen snapshot of the device's cumulative per-(rank, coll)
+        # completion counters; reconcile() consumes the delta, so every
+        # completion is accounted even when the CQ ring wraps more than
+        # once within a single launch.
+        self._completed_seen = np.zeros(
+            (cfg.n_ranks, cfg.max_colls), np.int64)
 
     def submit(self, rank: int, sqe: SQE) -> None:
         self.pending[rank].append(sqe)
@@ -85,22 +91,43 @@ class HostQueues:
 
     # -- post-launch reconciliation ----------------------------------------
     def reconcile(self, st: DaemonState) -> int:
-        """Pop consumed SQEs, drain CQs, fire callbacks.  Returns #CQEs."""
+        """Pop consumed SQEs, account completions, fire callbacks.
+
+        Completion accounting is driven by the device's cumulative
+        ``completed`` matrix rather than by walking CQEs: the device CQ is
+        a RING (slots wrap modulo ``cq_len``), so with more than ``cq_len``
+        completions per launch early CQEs are rotated out — the counter
+        delta still reconciles every one of them exactly.  Returns the
+        number of completions accounted this call.
+        """
         cfg = self.cfg
         sq_read = np.asarray(st.sq_read)
+        comp = np.asarray(st.completed, dtype=np.int64)   # [R, C] cumulative
         cq_count = np.asarray(st.cq_count)
         cq_coll = np.asarray(st.cq_coll)
         fired = 0
         for r in range(cfg.n_ranks):
             for _ in range(int(sq_read[r])):
                 self.pending[r].popleft()
-            for i in range(int(cq_count[r])):
-                c = int(cq_coll[r, i])
+            delta = comp[r] - self._completed_seen[r]
+            # Surviving ring entries, oldest first (completion order).
+            cqc = int(cq_count[r])
+            ring = [int(cq_coll[r, i % cfg.cq_len])
+                    for i in range(max(0, cqc - cfg.cq_len), cqc)]
+            # Completions rotated out of a wrapped ring: exact counts from
+            # the counter delta, completion order unrecoverable.
+            lost = delta.copy()
+            for c in ring:
+                lost[c] -= 1
+            seq = list(np.repeat(np.arange(cfg.max_colls),
+                                 np.maximum(lost, 0))) + ring
+            for c in seq:
                 self.completed[r] += 1
                 fired += 1
-                cbs = self.callbacks[r].get(c)
+                cbs = self.callbacks[r].get(int(c))
                 if cbs:
-                    cbs.popleft()(r, c)
+                    cbs.popleft()(r, int(c))
+            self._completed_seen[r] = comp[r]
         return fired
 
     def outstanding(self) -> int:

@@ -61,13 +61,14 @@ class DaemonState(NamedTuple):
     inflight: jnp.ndarray      # [C] bool — submitted, not yet completed
 
     # --- in-flight connector messages (survive daemon relaunch) ---------
-    # A credit/slice emitted on the fabric's last superstep has not been
-    # applied yet; dropping it would permanently wedge the connector
+    # A credit/slice-burst emitted on the fabric's last superstep has not
+    # been applied yet; dropping it would permanently wedge the connector
     # counters.  The mailbox is therefore part of the persistent state.
-    mb_fwd_valid: jnp.ndarray   # [L] bool
+    # Counts (not bools): one message carries up to ``burst_slices`` slices.
+    mb_fwd_count: jnp.ndarray   # [L] i32
     mb_fwd_coll: jnp.ndarray    # [L] i32
-    mb_fwd_payload: jnp.ndarray # [L, SLICE]
-    mb_rev_valid: jnp.ndarray   # [L] bool
+    mb_fwd_payload: jnp.ndarray # [L, B, SLICE]
+    mb_rev_count: jnp.ndarray   # [L] i32
     mb_rev_coll: jnp.ndarray    # [L] i32
 
     # --- counters / lifecycle --------------------------------------------
@@ -84,6 +85,7 @@ class DaemonState(NamedTuple):
 def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
     """Fresh state; leading rank axis added when ``per_rank`` (sim backend)."""
     C, K, L = cfg.max_colls, cfg.conn_depth, cfg.max_comms
+    B = cfg.burst_slices
     SQL, CQL, H, SL = cfg.sq_len, cfg.cq_len, cfg.heap_elems, cfg.slice_elems
     dt = jnp.dtype(cfg.dtype)
 
@@ -91,9 +93,14 @@ def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
         a = jnp.full(shape, fill, dtype)
         return a
 
+    # Physical heaps carry B*SLICE scratch elements past the allocatable
+    # region so the scheduler's per-lane [B*SLICE] burst windows (read and
+    # read-modify-write) never clamp-shift at the top of the heap; logical
+    # offsets handed out by the runtime stay < heap_elems.
+    pad = B * SL
     s = DaemonState(
-        heap_in=z((H,), dt),
-        heap_out=z((H,), dt),
+        heap_in=z((H + pad,), dt),
+        heap_out=z((H + pad,), dt),
         head=z((C,)), tail_mirror=z((C,)), head_mirror=z((C,)), tail=z((C,)),
         payload=z((C, K, SL), dt),
         tq_active=z((C,), jnp.bool_, False),
@@ -108,10 +115,10 @@ def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
         sq_size=z(()), sq_read=z(()),
         cq_coll=z((CQL,), jnp.int32, -1), cq_count=z(()),
         inflight=z((C,), jnp.bool_, False),
-        mb_fwd_valid=z((L,), jnp.bool_, False),
+        mb_fwd_count=z((L,)),
         mb_fwd_coll=z((L,)),
-        mb_fwd_payload=z((L, SL), dt),
-        mb_rev_valid=z((L,), jnp.bool_, False),
+        mb_fwd_payload=z((L, B, SL), dt),
+        mb_rev_count=z((L,)),
         mb_rev_coll=z((L,)),
         completed=z((C,)), preempts=z((C,)), qlen_at_fetch=z((C,)),
         supersteps=z(()), no_prog=z(()),

@@ -54,6 +54,10 @@ class StaticTables:
     rev_src: np.ndarray       # [L, Rk] int32 — reverse (credit) exchange
     fwd_perm_pairs: list      # [L] list[(src, dst)] for lax.ppermute
     rev_perm_pairs: list
+    # Lanes grouped by identical ring permutation: each group's traffic is
+    # fused into ONE stacked ppermute pair per direction in the mesh
+    # backend (instead of one ppermute per lane per mailbox field).
+    lane_groups: list         # [(lanes: list[int], fwd_pairs, rev_pairs)]
 
     max_steps: int
 
@@ -94,6 +98,7 @@ def build_tables(
         rev_src=np.tile(np.arange(Rk, dtype=np.int32), (L, 1)),
         fwd_perm_pairs=[[] for _ in range(L)],
         rev_perm_pairs=[[] for _ in range(L)],
+        lane_groups=[],
         max_steps=S,
     )
 
@@ -109,6 +114,20 @@ def build_tables(
         t.rev_perm_pairs[comm.lane] = [
             (int(s), int(rev[s])) for s in range(Rk)
         ]
+
+    # Group lanes by ring-permutation signature; lanes without a
+    # communicator (empty pairs) are excluded — their mailbox slots stay
+    # zero, which the receiving scheduler reads as count 0.
+    by_perm: dict = {}
+    for lane in range(L):
+        pairs = t.fwd_perm_pairs[lane]
+        if not pairs:
+            continue
+        by_perm.setdefault(tuple(pairs), []).append(lane)
+    t.lane_groups = [
+        (lanes, list(sig), t.rev_perm_pairs[lanes[0]])
+        for sig, lanes in by_perm.items()
+    ]
 
     for s in specs:
         c = s.coll_id

@@ -6,10 +6,13 @@ payload and the local send buffer once, combines them, and feeds both the
 recv-buffer write and the send-connector push from the same value — one
 pass through VMEM instead of separate reduce + copy kernels.
 
-Layout: payload/local are [B, S] (B = lanes or batched slices).  Grid is
-(B, S // TS); each program instance owns a (1, TS) VMEM tile.  The per-row
-opcode (recv, reduce, reads_in, op) rides in SMEM via a scalar BlockSpec.
-TS is a multiple of 128 to keep tiles lane-aligned for the VPU.
+Layout: payload/local are [N, S], where the scheduler batches the FULL
+superstep burst into N = L * burst_slices rows (every lane's contiguous
+slice burst) and S = slice_elems — one kernel call per superstep instead of
+one per lane per slice.  Grid is (N, S // TS); each program instance owns a
+(1, TS) VMEM tile.  The per-row opcode (recv, reduce, reads_in, op) rides
+in SMEM via a scalar BlockSpec.  TS is a multiple of 128 to keep tiles
+lane-aligned for the VPU (small-S test shapes fall back to S itself).
 """
 from __future__ import annotations
 

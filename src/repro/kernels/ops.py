@@ -17,20 +17,10 @@ from .fused_slice import fused_primitive_pallas
 _INTERPRET = jax.default_backend() != "tpu"
 
 
-def fused_primitive(payload: jnp.ndarray, local: jnp.ndarray,
-                    op: jnp.ndarray, needs_recv: jnp.ndarray,
-                    does_reduce: jnp.ndarray, reads_in: jnp.ndarray
-                    ) -> jnp.ndarray:
-    """Scheduler entry point: single [S] slice, traced flag scalars."""
-    flags = jnp.stack([
-        needs_recv.astype(jnp.int32), does_reduce.astype(jnp.int32),
-        reads_in.astype(jnp.int32), op.astype(jnp.int32),
-    ])[None, :]
-    return fused_primitive_pallas(
-        payload[None, :], local[None, :], flags, interpret=_INTERPRET)[0]
-
-
 def fused_primitive_batch(payload, local, flags):
+    """Scheduler entry point: the whole [L*B, SLICE] superstep burst —
+    every lane's slice burst, with per-row (recv, reduce, reads_in, op)
+    opcodes — in ONE kernel call."""
     return fused_primitive_pallas(payload, local, flags,
                                   interpret=_INTERPRET)
 

@@ -1,0 +1,92 @@
+"""Hypothesis property sweeps for deadlock freedom (paper Sec. 5.2).
+
+Skipped entirely when hypothesis is not installed (tier-1 containers);
+``pip install -r requirements-dev.txt`` restores the property coverage.
+The shared scenario driver lives in test_deadlock_freedom.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CollKind, OrderPolicy, run_static_order
+
+from test_deadlock_freedom import KINDS, _run_occl
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_any_order_completes_correctly(data):
+    R = data.draw(st.integers(2, 5), label="ranks")
+    n_coll = data.draw(st.integers(1, 4), label="n_coll")
+    colls = []
+    for i in range(n_coll):
+        kind = data.draw(st.sampled_from(KINDS), label=f"kind{i}")
+        n_elems = data.draw(st.integers(1, 40), label=f"n{i}")
+        root = data.draw(st.integers(0, R - 1), label=f"root{i}")
+        colls.append((kind, n_elems, root))
+    orders = [data.draw(st.permutations(range(n_coll)), label=f"order{r}")
+              for r in range(R)]
+    policy = data.draw(st.sampled_from(
+        [OrderPolicy.FIFO, OrderPolicy.PRIORITY]), label="policy")
+    stick = data.draw(st.booleans(), label="stickiness")
+    burst = data.draw(st.sampled_from([1, 2, 4]), label="burst")
+    seed = data.draw(st.integers(0, 1000), label="seed")
+
+    rt, ids, inputs, roots = _run_occl(R, colls, orders, policy, stick, seed,
+                                       burst_slices=burst)
+
+    for slot, cid in enumerate(ids):
+        kind, n_elems, root = colls[slot]
+        if kind == CollKind.ALL_REDUCE:
+            want = sum(inputs[cid])
+            for r in range(R):
+                np.testing.assert_allclose(
+                    rt.read_output(r, cid), want, rtol=1e-4, atol=1e-6)
+        elif kind == CollKind.ALL_GATHER:
+            chunk = -(-n_elems // R)
+            want = np.concatenate(inputs[cid])[:n_elems]
+            for r in range(R):
+                np.testing.assert_allclose(
+                    rt.read_output(r, cid), want, rtol=1e-4, atol=1e-6)
+        elif kind == CollKind.REDUCE_SCATTER:
+            chunk = -(-n_elems // R)
+            full = sum(np.pad(x, (0, chunk * R - n_elems))
+                       for x in inputs[cid])
+            for r in range(R):
+                np.testing.assert_allclose(
+                    rt.read_output(r, cid), full[r * chunk:(r + 1) * chunk],
+                    rtol=1e-4, atol=1e-6)
+        elif kind == CollKind.BROADCAST:
+            for r in range(R):
+                np.testing.assert_allclose(
+                    rt.read_output(r, cid), inputs[cid][0], rtol=1e-4, atol=1e-6)
+        elif kind == CollKind.REDUCE:
+            want = sum(inputs[cid])
+            np.testing.assert_allclose(
+                rt.read_output(root, cid), want, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_occl_survives_static_deadlocks(data):
+    """Order sets that deadlock the single-FIFO-queue baseline still
+    complete under OCCL (the paper's stress scenario, Sec. 5.2)."""
+    R = data.draw(st.integers(2, 4))
+    n_coll = data.draw(st.integers(2, 4))
+    orders = {r: list(data.draw(st.permutations(range(n_coll))))
+              for r in range(R)}
+    members_of = {c: list(range(R)) for c in range(n_coll)}
+    static = run_static_order(orders, members_of)
+    colls = [(CollKind.ALL_REDUCE, 8, 0) for _ in range(n_coll)]
+    rt, ids, inputs, _ = _run_occl(
+        R, colls, [orders[r] for r in range(R)],
+        OrderPolicy.FIFO, True, seed=1)
+    for cid in ids:
+        want = sum(inputs[cid])
+        np.testing.assert_allclose(rt.read_output(0, cid), want, rtol=1e-4, atol=1e-6)
+    if static.deadlocked:
+        assert static.cycle is not None or static.blocked_at

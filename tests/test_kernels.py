@@ -1,9 +1,10 @@
-"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode,
-plus hypothesis property tests on the fused-primitive semantics."""
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode.
+
+Hypothesis property tests on the fused-primitive semantics live in
+test_kernels_props.py (skipped when hypothesis is absent)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops
 from repro.kernels.chunk_combine import chunk_combine_pallas
@@ -36,31 +37,3 @@ def test_chunk_combine_sweep(dtype, T, op):
     want = ops.chunk_combine_ref(a, b, op)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=1e-6)
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.data())
-def test_fused_primitive_props(data):
-    """Semantics: reduce==op(payload,local); recv-only==payload;
-    reads-only==local; neither==0."""
-    S = data.draw(st.sampled_from([8, 32, 128]))
-    rng = np.random.RandomState(data.draw(st.integers(0, 999)))
-    p = jnp.asarray(rng.randn(1, S), jnp.float32)
-    l = jnp.asarray(rng.randn(1, S), jnp.float32)
-    recv = data.draw(st.integers(0, 1))
-    red = data.draw(st.integers(0, 1))
-    reads = data.draw(st.integers(0, 1))
-    op = data.draw(st.integers(0, 3))
-    f = jnp.asarray([[recv, red, reads, op]], jnp.int32)
-    got = np.asarray(fused_primitive_pallas(p, l, f, interpret=True))[0]
-    pn, ln = np.asarray(p)[0], np.asarray(l)[0]
-    if red:
-        want = {0: pn + ln, 1: np.maximum(pn, ln),
-                2: np.minimum(pn, ln), 3: pn * ln}[op]
-    elif recv:
-        want = pn
-    elif reads:
-        want = ln
-    else:
-        want = np.zeros(S, np.float32)
-    np.testing.assert_allclose(got, want, rtol=1e-6)

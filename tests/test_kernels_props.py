@@ -1,0 +1,43 @@
+"""Hypothesis property tests on the fused-primitive kernel semantics.
+
+Skipped entirely when hypothesis is not installed (tier-1 containers);
+``pip install -r requirements-dev.txt`` restores the property coverage.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fused_slice import fused_primitive_pallas
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fused_primitive_props(data):
+    """Semantics: reduce==op(payload,local); recv-only==payload;
+    reads-only==local; neither==0."""
+    S = data.draw(st.sampled_from([8, 32, 128]))
+    rng = np.random.RandomState(data.draw(st.integers(0, 999)))
+    p = jnp.asarray(rng.randn(1, S), jnp.float32)
+    l = jnp.asarray(rng.randn(1, S), jnp.float32)
+    recv = data.draw(st.integers(0, 1))
+    red = data.draw(st.integers(0, 1))
+    reads = data.draw(st.integers(0, 1))
+    op = data.draw(st.integers(0, 3))
+    f = jnp.asarray([[recv, red, reads, op]], jnp.int32)
+    got = np.asarray(fused_primitive_pallas(p, l, f, interpret=True))[0]
+    pn, ln = np.asarray(p)[0], np.asarray(l)[0]
+    if red:
+        want = {0: pn + ln, 1: np.maximum(pn, ln),
+                2: np.minimum(pn, ln), 3: pn * ln}[op]
+    elif recv:
+        want = pn
+    elif reads:
+        want = ln
+    else:
+        want = np.zeros(S, np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

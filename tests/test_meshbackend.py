@@ -2,6 +2,10 @@
 
 Run in a SUBPROCESS with 8 virtual host devices so the main test process
 keeps seeing 1 device (per spec)."""
+import pytest
+
+# Heavyweight mesh-backend subprocess tests: excluded from tier-1; run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 import json
 import pathlib
 import subprocess
@@ -59,6 +63,70 @@ def test_mesh_backend_adversarial_orders():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "MESH_OK" in r.stdout
+
+
+_BURST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "@SRC@")
+    import numpy as np, jax
+    from repro.core import OcclConfig, CollKind, OcclRuntime
+
+    # burst_slices > 1 through the mesh fabric: exercises the fused
+    # per-ring-group ppermute pair with [L, B, SL] payload packing
+    # (i32 header+payload bitcast for the float32 heap) on two lanes.
+    mesh = jax.make_mesh((8,), ("rank",))
+    cfg = OcclConfig(n_ranks=8, max_colls=8, max_comms=2, slice_elems=8,
+                     conn_depth=8, burst_slices=4, heap_elems=1 << 13)
+    rt = OcclRuntime(cfg, mesh=mesh)
+    world = rt.communicator(list(range(8)))
+    evens = rt.communicator([0, 2, 4, 6])
+    a = rt.register(CollKind.ALL_REDUCE, world, n_elems=96)
+    c = rt.register(CollKind.ALL_GATHER, evens, n_elems=32)
+    rng = np.random.RandomState(0)
+    xa = [rng.randn(96).astype(np.float32) for _ in range(8)]
+    xc = {r: rng.randn(8).astype(np.float32) for r in evens.members}
+    for r in range(8):
+        rt.write_input(r, a, xa[r])
+        if r in evens.members:
+            rt.write_input(r, c, xc[r]); rt.submit(r, c)
+        rt.submit(r, a)
+    rt.drive()
+    for r in range(8):
+        np.testing.assert_allclose(rt.read_output(r, a), sum(xa),
+                                   rtol=1e-4, atol=1e-6)
+    want = np.concatenate([xc[r] for r in evens.members])
+    for r in evens.members:
+        np.testing.assert_allclose(rt.read_output(r, c), want,
+                                   rtol=1e-4, atol=1e-6)
+
+    # 16-bit heap dtype: fuse_payload is False, so the separate
+    # header/payload ppermute branch of _mesh_exchange executes.
+    cfg16 = OcclConfig(n_ranks=8, max_colls=2, max_comms=1, slice_elems=8,
+                       conn_depth=6, burst_slices=4, dtype="bfloat16",
+                       heap_elems=1 << 12)
+    rt16 = OcclRuntime(cfg16, mesh=mesh)
+    world16 = rt16.communicator(list(range(8)))
+    g = rt16.register(CollKind.ALL_GATHER, world16, n_elems=64)
+    xg = [rng.randn(8).astype(np.float32) for _ in range(8)]
+    for r in range(8):
+        rt16.submit(r, g, data=xg[r])
+    rt16.drive()
+    wg = np.concatenate(xg)
+    for r in range(8):
+        np.testing.assert_allclose(
+            np.asarray(rt16.read_output(r, g), np.float32), wg,
+            rtol=2e-2, atol=2e-2)
+    print("MESH_BURST_OK")
+""").replace("@SRC@", str(ROOT / "src"))
+
+
+def test_mesh_backend_burst_slices():
+    r = subprocess.run([sys.executable, "-c", _BURST_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_BURST_OK" in r.stdout
 
 
 _ELASTIC = textwrap.dedent("""

@@ -1,12 +1,16 @@
 """Per-arch smoke tests (reduced configs) + numerical model properties:
 blockwise==full attention, SSD chunked==naive recurrence, MoE dispatch==
 dense oracle, prefill/decode==train forward consistency."""
+
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Heavyweight model sweeps: excluded from tier-1 (`pytest -q`); run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_config, _REGISTRY
 from repro.configs.base import ShapeCell

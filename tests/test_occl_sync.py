@@ -1,5 +1,9 @@
 """OCCL gradient synchronization == the statically-sequenced baseline,
 numerically, while tolerating per-rank submission-order skew."""
+import pytest
+
+# Heavyweight training-sync integration: excluded from tier-1; run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,4 +1,8 @@
 """Serving engine: batched prefill + decode, slot recycling, determinism."""
+import pytest
+
+# Heavyweight serving integration: excluded from tier-1; run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 import numpy as np
 
 from repro.configs import get_config

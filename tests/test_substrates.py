@@ -1,5 +1,6 @@
 """Substrate tests: data pipeline, checkpointing, fault tolerance,
 optimizer, straggler detector."""
+
 import pathlib
 import tempfile
 
@@ -7,6 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Heavyweight substrate integration: excluded from tier-1; run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_config
 from repro.configs.base import ShapeCell

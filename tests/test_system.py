@@ -7,6 +7,10 @@
 3. DP training with OCCL grad-sync produces the same training curve as
    statically-sequenced synchronization.
 """
+import pytest
+
+# Heavyweight end-to-end system tests: excluded from tier-1; run with `pytest -m ""`.
+pytestmark = pytest.mark.slow
 import jax
 import numpy as np
 
