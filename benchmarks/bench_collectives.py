@@ -199,11 +199,109 @@ def run_burst_sweep(bursts=(1, 4, 8), n=65536, R=8, conn_depth=32,
         record["speedup_slices_per_sec_vs_burst1"] = {
             k: v["total"]["slices_per_sec"] / base for k, v in b.items()
         }
-    out_path.write_text(json.dumps(record, indent=2) + "\n")
+    # Merge-write: other sections (e.g. ``contention``) survive.
+    doc = _read_record(out_path)
+    doc.update(record)
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"# wrote {out_path}")
+    return record
+
+
+def _read_record(out_path: pathlib.Path) -> dict:
+    """Existing perf record, or {} if absent/corrupt (an interrupted run
+    must not poison every later run)."""
+    try:
+        return json.loads(out_path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def build_contention_runtime(burst: int, n: int = 2048, R: int = 8,
+                             C: int = 8, conn_depth: int = 32,
+                             seed: int = 42,
+                             slice_elems: int = BURST_SLICE_ELEMS
+                             ) -> OcclRuntime:
+    """Adversarial contention: R ranks submit C all-reduces on ONE lane in
+    pairwise-different orders (the Sec. 5.2 headline workload) — the
+    regime where bursts historically amplified spin/preempt thrash.
+
+    Everything is submitted but not yet driven; tier-1
+    (tests/test_launch_epoch.py) reuses this builder so the regression
+    test guards exactly the benchmarked regime.
+    """
+    rng = np.random.RandomState(seed)
+    orders = {r: list(rng.permutation(C)) for r in range(R)}
+    cfg = OcclConfig(n_ranks=R, max_colls=C, max_comms=1,
+                     slice_elems=slice_elems, conn_depth=conn_depth,
+                     burst_slices=burst, heap_elems=1 << 18,
+                     superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    world = rt.communicator(list(range(R)))
+    ids = [rt.register(CollKind.ALL_REDUCE, world, n_elems=n)
+           for _ in range(C)]
+    for r in range(R):
+        for slot in orders[r]:
+            rt.submit(r, ids[slot],
+                      data=rng.randn(n).astype(np.float32))
+    return rt
+
+
+def _contention_once(burst: int, n: int, R: int, C: int, conn_depth: int,
+                     seed: int) -> dict:
+    rt = build_contention_runtime(burst, n, R, C, conn_depth, seed)
+    t0 = time.perf_counter()
+    rt.drive(max_launches=128)
+    dt = time.perf_counter() - t0
+    st = rt.stats()
+    steps = int(st["supersteps"].max())
+    slices = int(st["slices_moved"].sum())
+    return {
+        "latency_s": dt,                       # includes compile (1 iter)
+        "supersteps": steps,
+        "preempts": int(st["preempts"].sum()),
+        "stall_slices": int(st["stall_slices"].sum()),
+        "slices": slices,
+        "slices_per_superstep": slices / max(steps, 1),
+        "launches": st["launches"],
+    }
+
+
+def run_contention_sweep(bursts=(1, 4, 8), n=2048, R=8, C=8, conn_depth=32,
+                         seed=42, out_path=BENCH_JSON) -> dict:
+    """Stall/preempt/throughput of the adversarial 8x8 all-reduce at each
+    burst width — the burst-aware stall accounting record (spin advances
+    by denied slices, so stalled lanes multiplex instead of spinning
+    B-wide supersteps).  Merged into BENCH_collectives.json under
+    ``contention``."""
+    sweep = {}
+    for burst in bursts:
+        sweep[str(burst)] = _contention_once(burst, n, R, C, conn_depth,
+                                             seed)
+        s = sweep[str(burst)]
+        row(f"collectives/contention_burst{burst}", s["latency_s"] * 1e6,
+            f"supersteps={s['supersteps']};preempts={s['preempts']};"
+            f"stall_slices={s['stall_slices']};"
+            f"slices_per_superstep={s['slices_per_superstep']:.2f}")
+    record = {
+        "config": {"n_ranks": R, "n_colls": C, "n_elems": n,
+                   "slice_elems": BURST_SLICE_ELEMS,
+                   "conn_depth": conn_depth, "seed": seed,
+                   "workload": "adversarial all-reduce, 1 lane"},
+        "bursts": sweep,
+    }
+    if "1" in sweep:
+        base = sweep["1"]["supersteps"]
+        record["superstep_speedup_vs_burst1"] = {
+            k: base / max(v["supersteps"], 1) for k, v in sweep.items()
+        }
+    doc = _read_record(out_path)
+    doc["contention"] = record
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"# wrote {out_path} (contention)")
     return record
 
 
 if __name__ == "__main__":
     run()
     run_burst_sweep()
+    run_contention_sweep()

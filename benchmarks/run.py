@@ -4,7 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows (common.row).
   Fig. 5  -> bench_overheads       Fig. 6/7 -> bench_collectives
   Sec 5.2 -> bench_deadlock        Fig. 8/10 -> bench_training
   Fig. 9  -> bench_gang            Roofline  -> roofline (dry-run JSON)
+
+``--quick`` runs a CI-sized smoke (small sizes, 1 iter) that still
+rewrites BENCH_collectives.json — both the burst sweep and the
+adversarial contention sweep — so the perf record stays reproducible
+from a cold checkout.
 """
+import argparse
 import pathlib
 import sys
 
@@ -12,16 +18,23 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     print("name,us_per_call,derived")
+    import bench_collectives
+    if quick:
+        bench_collectives.run(sizes=(64,), iters=1)
+        bench_collectives.run_burst_sweep(bursts=(1, 8), n=8192, iters=1)
+        bench_collectives.run_contention_sweep(bursts=(1, 8), n=1024)
+        return
     import bench_overheads
     bench_overheads.run(sizes=(64, 1024, 4096))
-    import bench_collectives
     bench_collectives.run(sizes=(64, 4096), iters=2)
     # Machine-readable perf trajectory: supersteps/sec, slices/sec and
-    # per-collective latency at burst_slices in {1, 4, 8}, written to
+    # per-collective latency at burst_slices in {1, 4, 8}, plus the
+    # adversarial contention stall/preempt record, written to
     # BENCH_collectives.json at the repo root.
     bench_collectives.run_burst_sweep(iters=2)
+    bench_collectives.run_contention_sweep()
     import bench_deadlock
     bench_deadlock.run(iters=2)
     import bench_gang
@@ -39,4 +52,7 @@ def main() -> None:
 
 
 if __name__ == '__main__':
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sizes, 1 iteration per point")
+    main(quick=ap.parse_args().quick)

@@ -7,12 +7,12 @@ and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
 """
 from .config import OcclConfig, OrderPolicy, ReduceOp
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
-from .runtime import DeadlockTimeout, OcclRuntime
+from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
 from .deadlock import run_static_order, consistent_order_exists
 
 __all__ = [
     "OcclConfig", "OrderPolicy", "ReduceOp",
     "CollKind", "CollectiveSpec", "Communicator", "Prim",
-    "OcclRuntime", "DeadlockTimeout",
+    "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning",
     "run_static_order", "consistent_order_exists",
 ]

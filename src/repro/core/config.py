@@ -2,11 +2,38 @@
 
 All sizes are static (compiled into the daemon program), mirroring the
 paper's registration-time preparation of collective contexts (Sec. 3.1.1).
+
+Launch-epoch clock invariants
+-----------------------------
+The daemon keeps TWO superstep clocks (state.py): a cumulative ``supersteps``
+epoch counter that is never reset (observability / Fig. 9 stats) and a
+per-launch ``launch_steps`` counter that the daemon prologue zeroes on every
+(re)launch.  ``superstep_budget`` bounds ``launch_steps`` — it is a
+*per-launch* bound, so the voluntary-quit/relaunch cycle (paper Sec. 3.1.3)
+can repeat indefinitely without the budget ever going stale.
+
+Task-queue order keys are built from the same launch clock: the scheduler
+rebases every active collective's ``arrival`` to its queue rank (< max_colls)
+in the launch prologue, and new fetches/rotations stamp
+``max_colls + launch_steps``.  Queue age is therefore bounded by
+``max_colls + superstep_budget + 2`` per launch, which MUST stay below
+``QUEUE_KEY_DEMAND_STRIDE`` so the demand-steering bonus and the PRIORITY
+class stride can never bleed into each other (validated in
+``OcclConfig.__post_init__``).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+
+
+# Queue-key class strides (scheduler._lane_keys).  Within one priority
+# class the key is ``arrival - demand * QUEUE_KEY_DEMAND_STRIDE``; PRIORITY
+# prepends ``-prio * QUEUE_KEY_PRIO_STRIDE``.  Keys are i32: with prio
+# clipped to +/-512 (2^9) the extreme key magnitude is ~2^29 — no overflow —
+# provided arrival stays below the demand stride (config validation below).
+QUEUE_KEY_DEMAND_STRIDE = 1 << 18
+QUEUE_KEY_PRIO_STRIDE = 1 << 20
 
 
 class OrderPolicy(enum.IntEnum):
@@ -46,6 +73,15 @@ class OcclConfig:
                                     # sustained B-slice throughput size
                                     # conn_depth >= ~3B (credit round trip;
                                     # see scheduler.py docstring)
+    auto_conn_depth: bool = False   # derive conn_depth =
+                                    # max(conn_depth, 3 * burst_slices) at
+                                    # construction so bursts never fall into
+                                    # the 1-slice/superstep credit-return
+                                    # equilibrium.  Off by default: resizing
+                                    # the connector changes derive_slicing
+                                    # (rounds/slices), so it must be an
+                                    # explicit choice; when off, the runtime
+                                    # warns at registration time instead.
     heap_elems: int = 1 << 16       # per-rank data heap (send/recv buffers)
 
     # --- SQ / CQ --------------------------------------------------------
@@ -67,6 +103,13 @@ class OcclConfig:
                                     # as the paper's spin-threshold scheme
                                     # but converges faster under adversarial
                                     # order skew (benchmarks/bench_gang.py)
+    # Spin thresholds/counts are in units of STALLED SLICES, not stalled
+    # supersteps: a lane denied its whole burst advances ``spin`` by up to
+    # ``burst_slices`` per superstep (scheduler.lanes_step), so at B > 1 a
+    # stalled collective yields its lane in proportionally fewer wall
+    # supersteps and the freed supersteps go to collectives with queued
+    # demand.  At B = 1 a stalled superstep denies exactly one slice, so
+    # the accounting is bit-identical to the seed superstep-counting spin.
     spin_base: int = 16             # initial threshold of queue-front coll
     spin_decr: int = 4              # threshold decrement per queue position
     spin_boost: int = 8             # boost to successors on primitive success
@@ -76,7 +119,10 @@ class OcclConfig:
     # --- daemon lifecycle (paper Sec. 3.1.3) ----------------------------
     quit_threshold: int = 64        # voluntary quit after this many
                                     # no-progress supersteps
-    superstep_budget: int = 4096    # hard bound per daemon launch
+    superstep_budget: int = 4096    # hard bound on launch_steps PER daemon
+                                    # launch (reset in the launch prologue;
+                                    # the cumulative epoch clock is separate
+                                    # and unbounded)
 
     # --- numerics / kernels ---------------------------------------------
     dtype: str = "float32"          # heap / wire dtype
@@ -89,3 +135,14 @@ class OcclConfig:
         assert self.slice_elems >= 1
         assert self.burst_slices >= 1
         assert self.spin_base >= self.spin_min
+        if self.auto_conn_depth and self.conn_depth < 3 * self.burst_slices:
+            # Credit round trip (commit, consume, credit-return) is ~3
+            # supersteps; K >= 3B keeps the ring from saturating.
+            object.__setattr__(self, "conn_depth", 3 * self.burst_slices)
+        # Queue-key class separation (see module docstring): the largest
+        # per-launch arrival value must stay below the demand stride.
+        assert (self.superstep_budget + self.max_colls + 2
+                < QUEUE_KEY_DEMAND_STRIDE), (
+            "superstep_budget too large for i32 queue keys: need "
+            f"superstep_budget + max_colls + 2 < {QUEUE_KEY_DEMAND_STRIDE} "
+            "(split work across launches — the budget is per launch)")

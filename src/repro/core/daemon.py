@@ -19,6 +19,13 @@ The loop terminates on: all work drained, the voluntary-quit threshold
 (consecutive fabric-wide no-progress supersteps, Sec. 3.1.3), or the hard
 superstep budget.  The host relaunches it event-driven while completions
 lag submissions.
+
+Launch prologue (both backends): the per-launch clock ``launch_steps`` and
+the no-progress counter are zeroed, the launch counter ``epoch`` advances,
+and active task-queue arrivals are rebased onto the fresh launch clock
+(scheduler.rebase_arrivals).  The superstep budget bounds ``launch_steps``
+— a PER-LAUNCH quantity — so the quit/relaunch cycle can repeat forever;
+the cumulative ``supersteps`` epoch clock is observability-only.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from .scheduler import (
     Mailbox,
     SharedTables,
     rank_superstep,
+    rebase_arrivals,
 )
 from .state import DaemonState
 from .tables import StaticTables
@@ -175,16 +183,21 @@ def _sim_daemon_jit(cfg: OcclConfig) -> Callable:
             inbox = _sim_exchange(fwd_src, rev_src, outbox)
             all_drained = jnp.all(jax.vmap(_drained)(st))
             quit_now = jnp.min(st.no_prog) >= cfg.quit_threshold
-            over_budget = st.supersteps[0] >= cfg.superstep_budget
+            over_budget = st.launch_steps[0] >= cfg.superstep_budget
             live = ~(all_drained | quit_now | over_budget)
             st = st._replace(
                 global_live=jnp.broadcast_to(live, st.global_live.shape))
             return st, inbox
 
+        # Launch prologue: fresh launch clock + epoch tick + bounded
+        # queue-age rebase (see module docstring).
         st = st._replace(
             global_live=jnp.ones_like(st.global_live),
             no_prog=jnp.zeros_like(st.no_prog),
+            launch_steps=jnp.zeros_like(st.launch_steps),
+            epoch=st.epoch + 1,
         )
+        st = rebase_arrivals(st)
         inbox = _load_mailbox(st)
         st, inbox = jax.lax.while_loop(cond, body, (st, inbox))
         return _store_mailbox(st, inbox)
@@ -278,14 +291,18 @@ def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
             stuck = jnp.all(
                 jax.lax.all_gather(st.no_prog >= cfg.quit_threshold,
                                    axis_name))
-            over = st.supersteps >= cfg.superstep_budget
+            over = st.launch_steps >= cfg.superstep_budget
             st = st._replace(global_live=~(drained | stuck | over))
             return st, inbox
 
+        # Launch prologue (per-device): same clock reset as the sim backend.
         st = st._replace(
             global_live=jnp.ones_like(st.global_live),
             no_prog=jnp.zeros_like(st.no_prog),
+            launch_steps=jnp.zeros_like(st.launch_steps),
+            epoch=st.epoch + 1,
         )
+        st = rebase_arrivals(st)
         st, inbox = jax.lax.while_loop(cond, body, (st, _load_mailbox(st)))
         return _store_mailbox(st, inbox)
 

@@ -13,7 +13,9 @@ lengths at fetch time.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -39,11 +41,19 @@ class RegistrationClosed(RuntimeError):
 
 
 class DeadlockTimeout(RuntimeError):
-    """drive() exhausted its relaunch budget with work still outstanding.
+    """drive() saw ``max_launches`` consecutive launches with NO progress
+    (no completions reconciled and no slices moved) while work was still
+    outstanding.
 
     With OCCL this means some member rank never submitted a matching
     collective (an application bug), NOT an ordering deadlock — inconsistent
-    orders are handled by preemption."""
+    orders are handled by preemption.  Launches that make progress do not
+    consume the budget: a long-lived workload may relaunch the daemon an
+    unbounded number of times (the superstep budget is per launch)."""
+
+
+class ConnDepthWarning(UserWarning):
+    """conn_depth is too shallow to sustain the configured slice burst."""
 
 
 class OcclRuntime:
@@ -62,6 +72,13 @@ class OcclRuntime:
         self._state: Optional[DaemonState] = None
         self.queues = HostQueues(cfg)
         self.launches = 0
+        # Per-launch bookkeeping (relaunch observability): one record per
+        # launch_once with the device epoch, the supersteps the launch ran,
+        # the slices it moved and the completions it reconciled.  Bounded:
+        # a long-lived runtime relaunches indefinitely, so only the most
+        # recent window is kept (aggregates live in the device counters).
+        self.launch_history: collections.deque = collections.deque(
+            maxlen=1024)
 
     # ------------------------------------------------------------------
     # registration (paper Sec. 3.1.1)
@@ -108,6 +125,16 @@ class OcclRuntime:
     # ------------------------------------------------------------------
     def _ensure_built(self):
         if self._tables is None:
+            if (self.cfg.burst_slices > 1
+                    and self.cfg.conn_depth < 3 * self.cfg.burst_slices):
+                warnings.warn(
+                    f"conn_depth={self.cfg.conn_depth} < 3 * burst_slices="
+                    f"{3 * self.cfg.burst_slices}: the connector cannot "
+                    "cover the burst credit round trip, so sustained "
+                    "throughput relaxes to the 1-slice/superstep "
+                    "equilibrium (no faster than burst_slices=1).  Set "
+                    "conn_depth >= 3 * burst_slices or auto_conn_depth=True.",
+                    ConnDepthWarning, stacklevel=3)
             self._tables = build_tables(self.cfg, self.comms, self.specs)
             if self.mesh is None:
                 self._daemon = build_sim_daemon(self.cfg, self._tables)
@@ -236,24 +263,44 @@ class OcclRuntime:
     def launch_once(self) -> int:
         """One daemon launch; returns #CQEs drained (may be 0)."""
         self._ensure_built()
+        prev_slices = int(np.asarray(self._state.slices_moved).sum())
         st = self.queues.pack_sq(self._state)
         st = self._daemon(st)
         st = jax.block_until_ready(st)
         self.launches += 1
         self._state = st
-        return self.queues.reconcile(st)
+        fired = self.queues.reconcile(st)
+        self.launch_history.append({
+            "epoch": int(np.asarray(st.epoch).max()),
+            "launch_steps": int(np.asarray(st.launch_steps).max()),
+            "slices_moved": int(np.asarray(st.slices_moved).sum())
+                            - prev_slices,
+            "completions": fired,
+        })
+        return fired
 
     def drive(self, max_launches: int = 64) -> None:
-        """Event-driven daemon restarting: run while #CQE < #SQE (Sec. 3.1.3)."""
-        for _ in range(max_launches):
-            if self.queues.outstanding() == 0:
-                return
+        """Event-driven daemon restarting: run while #CQE < #SQE (Sec. 3.1.3).
+
+        ``max_launches`` bounds CONSECUTIVE launches without progress (no
+        completions reconciled and no slices moved), not total launches: a
+        workload whose span exceeds ``superstep_budget`` legitimately needs
+        many launches, and each one that advances work resets the patience.
+        """
+        idle = 0
+        while self.queues.outstanding() != 0:
             self.launch_once()
-        if self.queues.outstanding() != 0:
-            raise DeadlockTimeout(
-                f"{self.queues.outstanding()} collectives outstanding after "
-                f"{max_launches} daemon launches — a member rank never "
-                f"submitted a matching collective")
+            rec = self.launch_history[-1]
+            if rec["completions"] == 0 and rec["slices_moved"] == 0:
+                idle += 1
+            else:
+                idle = 0
+            if idle >= max_launches:
+                raise DeadlockTimeout(
+                    f"{self.queues.outstanding()} collectives outstanding "
+                    f"after {idle} consecutive daemon launches without "
+                    f"progress ({self.launches} total) — a member rank "
+                    f"never submitted a matching collective")
 
     # ------------------------------------------------------------------
     # observability (paper Fig. 9)
@@ -263,12 +310,21 @@ class OcclRuntime:
         st = self._state
         return {
             "preempts": np.asarray(st.preempts),          # [R, C]
+            "stall_slices": np.asarray(st.stall_slices),  # [R, C] — burst
+                                                          # slices denied by
+                                                          # the credit gate
             "qlen_at_fetch": np.asarray(st.qlen_at_fetch),
             "completed": np.asarray(st.completed),
-            "supersteps": np.asarray(st.supersteps),
+            "supersteps": np.asarray(st.supersteps),      # cumulative epoch
+                                                          # clock (never
+                                                          # reset)
+            "launch_steps": np.asarray(st.launch_steps),  # last launch only
+            "epoch": np.asarray(st.epoch),                # device launch
+                                                          # counter
             "slices_moved": np.asarray(st.slices_moved),
             "cq_count": np.asarray(st.cq_count),          # [R] — may exceed
                                                           # cq_len (ring CQ)
             "burst_slices": self.cfg.burst_slices,
             "launches": self.launches,
+            "launch_history": list(self.launch_history),
         }

@@ -43,7 +43,35 @@ trip (commit, consume, credit-return), so K should be >= ~3B.  With a
 shallower connector the ring saturates (in-flight == K) and relaxes into
 the 1-slice/superstep credit-return equilibrium: still correct and
 deadlock-free, just no faster than B = 1 (benchmarks/bench_collectives.py
-uses conn_depth=32 for the B in {1, 4, 8} sweep).
+uses conn_depth=32 for the B in {1, 4, 8} sweep; ``cfg.auto_conn_depth``
+derives the bound automatically, and the runtime warns at registration
+time when it is not met).
+
+Launch-epoch clock + burst-aware stall accounting
+-------------------------------------------------
+Scheduling decisions are measured against the PER-LAUNCH clock
+``st.launch_steps`` (zeroed in the daemon prologue), never the cumulative
+``st.supersteps`` epoch clock:
+
+* **Queue age.**  :func:`rebase_arrivals` (called from the prologue)
+  compresses every active collective's ``arrival`` to its queue rank, a
+  value < C; fetches and rotations during the launch stamp
+  ``C + launch_steps``.  Arrival keys are therefore bounded by
+  ``C + superstep_budget + 2`` per launch — validated in config to sit
+  below ``QUEUE_KEY_DEMAND_STRIDE`` so the demand bonus and the PRIORITY
+  class stride (``QUEUE_KEY_PRIO_STRIDE``) cannot bleed into the FIFO age
+  no matter how many cumulative supersteps the runtime has executed.
+
+* **Stall units.**  On a zero-progress superstep ``spin`` advances by the
+  slices the credit gate DENIED (``min(B, room) - quota``, floored at 1),
+  not by 1 per superstep; any partial grant still resets ``spin`` to 0
+  (progress), exactly like the seed.  At B = 1 the two accountings are
+  identical; at B > 1 a fully-stalled lane reaches its spin threshold up
+  to B× sooner, so under contention the lane multiplexes between
+  collectives at the same *slice* cadence it executes them, instead of
+  wasting B-wide supersteps spinning.  Denied slices — including partial
+  denials on supersteps that did move some slices — accumulate in
+  ``st.stall_slices`` (per collective) for Fig. 9-style observability.
 
 Everything is branch-free fixed-shape array code so the loop compiles into
 a single long-running XLA program — the daemon-kernel analogue.
@@ -56,13 +84,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import OcclConfig, OrderPolicy, ReduceOp
+from .config import (
+    QUEUE_KEY_DEMAND_STRIDE,
+    QUEUE_KEY_PRIO_STRIDE,
+    OcclConfig,
+    OrderPolicy,
+    ReduceOp,
+)
 from . import primitives as P
 from .primitives import Prim
 from .state import DaemonState
 
-# Queue-key stride between priority classes (arrival stays below this).
-_BIG = jnp.int32(1 << 20)
+# Queue-key stride between priority classes (per-launch arrival + demand
+# bonus stay below this; see config.py for the class-separation proof).
+_BIG = jnp.int32(QUEUE_KEY_PRIO_STRIDE)
+_DEMAND = jnp.int32(QUEUE_KEY_DEMAND_STRIDE)
 
 # Primitive action-flag lookups as device arrays (indexable by tracers).
 PRIM_RECV = jnp.asarray(P.PRIM_RECV)
@@ -141,7 +177,7 @@ def _lane_keys(cfg, st, shared, local):
         # this collective; steering toward it is the fastest decentralized
         # gang-convergence signal available (beyond-paper policy).
         demand = (st.tail < st.head_mirror).astype(jnp.int32)
-        key = key - demand[None, :] * (jnp.int32(1) << 18)
+        key = key - demand[None, :] * _DEMAND
     if cfg.order_policy == OrderPolicy.PRIORITY:
         # Higher priority first; FIFO (+demand) within equal priority.
         key = (-st.prio[None, :]) * _BIG + key
@@ -167,6 +203,25 @@ def _thresholds(cfg, st, pos):
     else:
         base = jnp.full_like(pos, cfg.spin_base)
     return jnp.clip(base, cfg.spin_min, cfg.spin_max)
+
+
+def rebase_arrivals(st: DaemonState) -> DaemonState:
+    """Launch prologue: re-express queue age on the fresh launch clock.
+
+    Active collectives keep their relative order but their ``arrival``
+    values are compressed to queue ranks (< C, ties broken by lowest
+    collective id exactly like the key argmin); inactive slots reset to 0.
+    New fetches/rotations during the launch stamp ``C + launch_steps``, so
+    carryover work always sorts ahead of work that arrives later — the
+    same order the unbounded epoch clock produced, now bounded per launch.
+
+    Operates on the last axis, so it works on both the per-rank [C] state
+    (mesh backend) and the batched [R, C] state (sim backend).
+    """
+    key = jnp.where(st.tq_active, st.arrival, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, axis=-1)
+    ranks = jnp.argsort(order, axis=-1).astype(jnp.int32)
+    return st._replace(arrival=jnp.where(st.tq_active, ranks, 0))
 
 
 def apply_inbox(cfg: OcclConfig, st: DaemonState, inbox: Mailbox
@@ -219,8 +274,9 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     st = st._replace(
         tq_active=st.tq_active.at[c].set(jnp.where(ok, True, st.tq_active[c])),
         inflight=st.inflight.at[c].set(jnp.where(ok, True, st.inflight[c])),
+        # Launch-clock queue age: behind every rebased carryover (< C).
         arrival=st.arrival.at[c].set(
-            jnp.where(ok, st.supersteps, st.arrival[c])),
+            jnp.where(ok, cfg.max_colls + st.launch_steps, st.arrival[c])),
         prio=st.prio.at[c].set(jnp.where(
             ok, jnp.clip(st.sq_prio[slot], -512, 512), st.prio[c])),
         in_off=st.in_off.at[c].set(jnp.where(
@@ -277,7 +333,8 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         overspun.astype(jnp.int32)) > 0
     st = st._replace(
         preempts=st.preempts + rot.astype(st.preempts.dtype),
-        arrival=jnp.where(rot, st.supersteps + 1, st.arrival),
+        arrival=jnp.where(rot, cfg.max_colls + st.launch_steps + 1,
+                          st.arrival),
         spin=jnp.where(rot, 0, st.spin),
         boost=jnp.where(rot, 0, st.boost),
     )
@@ -312,6 +369,12 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
                           needs_recv, needs_send)
     gate = valid & (prim != Prim.NULL) & (quota > 0)
     n = jnp.where(gate, quota, 0)                           # [L] burst size
+    # Burst-aware stall accounting: the slices this lane WANTED (a full
+    # burst, capped by the primitive step) minus the slices the credit
+    # gate granted, floored at one so a stalled B = 1 superstep advances
+    # spin by exactly 1 — bit-identical to the seed superstep counting.
+    want = jnp.minimum(jnp.int32(B), jnp.maximum(nsl - sl, 1))
+    stalled = jnp.maximum(want - n, 1)                      # [L] denied
 
     # --- execute the fused actions on the burst (paper Fig. 3) -----------
     slots = (st.tail[c][:, None] + bidx[None, :]) % K       # [L, B] ring read
@@ -394,7 +457,13 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         ctx_slice=st.ctx_slice.at[cg].set(next_slice, mode="drop"),
         ctx_round=st.ctx_round.at[cg].set(next_round, mode="drop"),
         spin=st.spin.at[cv].set(
-            jnp.where(gate, 0, st.spin[c] + 1), mode="drop"),
+            jnp.where(gate, 0, st.spin[c] + stalled), mode="drop"),
+        # The observability counter also records PARTIAL denials (want - n
+        # on gated lanes): a persistently credit-starved lane shows its
+        # true starvation even though partial progress resets spin.
+        stall_slices=st.stall_slices.at[cv].add(
+            jnp.where(gate, jnp.maximum(want - n, 0), stalled),
+            mode="drop"),
         # Stickiness: a successful primitive boosts its successors' spin
         # thresholds (gang-convergence pressure, Sec. 3.2).
         boost=st.boost.at[c].add(
@@ -443,6 +512,7 @@ def rank_superstep(cfg: OcclConfig, shared: SharedTables, local: LocalTables,
     progress = moved_any | fetched
     st = st._replace(
         supersteps=st.supersteps + 1,
+        launch_steps=st.launch_steps + 1,
         no_prog=jnp.where(progress, 0, st.no_prog + 1),
         made_prog_prev=moved_any,
     )

@@ -47,6 +47,15 @@ class HostQueues:
         ]
         self.submitted = np.zeros(cfg.n_ranks, np.int64)
         self.completed = np.zeros(cfg.n_ranks, np.int64)
+        # Relaunch bookkeeping: reconcile() is called once per daemon
+        # launch; ``launch_completions`` holds the completions each recent
+        # launch contributed (bounded window — long-lived runtimes
+        # relaunch indefinitely) and ``reconciles`` the total launch count
+        # (host-side mirror of the device's epoch counter, useful for
+        # spotting one-superstep launches).
+        self.reconciles = 0
+        self.launch_completions: collections.deque = collections.deque(
+            maxlen=1024)
         # Last-seen snapshot of the device's cumulative per-(rank, coll)
         # completion counters; reconcile() consumes the delta, so every
         # completion is accounted even when the CQ ring wraps more than
@@ -128,6 +137,8 @@ class HostQueues:
                 if cbs:
                     cbs.popleft()(r, int(c))
             self._completed_seen[r] = comp[r]
+        self.reconciles += 1
+        self.launch_completions.append(fired)
         return fired
 
     def outstanding(self) -> int:

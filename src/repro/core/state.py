@@ -72,10 +72,23 @@ class DaemonState(NamedTuple):
     mb_rev_coll: jnp.ndarray    # [L] i32
 
     # --- counters / lifecycle --------------------------------------------
+    # Launch-epoch clock: ``supersteps`` is the cumulative epoch clock
+    # (never reset; observability only), ``launch_steps`` is the per-launch
+    # clock (zeroed in the daemon prologue) that the superstep budget and
+    # the task-queue arrival keys are measured against, and ``epoch``
+    # counts daemon launches.  Only the launch clock feeds scheduling
+    # decisions, so no decision ever depends on how long the runtime has
+    # been alive.
     completed: jnp.ndarray     # [C] i32 — completions (repeat submissions)
     preempts: jnp.ndarray      # [C] i32 — context switches (Fig. 9)
+    stall_slices: jnp.ndarray  # [C] i32 — burst slices denied by credit
+                               #   gating, counting partial denials (stall
+                               #   accounting; spin advances by these units
+                               #   on zero-progress supersteps)
     qlen_at_fetch: jnp.ndarray # [C] i32 — task-queue length at SQE fetch (Fig. 9)
-    supersteps: jnp.ndarray    # [] i32
+    supersteps: jnp.ndarray    # [] i32 — cumulative epoch clock
+    launch_steps: jnp.ndarray  # [] i32 — per-launch clock (budget domain)
+    epoch: jnp.ndarray         # [] i32 — daemon launch counter
     no_prog: jnp.ndarray       # [] i32 — consecutive no-progress supersteps
     made_prog_prev: jnp.ndarray  # [] bool — lazy-fetch gate input
     slices_moved: jnp.ndarray  # [] i32 — work counter (bandwidth accounting)
@@ -120,8 +133,9 @@ def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
         mb_fwd_payload=z((L, B, SL), dt),
         mb_rev_count=z((L,)),
         mb_rev_coll=z((L,)),
-        completed=z((C,)), preempts=z((C,)), qlen_at_fetch=z((C,)),
-        supersteps=z(()), no_prog=z(()),
+        completed=z((C,)), preempts=z((C,)), stall_slices=z((C,)),
+        qlen_at_fetch=z((C,)),
+        supersteps=z(()), launch_steps=z(()), epoch=z(()), no_prog=z(()),
         made_prog_prev=z((), jnp.bool_, False),
         slices_moved=z(()),
         global_live=z((), jnp.bool_, True),

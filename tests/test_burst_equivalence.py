@@ -13,6 +13,11 @@ import pytest
 
 from repro.core import CollKind, OcclConfig, OcclRuntime, OrderPolicy
 
+# These configs use shallow connectors ON PURPOSE (the credit-return
+# equilibrium is part of the semantics under test, not a perf target).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.core.runtime.ConnDepthWarning")
+
 KINDS = [CollKind.ALL_REDUCE, CollKind.ALL_GATHER, CollKind.REDUCE_SCATTER,
          CollKind.BROADCAST, CollKind.REDUCE]
 GROUP_SIZES = [1, 2, 4]

@@ -47,6 +47,37 @@ def test_ring_holds_most_recent_completions():
     assert sorted(int(c) for c in cq) == ids[4:]
 
 
+def test_wrapped_ring_multiple_callbacks_per_collective_fifo():
+    """One launch, cq_len=2, three collectives each submitted three times:
+    the ring wraps several times, so most completions reconcile as
+    counter-only "lost" entries — yet every submission's callback fires
+    exactly once and, PER COLLECTIVE, in submission (FIFO) order.  (Order
+    ACROSS collectives is unrecoverable for lost completions; per-coll
+    FIFO is the contract the callback deques guarantee.)"""
+    repeats = 3
+    rt, ids = _runtime(cq_len=2, n_colls=3)
+    fired = {cid: [] for cid in ids}
+    data = {}
+    for i in range(repeats):
+        for cid in ids:
+            data[(cid, i)] = np.full(4, float(10 * cid + i + 1), np.float32)
+            rt.submit(0, cid, data=data[(cid, i)],
+                      callback=lambda r, c, i=i: fired[c].append(i))
+    # All 9 completions in ONE launch (head-of-line resubmission works
+    # within a launch: a finished collective is refetched from the SQ).
+    assert rt.launch_once() == repeats * len(ids)
+    assert int(np.asarray(rt.state.cq_count)[0]) == repeats * len(ids)
+    for cid in ids:
+        assert fired[cid] == list(range(repeats))
+        # Last submission's buffer won the heap (FIFO re-execution).
+        np.testing.assert_array_equal(rt.read_output(0, cid),
+                                      data[(cid, repeats - 1)])
+    assert rt.queues.outstanding() == 0
+    # Relaunch bookkeeping: one reconcile, accounting all 9 completions.
+    assert rt.queues.reconciles == 1
+    assert list(rt.queues.launch_completions) == [repeats * len(ids)]
+
+
 def test_wrap_across_multiple_launches():
     """Cumulative-counter reconciliation survives repeated wrapping."""
     rt, ids = _runtime(cq_len=2, n_colls=6)

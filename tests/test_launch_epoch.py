@@ -1,0 +1,253 @@
+"""Launch-epoch scheduler clock: the superstep budget is PER LAUNCH, queue
+keys are bounded per launch (no i32 class bleed at any runtime age), spin
+advances by stalled slices, and the conn_depth burst guard fires.
+
+Regression background: the seed compared the cumulative ``supersteps``
+clock against ``superstep_budget``, so once the runtime had executed the
+budget's worth of supersteps across its lifetime, EVERY later launch
+exited after one superstep and ``drive()`` raised spurious
+``DeadlockTimeout`` — fatal for long-lived serving.  The same unbounded
+clock fed the task-queue arrival keys, whose priority stride is only
+``1 << 20``.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, ConnDepthWarning, OcclConfig, OcclRuntime,
+                        OrderPolicy)
+from repro.core.config import QUEUE_KEY_DEMAND_STRIDE
+from repro.core.scheduler import rebase_arrivals
+from repro.core.state import init_state
+
+
+# ---------------------------------------------------------------------------
+# per-launch superstep budget (the tentpole regression)
+# ---------------------------------------------------------------------------
+
+def test_budget_is_per_launch_across_many_launches():
+    """drive() keeps completing work after the CUMULATIVE superstep count
+    exceeds superstep_budget: each launch gets a fresh budget, launches
+    stay multi-superstep, and no spurious DeadlockTimeout fires."""
+    budget = 64
+    cfg = OcclConfig(n_ranks=4, max_colls=4, max_comms=1, slice_elems=4,
+                     conn_depth=4, heap_elems=1 << 13,
+                     superstep_budget=budget, quit_threshold=budget)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(4)))
+    # ~126 supersteps per iteration (7 prims x 3 slices x 6 rounds) — each
+    # drive() needs >= 2 launches at budget 64.
+    cid = rt.register(CollKind.ALL_REDUCE, comm, n_elems=256)
+    rng = np.random.RandomState(0)
+    for it in range(3):
+        xs = [rng.randn(256).astype(np.float32) for _ in range(4)]
+        for r in range(4):
+            rt.submit(r, cid, data=xs[r])
+        rt.drive()                      # must NOT raise DeadlockTimeout
+        want = np.sum(xs, axis=0)
+        for r in range(4):
+            np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                       rtol=1e-4)
+    st = rt.stats()
+    total = int(st["supersteps"].max())
+    assert total > 2 * budget           # cumulative clock far past budget
+    assert rt.launches >= 3
+    # The regression signature was one-superstep launches once the
+    # cumulative clock passed the budget: every launch would then consume
+    # a relaunch, needing ~total supersteps worth of launches.  With the
+    # per-launch clock a handful of full-budget launches suffice.
+    assert rt.launches <= 3 * (total // budget + 2)
+    for rec in rt.stats()["launch_history"]:
+        assert rec["launch_steps"] <= budget
+    # Device-side launch counter mirrors the host's.
+    assert int(st["epoch"].max()) == rt.launches
+
+
+def test_launch_clock_resets_while_epoch_clock_accumulates():
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=512)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    ar = rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    steps_seen = []
+    for it in range(3):
+        for r in range(2):
+            rt.submit(r, ar, data=np.ones(8, np.float32))
+        rt.drive()
+        st = rt.stats()
+        steps_seen.append(int(st["supersteps"].max()))
+        # launch_steps is the LAST launch's clock — bounded by the budget,
+        # not by the runtime's age.
+        assert int(st["launch_steps"].max()) <= cfg.superstep_budget
+    assert steps_seen == sorted(steps_seen)      # cumulative, monotonic
+    assert steps_seen[-1] > steps_seen[0]
+
+
+# ---------------------------------------------------------------------------
+# bounded queue keys / arrival rebase
+# ---------------------------------------------------------------------------
+
+def test_rebase_arrivals_bounds_and_preserves_order():
+    cfg = OcclConfig(n_ranks=1, max_colls=8, max_comms=1)
+    st = init_state(cfg, per_rank=False)
+    active = np.zeros(8, bool)
+    arrival = np.zeros(8, np.int32)
+    # Huge arrivals (>= 1 << 20) as an aged runtime would have produced.
+    for c, a in [(2, (1 << 20) + 5), (5, 3), (7, (1 << 30) + 1)]:
+        active[c] = True
+        arrival[c] = a
+    st = st._replace(tq_active=np.asarray(active),
+                     arrival=np.asarray(arrival))
+    got = np.asarray(rebase_arrivals(st).arrival)
+    assert got[5] == 0 and got[2] == 1 and got[7] == 2   # order kept
+    assert got.max() < cfg.max_colls                     # bounded
+    assert all(got[c] == 0 for c in range(8) if not active[c])
+
+
+def test_arrivals_stay_bounded_over_many_launches():
+    budget = 64
+    cfg = OcclConfig(n_ranks=2, max_colls=4, max_comms=1, slice_elems=4,
+                     conn_depth=4, heap_elems=1 << 13,
+                     superstep_budget=budget)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    cid = rt.register(CollKind.ALL_REDUCE, cm, n_elems=128)
+    for _ in range(4):
+        for r in range(2):
+            rt.submit(r, cid, data=np.ones(128, np.float32))
+        rt.drive()
+    arr = np.asarray(rt.state.arrival)
+    assert arr.max() < cfg.max_colls + budget + 2
+    assert arr.max() < QUEUE_KEY_DEMAND_STRIDE           # no class bleed
+
+
+def test_priority_and_demand_survive_huge_legacy_arrivals():
+    """Queue-key classes survive arrival values >= 1 << 20: after the
+    prologue rebase, a poisoned carryover arrival can neither demote a
+    collective out of its priority class (stride 1 << 20) nor defeat the
+    demand-steering bonus (1 << 18) — both of which the unbounded epoch
+    clock silently corrupted."""
+    import jax
+    from repro.core.daemon import local_tables, shared_tables
+    from repro.core.scheduler import _lane_keys
+
+    cfg = OcclConfig(n_ranks=2, max_colls=4, max_comms=1, slice_elems=4,
+                     conn_depth=2, heap_elems=1 << 13,
+                     order_policy=OrderPolicy.PRIORITY, quit_threshold=8)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    lo = rt.register(CollKind.ALL_REDUCE, cm, n_elems=32)
+    hi = rt.register(CollKind.ALL_REDUCE, cm, n_elems=32)
+    # Strand both on rank 0 (peer missing) so they become carryover queue
+    # entries, then poison hi's arrival as if it had been queued for ~6M
+    # cumulative supersteps (6 full priority strides).
+    rt.submit(0, lo, prio=0, data=np.ones(32, np.float32))
+    rt.submit(0, hi, prio=5, data=np.ones(32, np.float32))
+    assert rt.launch_once() == 0
+    assert bool(np.asarray(rt.state.tq_active)[0, hi])
+    rt._state = rt.state._replace(
+        arrival=rt.state.arrival.at[0, hi].set(6 << 20))
+
+    def rank0_front(st):
+        st0 = jax.tree_util.tree_map(lambda a: a[0], st)
+        lt0 = jax.tree_util.tree_map(lambda a: a[0],
+                                     local_tables(rt._tables))
+        eligible, key = _lane_keys(cfg, st0, shared_tables(rt._tables), lt0)
+        assert bool(eligible[0, lo]) and bool(eligible[0, hi])
+        return int(np.argmin(np.asarray(key)[0]))
+
+    # PRIORITY: hi (prio 5) must outrank lo despite the poisoned arrival.
+    st = rebase_arrivals(rt.state)
+    assert rank0_front(st) == hi
+
+    # Demand steering: with equal priorities, queued recv-connector data
+    # must steer the lane toward the demanded collective even when its
+    # raw arrival was poisoned 6 strides past the bonus.
+    st = rt.state._replace(
+        arrival=rt.state.arrival.at[0, lo].set(6 << 20)
+                                .at[0, hi].set(0),
+        prio=rt.state.prio.at[0, hi].set(0),
+        head_mirror=rt.state.head_mirror.at[0, lo].set(1))
+    assert rank0_front(rebase_arrivals(st)) == lo
+
+    # End-to-end: the poisoned runtime still drains once the peer submits.
+    rt.submit(1, lo, prio=0, data=np.ones(32, np.float32))
+    rt.submit(1, hi, prio=5, data=np.ones(32, np.float32))
+    rt.drive()
+    assert rt.queues.outstanding() == 0
+    np.testing.assert_allclose(rt.read_output(0, lo), 2 * np.ones(32),
+                               rtol=1e-5)
+
+
+def test_budget_validation_rejects_key_overflow():
+    with pytest.raises(AssertionError, match="superstep_budget"):
+        OcclConfig(superstep_budget=1 << 18)
+
+
+# ---------------------------------------------------------------------------
+# burst-aware stall accounting + conn_depth guard
+# ---------------------------------------------------------------------------
+
+def _adversarial_contention(burst: int):
+    """8 ranks, 8 all-reduces, one lane, pairwise-different orders — the
+    EXACT workload builder the contention benchmark records, so this test
+    guards the benchmarked regime (smaller slices for test speed)."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    from bench_collectives import build_contention_runtime
+    rt = build_contention_runtime(burst, n=256, slice_elems=8)
+    rt.drive(max_launches=128)
+    return rt.stats()
+
+
+def test_contention_burst8_beats_burst1():
+    """The ROADMAP-measured gap: with superstep-counting spin, adversarial
+    contention at B=8 ran at B=1 superstep parity.  Burst-aware stall
+    accounting (spin += denied slices) must recover a real superstep win,
+    and the stall counters must be observable."""
+    s1 = _adversarial_contention(1)
+    s8 = _adversarial_contention(8)
+    assert int(s1["slices_moved"].sum()) == int(s8["slices_moved"].sum())
+    assert int(s8["supersteps"].max()) < 0.7 * int(s1["supersteps"].max())
+    assert int(s8["stall_slices"].sum()) > 0
+    assert int(s8["preempts"].sum()) > 0
+    assert s8["stall_slices"].shape == s8["preempts"].shape  # [R, C]
+
+
+def test_stall_accounting_is_superstep_counting_at_burst1():
+    """At B=1 a stalled superstep denies exactly one slice, so the stall
+    counter equals what the seed's +1-per-superstep spin would have
+    accumulated; sanity: stalls happen and stay per-collective."""
+    st = _adversarial_contention(1)
+    assert int(st["stall_slices"].sum()) > 0
+
+
+def test_conn_depth_guard_warns_and_auto_derives():
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
+                     conn_depth=4, burst_slices=8, heap_elems=512)
+    rt = OcclRuntime(cfg)
+    cm = rt.communicator([0, 1])
+    rt.register(CollKind.ALL_REDUCE, cm, n_elems=8)
+    with pytest.warns(ConnDepthWarning):
+        rt._ensure_built()
+
+    auto = OcclConfig(conn_depth=4, burst_slices=8, auto_conn_depth=True)
+    assert auto.conn_depth == 24                 # max(conn_depth, 3B)
+    deep = OcclConfig(conn_depth=32, burst_slices=8, auto_conn_depth=True)
+    assert deep.conn_depth == 32                 # never shrinks
+
+    rt2 = OcclRuntime(OcclConfig(n_ranks=2, max_colls=2, max_comms=1,
+                                 slice_elems=4, conn_depth=4, burst_slices=8,
+                                 auto_conn_depth=True, heap_elems=512))
+    cm2 = rt2.communicator([0, 1])
+    cid = rt2.register(CollKind.ALL_REDUCE, cm2, n_elems=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ConnDepthWarning)
+        for r in range(2):
+            rt2.submit(r, cid, data=np.ones(8, np.float32))
+        rt2.drive()                              # no warning: depth derived
+    np.testing.assert_allclose(rt2.read_output(0, cid), 2 * np.ones(8),
+                               rtol=1e-5)
