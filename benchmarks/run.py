@@ -25,6 +25,10 @@ def main(quick: bool = False) -> None:
         bench_collectives.run(sizes=(64,), iters=1)
         bench_collectives.run_burst_sweep(bursts=(1, 8), n=8192, iters=1)
         bench_collectives.run_contention_sweep(bursts=(1, 8), n=1024)
+        # Staging engine vs the pre-PR bulk/scalar paths at the headline
+        # 8-rank / 16k-elem point (CI smoke keeps the full workload: the
+        # speedup is the acceptance-tracked number).
+        bench_collectives.run_staging_bench(iters=10)
         return
     import bench_overheads
     bench_overheads.run(sizes=(64, 1024, 4096))
@@ -35,6 +39,7 @@ def main(quick: bool = False) -> None:
     # BENCH_collectives.json at the repo root.
     bench_collectives.run_burst_sweep(iters=2)
     bench_collectives.run_contention_sweep()
+    bench_collectives.run_staging_bench(iters=20)
     import bench_deadlock
     bench_deadlock.run(iters=2)
     import bench_gang

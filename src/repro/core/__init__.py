@@ -8,11 +8,12 @@ and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
 from .config import OcclConfig, OrderPolicy, ReduceOp
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
 from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
+from .staging import StagingEngine
 from .deadlock import run_static_order, consistent_order_exists
 
 __all__ = [
     "OcclConfig", "OrderPolicy", "ReduceOp",
     "CollKind", "CollectiveSpec", "Communicator", "Prim",
-    "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning",
+    "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning", "StagingEngine",
     "run_static_order", "consistent_order_exists",
 ]

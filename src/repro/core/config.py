@@ -110,6 +110,17 @@ class OcclConfig:
     # supersteps and the freed supersteps go to collectives with queued
     # demand.  At B = 1 a stalled superstep denies exactly one slice, so
     # the accounting is bit-identical to the seed superstep-counting spin.
+    queue_conditional_stall: bool = True  # weight stall units by lane queue
+                                    # length: a lane with NO other eligible
+                                    # collective queued (solo) advances spin
+                                    # by 1 per stalled superstep (preempting
+                                    # it frees nothing, so B×-eager rotation
+                                    # during the credit round trip is pure
+                                    # churn), while contended lanes keep the
+                                    # fast B-scaled denied-slice accounting.
+                                    # False restores unconditional B-scaling
+                                    # (the PR-2 behavior; ablation switch).
+                                    # At B = 1 both settings are identical.
     spin_base: int = 16             # initial threshold of queue-front coll
     spin_decr: int = 4              # threshold decrement per queue position
     spin_boost: int = 8             # boost to successors on primitive success

@@ -10,6 +10,21 @@ ordering requirement).
 The runtime also exposes the observability used in the paper's Fig. 9 case
 study: per-collective preemption (context-switch) counts and task-queue
 lengths at fetch time.
+
+Heap I/O is device-resident (staging.StagingEngine): the padded chunk
+layout of every collective is precomputed at registration
+(tables.build_tables), so ``write_input``/``write_inputs_bulk`` are one
+host->device transfer of concatenated logical payloads plus one fused
+scatter into ``heap_in`` (pad positions zero-filled in the same scatter),
+and ``read_output``/``read_outputs_bulk`` are the mirror gather out of
+``heap_out`` returning owned copies.  ``submit(..., data=...)`` does NOT
+touch the device at call time: the payload is enqueued host-side
+(HostQueues.stage) and the whole batch is flushed in the ``launch_once``
+prologue — one staging transfer per daemon launch, so per-step grad-sync
+cost scales with payload bytes instead of Python-loop iterations.  Per-SQE
+dynamic buffer offsets (``in_off``/``out_off``) are honored end to end:
+the staging engine adds the override to its relative index maps, and the
+daemon applies the same override at SQE fetch.
 """
 from __future__ import annotations
 
@@ -32,6 +47,7 @@ from .primitives import (
     io_chunked,
 )
 from .sqcq import SQE, HostQueues
+from .staging import StagingEngine
 from .state import DaemonState, init_state
 from .tables import StaticTables, build_tables
 
@@ -66,8 +82,17 @@ class OcclRuntime:
         self.mesh_axis = mesh_axis
         self.comms: list[Communicator] = []
         self.specs: list[CollectiveSpec] = []
-        self._heap_ptr = 0
+        # Separate allocation arenas for input and output buffers: in_off
+        # indexes heap_in and out_off indexes heap_out — two DIFFERENT
+        # arrays — so a shared pointer only interleaved dead holes into
+        # both address spaces.  Independent pointers pack each heap's live
+        # regions contiguously (the staging engine coalesces adjacent
+        # regions into single stacked device ops) and double the usable
+        # capacity per cfg.heap_elems.
+        self._in_ptr = 0
+        self._out_ptr = 0
         self._tables: Optional[StaticTables] = None
+        self._staging: Optional[StagingEngine] = None
         self._daemon = None
         self._state: Optional[DaemonState] = None
         self.queues = HostQueues(cfg)
@@ -93,10 +118,16 @@ class OcclRuntime:
         self.comms.append(comm)
         return comm
 
-    def _alloc(self, elems: int) -> int:
-        off = self._heap_ptr
-        self._heap_ptr += elems
-        assert self._heap_ptr <= self.cfg.heap_elems, "raise cfg.heap_elems"
+    def _alloc_in(self, elems: int) -> int:
+        off = self._in_ptr
+        self._in_ptr += elems
+        assert self._in_ptr <= self.cfg.heap_elems, "raise cfg.heap_elems"
+        return off
+
+    def _alloc_out(self, elems: int) -> int:
+        off = self._out_ptr
+        self._out_ptr += elems
+        assert self._out_ptr <= self.cfg.heap_elems, "raise cfg.heap_elems"
         return off
 
     def register(self, kind: CollKind, comm: Communicator, n_elems: int,
@@ -111,8 +142,8 @@ class OcclRuntime:
         chunk = rounds * ns * self.cfg.slice_elems
         padded = comm.size * chunk
         inc, outc = io_chunked(kind)
-        in_off = self._alloc(padded if inc else chunk)
-        out_off = self._alloc(padded if outc else chunk)
+        in_off = self._alloc_in(padded if inc else chunk)
+        out_off = self._alloc_out(padded if outc else chunk)
         spec = CollectiveSpec(
             coll_id=cid, kind=kind, comm=comm, n_elems=n_elems, op=int(op),
             root=root, in_off=in_off, out_off=out_off, n_slices=ns,
@@ -136,6 +167,7 @@ class OcclRuntime:
                     "conn_depth >= 3 * burst_slices or auto_conn_depth=True.",
                     ConnDepthWarning, stacklevel=3)
             self._tables = build_tables(self.cfg, self.comms, self.specs)
+            self._staging = StagingEngine(self.cfg, self._tables)
             if self.mesh is None:
                 self._daemon = build_sim_daemon(self.cfg, self._tables)
             else:
@@ -155,104 +187,122 @@ class OcclRuntime:
     def _spec(self, coll_id: int) -> CollectiveSpec:
         return self.specs[coll_id]
 
-    def _chunk_layout(self, spec: CollectiveSpec):
-        sl = self.cfg.slice_elems
-        chunk_pad = spec.n_rounds * spec.n_slices * sl
-        chunk_log = -(-spec.n_elems // spec.group_size)  # ceil
-        return chunk_pad, chunk_log
+    def _resolve_off(self, coll_id: int, off: Optional[int], default: int,
+                     span: int, name: str) -> int:
+        """Default (None / -1 sentinel) or per-SQE-override base offset;
+        overrides are bounds-checked and negatives other than the -1
+        sentinel are rejected (an underflowed offset silently landing on
+        the registered default is the silent-ignore bug class this layer
+        exists to close)."""
+        if off is None or off == -1:
+            return default
+        if off < 0 or off + span > self.cfg.heap_elems:
+            raise ValueError(
+                f"collective {coll_id}: {name} override {off} + padded "
+                f"span {span} outside [0, heap_elems={self.cfg.heap_elems})")
+        return off
 
-    def write_input(self, rank: int, coll_id: int, data: np.ndarray) -> None:
-        """Place logical input data into the rank's heap (padded layout)."""
+    def _resolve_in_off(self, coll_id: int, off: Optional[int]) -> int:
+        return self._resolve_off(coll_id, off, self._spec(coll_id).in_off,
+                                 int(self._tables.in_span[coll_id]),
+                                 "in_off")
+
+    def _resolve_out_off(self, coll_id: int, off: Optional[int]) -> int:
+        return self._resolve_off(coll_id, off, self._spec(coll_id).out_off,
+                                 int(self._tables.out_span[coll_id]),
+                                 "out_off")
+
+    def write_input(self, rank: int, coll_id: int, data: np.ndarray,
+                    in_off: Optional[int] = None) -> None:
+        """Place logical input data into the rank's heap (padded layout,
+        pad positions zero-filled).  Supersedes any payload staged at the
+        same buffer by an earlier ``submit(..., data=...)``."""
         self._ensure_built()
-        spec = self._spec(coll_id)
-        inc, _ = io_chunked(CollKind(spec.kind))
-        chunk_pad, chunk_log = self._chunk_layout(spec)
-        data = np.asarray(data).ravel()
-        if inc:
-            assert data.size == spec.n_elems
-            buf = np.zeros(spec.group_size * chunk_pad, data.dtype)
-            for k in range(spec.group_size):
-                part = data[k * chunk_log:(k + 1) * chunk_log]
-                buf[k * chunk_pad:k * chunk_pad + part.size] = part
-        else:  # all-gather: input is the rank's own chunk
-            assert data.size == chunk_log, (data.size, chunk_log)
-            buf = np.zeros(chunk_pad, data.dtype)
-            buf[:chunk_log] = data
-        heap = self._state.heap_in
-        heap = heap.at[rank, spec.in_off:spec.in_off + buf.size].set(
-            jnp.asarray(buf, heap.dtype))
-        self._state = self._state._replace(heap_in=heap)
+        off = self._resolve_in_off(coll_id, in_off)
+        self.queues.staged.pop((rank, coll_id, off), None)
+        self._state = self._staging.write(
+            self._state, [(rank, coll_id, data, off)])
 
     def write_inputs_bulk(self, writes: dict) -> None:
-        """Batch heap writes: {(rank, coll_id): logical data} in ONE
-        host->device transfer (the per-step fast path for grad sync)."""
+        """Batch heap writes: ``{(rank, coll_id): data}`` in ONE
+        host->device transfer + one fused scatter.  To override the
+        registered offset, pass the value as an ``(ndarray, in_off)``
+        pair — the payload must be an ``np.ndarray`` in that form, so a
+        plain tuple/list of numbers is always treated as data."""
         self._ensure_built()
-        heap = np.array(self._state.heap_in)  # mutable host copy
-        for (rank, coll_id), data in writes.items():
-            spec = self._spec(coll_id)
-            inc, _ = io_chunked(CollKind(spec.kind))
-            chunk_pad, chunk_log = self._chunk_layout(spec)
-            data = np.asarray(data).ravel()
-            row = heap[rank]
-            if inc:
-                for k in range(spec.group_size):
-                    part = data[k * chunk_log:(k + 1) * chunk_log]
-                    off = spec.in_off + k * chunk_pad
-                    row[off:off + part.size] = part
-            else:
-                row[spec.in_off:spec.in_off + data.size] = data
-        self._state = self._state._replace(
-            heap_in=jnp.asarray(heap, self._state.heap_in.dtype))
+        specs = self.specs
+        staged = self.queues.staged
+        items = []
+        for (rank, coll_id), v in writes.items():
+            if (isinstance(v, tuple) and len(v) == 2
+                    and isinstance(v[0], np.ndarray)
+                    and isinstance(v[1], (int, np.integer))):
+                data, off = v[0], self._resolve_in_off(coll_id, v[1])
+            else:                       # registered default: pre-validated
+                data, off = v, specs[coll_id].in_off
+            if staged:
+                staged.pop((rank, coll_id, off), None)
+            items.append((rank, coll_id, data, off))
+        self._state = self._staging.write(self._state, items)
 
     def read_outputs_bulk(self, reads: list) -> dict:
-        """Batch heap reads: [(rank, coll_id), ...] with ONE device->host
-        transfer.  Returns {(rank, coll_id): logical output}."""
+        """Batch heap reads: ``[(rank, coll_id), ...]`` (or ``(rank,
+        coll_id, out_off)``) with ONE fused gather + device->host transfer.
+        Returns ``{(rank, coll_id): logical output}`` as owned copies."""
         self._ensure_built()
-        heap = np.asarray(self._state.heap_out)
-        out = {}
-        for rank, coll_id in reads:
-            spec = self._spec(coll_id)
-            _, outc = io_chunked(CollKind(spec.kind))
-            chunk_pad, chunk_log = self._chunk_layout(spec)
-            row = heap[rank]
-            if outc:
-                o = np.zeros(spec.group_size * chunk_log, heap.dtype)
-                for k in range(spec.group_size):
-                    src = spec.out_off + k * chunk_pad
-                    o[k * chunk_log:(k + 1) * chunk_log] = \
-                        row[src:src + chunk_log]
-                out[(rank, coll_id)] = o[:spec.n_elems]
-            else:
-                out[(rank, coll_id)] = \
-                    row[spec.out_off:spec.out_off + chunk_log]
-        return out
+        specs = self.specs
+        # Identical repeats dedup (pre-PR dict semantics); only CONFLICTING
+        # offsets for one (rank, coll_id) are ambiguous — the result dict
+        # could hold just one of them — and must be rejected.
+        resolved: dict = {}
+        for e in reads:
+            off = (self._resolve_out_off(e[1], e[2]) if len(e) > 2
+                   else specs[e[1]].out_off)
+            prev = resolved.setdefault((e[0], e[1]), off)
+            if prev != off:
+                raise ValueError(
+                    f"conflicting out_off reads for (rank={e[0]}, "
+                    f"coll={e[1]}): {prev} vs {off}; read each "
+                    "dynamic-offset result with its own read_output call")
+        keys = [(r, c, off) for (r, c), off in resolved.items()]
+        return self._staging.read(self._state, keys)
 
-    def read_output(self, rank: int, coll_id: int) -> np.ndarray:
-        """Gather logical output data from the rank's heap (un-pad)."""
+    def read_output(self, rank: int, coll_id: int,
+                    out_off: Optional[int] = None) -> np.ndarray:
+        """Gather logical output data from the rank's heap (un-pad);
+        returns an owned copy (callers may mutate it in place)."""
         self._ensure_built()
-        spec = self._spec(coll_id)
-        _, outc = io_chunked(CollKind(spec.kind))
-        chunk_pad, chunk_log = self._chunk_layout(spec)
-        heap = np.asarray(self._state.heap_out[rank])
-        if outc:
-            out = np.zeros(spec.group_size * chunk_log, heap.dtype)
-            for k in range(spec.group_size):
-                src = spec.out_off + k * chunk_pad
-                out[k * chunk_log:(k + 1) * chunk_log] = \
-                    heap[src:src + chunk_log]
-            return out[:spec.n_elems]
-        return heap[spec.out_off:spec.out_off + chunk_log]
+        return self._staging.read(
+            self._state,
+            [(rank, coll_id, self._resolve_out_off(coll_id, out_off))]
+        )[(rank, coll_id)]
 
     # ------------------------------------------------------------------
     # submission + event-driven execution (paper Sec. 3.1.2 / 3.1.3)
     # ------------------------------------------------------------------
     def submit(self, rank: int, coll_id: int, prio: int = 0,
                data: Optional[np.ndarray] = None,
-               callback: Optional[Callable[[int, int], None]] = None) -> None:
+               callback: Optional[Callable[[int, int], None]] = None,
+               in_off: int = -1, out_off: int = -1) -> None:
+        """Enqueue one SQE.  A payload passed via ``data`` is STAGED
+        host-side and flushed to the device in the next ``launch_once``
+        prologue (one batched transfer per launch), not written at call
+        time.  ``in_off``/``out_off`` override the registered heap offsets
+        for this submission (-1 keeps the defaults); the override is
+        honored both by the daemon (SQE fetch) and by the staged write."""
         self._ensure_built()
+        in_off = self._resolve_in_off(coll_id, in_off)
+        out_off = self._resolve_out_off(coll_id, out_off)
         if data is not None:
-            self.write_input(rank, coll_id, data)
+            # snapshot() validates and COPIES: the flush happens at the
+            # next launch prologue, and the pre-PR immediate-write
+            # semantics captured the value at call time — a caller
+            # reusing its buffer between submit and drive must not leak
+            # the mutation in.
+            self.queues.stage(rank, coll_id,
+                              self._staging.snapshot(coll_id, data), in_off)
         self.queues.submit(rank, SQE(coll_id=coll_id, prio=prio,
+                                     in_off=in_off, out_off=out_off,
                                      callback=callback))
 
     def submit_all(self, coll_id: int, prio: int = 0) -> None:
@@ -260,9 +310,19 @@ class OcclRuntime:
         for r in spec.comm.members:
             self.submit(r, coll_id, prio=prio)
 
+    def _flush_staged(self) -> None:
+        """Launch prologue: drain the submit-time staging queue into the
+        device heap — one batched scatter for every payload submitted
+        since the previous launch."""
+        staged = self.queues.take_staged()
+        if staged:
+            self._state = self._staging.write(self._state, staged,
+                                              owned=True)
+
     def launch_once(self) -> int:
         """One daemon launch; returns #CQEs drained (may be 0)."""
         self._ensure_built()
+        self._flush_staged()
         prev_slices = int(np.asarray(self._state.slices_moved).sum())
         st = self.queues.pack_sq(self._state)
         st = self._daemon(st)

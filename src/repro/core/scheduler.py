@@ -69,9 +69,15 @@ Scheduling decisions are measured against the PER-LAUNCH clock
   identical; at B > 1 a fully-stalled lane reaches its spin threshold up
   to B× sooner, so under contention the lane multiplexes between
   collectives at the same *slice* cadence it executes them, instead of
-  wasting B-wide supersteps spinning.  Denied slices — including partial
-  denials on supersteps that did move some slices — accumulate in
-  ``st.stall_slices`` (per collective) for Fig. 9-style observability.
+  wasting B-wide supersteps spinning.  The stall weight is QUEUE-LENGTH
+  CONDITIONAL (``cfg.queue_conditional_stall``): a lane whose task queue
+  holds no other eligible collective advances by 1 per stalled superstep
+  instead — preempting a solo collective frees nothing, so B×-eager
+  rotation during the ~3-superstep credit round trip would be pure churn
+  (preempt-counter noise, boost resets).  Denied slices — including
+  partial denials on supersteps that did move some slices — always
+  accumulate unweighted in ``st.stall_slices`` (per collective) for
+  Fig. 9-style observability.
 
 Everything is branch-free fixed-shape array code so the loop compiles into
 a single long-running XLA program — the daemon-kernel analogue.
@@ -374,7 +380,20 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     # gate granted, floored at one so a stalled B = 1 superstep advances
     # spin by exactly 1 — bit-identical to the seed superstep counting.
     want = jnp.minimum(jnp.int32(B), jnp.maximum(nsl - sl, 1))
-    stalled = jnp.maximum(want - n, 1)                      # [L] denied
+    denied = jnp.maximum(want - n, 1)                       # [L] denied
+    # Queue-length-conditional stall weight: preempting a SOLO collective
+    # (no other eligible collective queued on its lane) frees nothing, so
+    # a lane briefly blocked on the burst credit round trip should not
+    # reach its spin threshold B× sooner — it advances by 1 per stalled
+    # superstep (the seed cadence).  Contended lanes keep the fast
+    # B-scaled denied-slice accounting that closed the PR-2 contention
+    # gap.  ``eligible`` includes the current collective, so solo means
+    # queue length <= 1.
+    if cfg.queue_conditional_stall:
+        solo = jnp.sum(eligible, axis=1) <= 1               # [L]
+        stalled = jnp.where(solo, 1, denied)
+    else:
+        stalled = denied
 
     # --- execute the fused actions on the burst (paper Fig. 3) -----------
     slots = (st.tail[c][:, None] + bidx[None, :]) % K       # [L, B] ring read
@@ -458,11 +477,12 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         ctx_round=st.ctx_round.at[cg].set(next_round, mode="drop"),
         spin=st.spin.at[cv].set(
             jnp.where(gate, 0, st.spin[c] + stalled), mode="drop"),
-        # The observability counter also records PARTIAL denials (want - n
-        # on gated lanes): a persistently credit-starved lane shows its
-        # true starvation even though partial progress resets spin.
+        # The observability counter always records DENIED SLICES (partial
+        # denials included), independent of the queue-conditional spin
+        # weight: a persistently credit-starved lane shows its true
+        # starvation even when solo patience keeps it from preempting.
         stall_slices=st.stall_slices.at[cv].add(
-            jnp.where(gate, jnp.maximum(want - n, 0), stalled),
+            jnp.where(gate, jnp.maximum(want - n, 0), denied),
             mode="drop"),
         # Stickiness: a successful primitive boosts its successors' spin
         # thresholds (gang-convergence pressure, Sec. 3.2).

@@ -10,6 +10,13 @@ concurrently; a TPU device cannot observe host writes mid-program, so the
 rings cross the host/device boundary at daemon (re)launches — the paper's
 voluntary-quit / event-driven-restart cycle (Sec. 3.1.3) supplies exactly
 the needed boundary.  See DESIGN.md Sec. 2.1.
+
+The same boundary carries the submit-time STAGING queue: payloads passed
+to ``OcclRuntime.submit(..., data=...)`` are parked here host-side (one
+entry per (rank, collective); a re-submission before the flush supersedes
+the earlier payload, matching the old immediate-write semantics) and
+drained by the launch prologue into one batched device scatter
+(staging.StagingEngine) instead of a per-call device round trip.
 """
 from __future__ import annotations
 
@@ -47,6 +54,14 @@ class HostQueues:
         ]
         self.submitted = np.zeros(cfg.n_ranks, np.int64)
         self.completed = np.zeros(cfg.n_ranks, np.int64)
+        # Submit-time staged payloads: {(rank, coll_id, in_off): data},
+        # drained once per daemon launch by OcclRuntime._flush_staged.
+        # The offset is part of the key: two pre-flush submissions of the
+        # same collective at DIFFERENT dynamic offsets are distinct
+        # executions and both payloads must reach the heap; only a
+        # re-submission at the same offset supersedes (the old
+        # immediate-write last-write-wins semantics).
+        self.staged: dict = {}
         # Relaunch bookkeeping: reconcile() is called once per daemon
         # launch; ``launch_completions`` holds the completions each recent
         # launch contributed (bounded window — long-lived runtimes
@@ -68,6 +83,21 @@ class HostQueues:
         if sqe.callback is not None:
             self.callbacks[rank][sqe.coll_id].append(sqe.callback)
         self.submitted[rank] += 1
+
+    # -- submit-time payload staging --------------------------------------
+    def stage(self, rank: int, coll_id: int, data, in_off: int) -> None:
+        """Park a payload for the next launch-prologue flush (last write
+        per (rank, collective, offset) wins, like the old immediate-write
+        path; distinct offsets are distinct buffers and coexist)."""
+        self.staged[(rank, coll_id, in_off)] = data
+
+    def take_staged(self) -> list:
+        """Drain the staging queue as ``(rank, coll_id, data, in_off)``
+        items for one batched StagingEngine.write."""
+        items = [(rank, cid, data, off)
+                 for (rank, cid, off), data in self.staged.items()]
+        self.staged.clear()
+        return items
 
     # -- device-bound packing ---------------------------------------------
     def pack_sq(self, st: DaemonState) -> DaemonState:

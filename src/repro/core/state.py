@@ -24,8 +24,21 @@ import numpy as np
 from .config import OcclConfig
 
 
+def heap_scratch_elems(cfg: OcclConfig) -> int:
+    """Physical heap padding past the allocatable region: the scheduler's
+    per-lane [B*SLICE] burst windows (read and read-modify-write) must
+    never clamp-shift at the top of the heap.  Logical offsets handed out
+    by the runtime — and every staging-engine index — stay < heap_elems;
+    only the daemon's windowed slices may graze the scratch tail."""
+    return cfg.burst_slices * cfg.slice_elems
+
+
 class DaemonState(NamedTuple):
     # --- data heap (send/recv buffers; addresses = heap offsets) --------
+    # heap_in is written exclusively through staging.StagingEngine (fused
+    # index-map scatters; donated on accelerator backends), heap_out by
+    # the daemon's burst windows and read back via the engine's fused
+    # gather — no host-side heap mirrors anywhere on the bulk I/O path.
     heap_in: jnp.ndarray       # [H]
     heap_out: jnp.ndarray      # [H]
 
@@ -106,11 +119,7 @@ def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
         a = jnp.full(shape, fill, dtype)
         return a
 
-    # Physical heaps carry B*SLICE scratch elements past the allocatable
-    # region so the scheduler's per-lane [B*SLICE] burst windows (read and
-    # read-modify-write) never clamp-shift at the top of the heap; logical
-    # offsets handed out by the runtime stay < heap_elems.
-    pad = B * SL
+    pad = heap_scratch_elems(cfg)
     s = DaemonState(
         heap_in=z((H + pad,), dt),
         heap_out=z((H + pad,), dt),

@@ -59,6 +59,23 @@ class StaticTables:
     # backend (instead of one ppermute per lane per mailbox field).
     lane_groups: list         # [(lanes: list[int], fwd_pairs, rev_pairs)]
 
+    # staging layout (runtime I/O; consumed by staging.StagingEngine) -----
+    # The padded chunk layout of every collective is resolved ONCE here, so
+    # the per-step pack/unpack transform is a precomputed index map instead
+    # of per-call Python chunk loops.  Maps are RELATIVE to the
+    # collective's base heap offset, so a per-SQE dynamic offset override
+    # is a scalar add at flush time.
+    chunk_pad: np.ndarray     # [C] i32 — padded chunk extent (rounds*slices*SL)
+    chunk_log: np.ndarray     # [C] i32 — logical chunk elems (ceil(n/G))
+    in_log: np.ndarray        # [C] i32 — logical input elems per rank
+    out_log: np.ndarray       # [C] i32 — logical output elems per rank
+    in_span: np.ndarray       # [C] i32 — padded input extent in the heap
+    out_span: np.ndarray      # [C] i32 — padded output extent in the heap
+    stage_in_map: list        # [C] np.int32[in_log[c]]: logical j -> rel
+                              #   off; every in-span offset NOT in the map
+                              #   is a pad position the engine zero-fills
+    stage_out_map: list       # [C] np.int32[out_log[c]]: logical j -> rel off
+
     max_steps: int
 
 
@@ -99,6 +116,14 @@ def build_tables(
         fwd_perm_pairs=[[] for _ in range(L)],
         rev_perm_pairs=[[] for _ in range(L)],
         lane_groups=[],
+        chunk_pad=np.zeros(C, np.int32),
+        chunk_log=np.zeros(C, np.int32),
+        in_log=np.zeros(C, np.int32),
+        out_log=np.zeros(C, np.int32),
+        in_span=np.zeros(C, np.int32),
+        out_span=np.zeros(C, np.int32),
+        stage_in_map=[np.zeros(0, np.int32)] * C,
+        stage_out_map=[np.zeros(0, np.int32)] * C,
         max_steps=S,
     )
 
@@ -145,6 +170,7 @@ def build_tables(
         t.out_chunked[c] = int(outc)
         t.base_in_off[c] = s.in_off
         t.base_out_off[c] = s.out_off
+        _build_stage_maps(t, c, s, cfg.slice_elems, inc, outc)
         for rank in s.comm.members:
             m = s.comm.member_index(rank)
             t.member[rank, c] = True
@@ -153,3 +179,38 @@ def build_tables(
                 t.prog_kind[rank, c, step] = int(prim)
                 t.prog_chunk[rank, c, step] = chunk
     return t
+
+
+def _build_stage_maps(t: StaticTables, c: int, s: CollectiveSpec,
+                      slice_elems: int, inc: bool, outc: bool) -> None:
+    """Precompute the padded-layout scatter/gather index maps of one
+    collective (the registration-time analogue of NCCL's registered user
+    buffers): logical element ``j`` of a chunked buffer lives at relative
+    heap offset ``(j // chunk_log) * chunk_pad + j % chunk_log``; every
+    offset of the padded span NOT covered by the map is a pad position
+    the staging engine zero-fills on write (so stale heap data can never
+    leak into the padded slices the daemon circulates)."""
+    cp = s.n_rounds * s.n_slices * slice_elems        # padded chunk extent
+    cl = -(-s.n_elems // s.group_size)                # ceil: logical chunk
+    in_log = s.n_elems if inc else cl
+    out_log = s.n_elems if outc else cl
+    in_span = (s.group_size if inc else 1) * cp
+    out_span = (s.group_size if outc else 1) * cp
+
+    def chunked_map(n_logical: int) -> np.ndarray:
+        j = np.arange(n_logical, dtype=np.int32)
+        return (j // cl) * cp + (j % cl)
+
+    in_map = (chunked_map(in_log) if inc
+              else np.arange(in_log, dtype=np.int32))
+    out_map = (chunked_map(out_log) if outc
+               else np.arange(out_log, dtype=np.int32))
+
+    t.chunk_pad[c] = cp
+    t.chunk_log[c] = cl
+    t.in_log[c] = in_log
+    t.out_log[c] = out_log
+    t.in_span[c] = in_span
+    t.out_span[c] = out_span
+    t.stage_in_map[c] = in_map.astype(np.int32)
+    t.stage_out_map[c] = out_map.astype(np.int32)

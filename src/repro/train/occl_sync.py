@@ -101,12 +101,13 @@ class OcclGradSync:
         per_rank_grads: list of grad pytrees (one per DP rank, any
         submission order is fine — the runtime is deadlock-free)."""
         assert len(per_rank_grads) == self.n_ranks
-        writes = {}
         for prio, b in enumerate(self.buckets):
             for r in range(self.n_ranks):
-                writes[(r, b.coll_id)] = self._pack(per_rank_grads[r], b)
-                self.occl.submit(r, b.coll_id, prio=prio)
-        self.occl.write_inputs_bulk(writes)   # one transfer per step
+                # Payloads are STAGED host-side and flushed to the device
+                # in one batched scatter by the first launch prologue —
+                # one staging transfer per step (runtime._flush_staged).
+                self.occl.submit(r, b.coll_id, prio=prio,
+                                 data=self._pack(per_rank_grads[r], b))
         self.occl.drive()
         reads = self.occl.read_outputs_bulk(
             [(r, b.coll_id) for r in range(self.n_ranks)
@@ -116,8 +117,10 @@ class OcclGradSync:
         for r in range(self.n_ranks):
             leaves = [None] * len(self.shapes)
             for b in self.buckets:
-                flat = np.asarray(reads[(r, b.coll_id)],
-                                  np.float32) / self.n_ranks
+                # read_outputs_bulk returns owned copies, so the average
+                # can be taken in place without corrupting sibling reads.
+                flat = np.asarray(reads[(r, b.coll_id)], np.float32)
+                flat /= self.n_ranks
                 off = 0
                 for i, n in zip(b.leaf_ids, b.sizes):
                     leaves[i] = jnp.asarray(

@@ -225,6 +225,85 @@ def test_stall_accounting_is_superstep_counting_at_burst1():
     assert int(st["stall_slices"].sum()) > 0
 
 
+def _solo_skewed(queue_conditional_stall: bool) -> tuple:
+    """The solo-stall regime: rank 0 submits its all-reduce and launches
+    BEFORE its ring peer arrives, so its only queued collective fully
+    stalls on recv every superstep.  With unconditional denied-slice spin
+    it reaches the threshold ~B× per launch and preempts a collective
+    that has no competitor — pure churn (boost resets, preempt noise)."""
+    import warnings as w
+    cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=8,
+                     conn_depth=16, burst_slices=8, heap_elems=1 << 13,
+                     superstep_budget=1 << 15,
+                     queue_conditional_stall=queue_conditional_stall)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator([0, 1])
+    cid = rt.register(CollKind.ALL_REDUCE, comm, n_elems=512)
+    rng = np.random.RandomState(3)
+    xs = [rng.randn(512).astype(np.float32) for _ in range(2)]
+    with w.catch_warnings():
+        w.simplefilter("ignore", ConnDepthWarning)
+        rt.submit(0, cid, data=xs[0])
+        rt.launch_once()          # rank 0 alone until the voluntary quit
+        rt.submit(1, cid, data=xs[1])
+        rt.drive()
+    for r in range(2):
+        np.testing.assert_allclose(rt.read_output(r, cid), xs[0] + xs[1],
+                                   rtol=1e-4, atol=1e-5)
+    return rt.stats()
+
+
+def test_solo_stall_weight_stops_preempt_churn():
+    """Queue-length-conditional stall weight (ROADMAP follow-up): a
+    burst-denied SOLO collective advances spin by 1 per stalled superstep
+    (seed cadence) instead of by denied slices, so it no longer preempts
+    B× too eagerly while blocked waiting for its peers.  The ablation
+    switch restores the old eager behavior for comparison."""
+    cond = _solo_skewed(queue_conditional_stall=True)
+    eager = _solo_skewed(queue_conditional_stall=False)
+    # Same work either way; solo preemption is a no-op for throughput...
+    assert int(cond["slices_moved"].sum()) == int(eager["slices_moved"].sum())
+    # ...but the eager accounting preempts a contender-less collective
+    # many times over; patience must cut that churn by a lot.
+    assert int(cond["preempts"].sum()) > 0      # still preemptible
+    assert int(eager["preempts"].sum()) > 4 * int(cond["preempts"].sum())
+    # Starvation stays observable either way: stall_slices records raw
+    # denied slices independently of the spin weight.
+    assert int(cond["stall_slices"].sum()) > 0
+    assert int(cond["stall_slices"].sum()) == int(eager["stall_slices"].sum())
+
+
+def test_contended_lanes_keep_burst_scaled_preemption():
+    """The other regime: under adversarial contention every lane has
+    queued contenders, so the conditional weight must leave the fast
+    B-scaled preemption (and its superstep win over B=1) intact."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    from bench_collectives import build_contention_runtime
+
+    def run(flag):
+        rt = build_contention_runtime(8, n=256, slice_elems=8,
+                                      queue_conditional_stall=flag)
+        rt.drive(max_launches=128)
+        return rt.stats()
+
+    cond, eager = run(True), run(False)
+    assert int(cond["slices_moved"].sum()) == int(eager["slices_moved"].sum())
+    # Contended-phase behavior is identical; only the drain tail (queue
+    # length 1) may differ slightly, so supersteps stay within a whisker.
+    assert (int(cond["supersteps"].max())
+            <= 1.15 * int(eager["supersteps"].max()))
+    # And the PR-2 headline stands with the conditional weight on: B=8
+    # still beats B=1 by a wide margin (test_contention_burst8_beats_burst1
+    # covers the default path; this guards the explicit flag).
+    rt1 = build_contention_runtime(1, n=256, slice_elems=8)
+    rt1.drive(max_launches=128)
+    assert (int(cond["supersteps"].max())
+            < 0.7 * int(rt1.stats()["supersteps"].max()))
+
+
 def test_conn_depth_guard_warns_and_auto_derives():
     cfg = OcclConfig(n_ranks=2, max_colls=2, max_comms=1, slice_elems=4,
                      conn_depth=4, burst_slices=8, heap_elems=512)

@@ -1,0 +1,109 @@
+"""Hypothesis property sweep for the staging engine: the bulk heap-I/O
+path (``write_inputs_bulk`` -> drive -> ``read_outputs_bulk``) is
+observationally identical to the scalar path (``write_input`` -> drive ->
+``read_output``) for every CollKind, arbitrary (odd) sizes that exercise
+padding, and repeated steps over a reused heap.
+
+Skipped entirely when hypothesis is not installed (tier-1 containers);
+``pip install -r requirements-dev.txt`` restores the sweep.  The
+deterministic fallback lives in test_staging.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CollKind, OcclConfig, OcclRuntime
+
+KINDS = list(CollKind)
+
+
+def _mk_runtime(R, colls):
+    cfg = OcclConfig(n_ranks=R, max_colls=max(2, len(colls)), max_comms=1,
+                     slice_elems=8, conn_depth=4, heap_elems=1 << 14)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    ids = [rt.register(kind, comm, n_elems=n, root=root)
+           for kind, n, root in colls]
+    return rt, ids
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_bulk_path_equals_scalar_path(data):
+    R = data.draw(st.integers(2, 4), label="ranks")
+    n_coll = data.draw(st.integers(1, 3), label="n_coll")
+    colls = []
+    for i in range(n_coll):
+        kind = data.draw(st.sampled_from(KINDS), label=f"kind{i}")
+        n = data.draw(st.integers(1, 60), label=f"n{i}")
+        root = data.draw(st.integers(0, R - 1), label=f"root{i}")
+        colls.append((kind, n, root))
+    steps = data.draw(st.integers(1, 3), label="steps")
+    seed = data.draw(st.integers(0, 1000), label="seed")
+
+    rt_s, ids_s = _mk_runtime(R, colls)
+    rt_b, ids_b = _mk_runtime(R, colls)
+    rng = np.random.RandomState(seed)
+
+    for _ in range(steps):                 # reused heap across steps
+        writes = {}
+        for (kind, n, root), cs, cb in zip(colls, ids_s, ids_b):
+            chunk = -(-n // R)
+            xs = [rng.randn(chunk if kind == CollKind.ALL_GATHER else n)
+                  .astype(np.float32) for _ in range(R)]
+            for r in range(R):
+                d = xs[root] if kind == CollKind.BROADCAST else xs[r]
+                rt_s.write_input(r, cs, d)
+                rt_s.submit(r, cs)
+                writes[(r, cb)] = d
+                rt_b.submit(r, cb)
+        rt_b.write_inputs_bulk(writes)
+        rt_s.drive()
+        rt_b.drive()
+
+        bulk = rt_b.read_outputs_bulk(
+            [(r, cb) for cb in ids_b for r in range(R)])
+        for cs, cb in zip(ids_s, ids_b):
+            for r in range(R):
+                np.testing.assert_array_equal(
+                    bulk[(r, cb)], rt_s.read_output(r, cs))
+
+    # Bulk heap contents end bit-identical to the scalar path's, pads
+    # included (the stale-padding invariant).
+    np.testing.assert_array_equal(np.asarray(rt_b.state.heap_in),
+                                  np.asarray(rt_s.state.heap_in))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_staged_submit_equals_explicit_write(data):
+    """submit(data=...) staging + prologue flush lands exactly where an
+    explicit pre-write would (same heap, same outputs)."""
+    R = data.draw(st.integers(2, 4), label="ranks")
+    kind = data.draw(st.sampled_from(KINDS), label="kind")
+    n = data.draw(st.integers(1, 48), label="n")
+    seed = data.draw(st.integers(0, 1000), label="seed")
+
+    rng = np.random.RandomState(seed)
+    chunk = -(-n // R)
+    xs = [rng.randn(chunk if kind == CollKind.ALL_GATHER else n)
+          .astype(np.float32) for _ in range(R)]
+
+    outs = []
+    for staged in (True, False):
+        rt, (cid,) = _mk_runtime(R, [(kind, n, 0)])
+        for r in range(R):
+            d = xs[0] if kind == CollKind.BROADCAST else xs[r]
+            if staged:
+                rt.submit(r, cid, data=d)
+            else:
+                rt.write_input(r, cid, d)
+                rt.submit(r, cid)
+        rt.drive()
+        outs.append([rt.read_output(r, cid) for r in range(R)])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
