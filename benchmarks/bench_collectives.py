@@ -16,7 +16,9 @@ global order with no scheduling layer (direct jnp reduction) — the
 "statically sequenced NCCL" of Sec. 5.
 """
 import json
+import os
 import pathlib
+import tempfile
 import time
 
 import numpy as np
@@ -199,21 +201,90 @@ def run_burst_sweep(bursts=(1, 4, 8), n=65536, R=8, conn_depth=32,
         record["speedup_slices_per_sec_vs_burst1"] = {
             k: v["total"]["slices_per_sec"] / base for k, v in b.items()
         }
-    # Merge-write: other sections (e.g. ``contention``) survive.
+    # Merge-write: other sections (e.g. ``contention``) survive; the
+    # replace is atomic so no reader ever sees a partial record.
     doc = _read_record(out_path)
     doc.update(record)
-    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    _write_record(out_path, doc)
     print(f"# wrote {out_path}")
     return record
 
 
 def _read_record(out_path: pathlib.Path) -> dict:
-    """Existing perf record, or {} if absent/corrupt (an interrupted run
-    must not poison every later run)."""
+    """Existing perf record, or {} when absent.  A PRESENT-but-unparseable
+    record fails LOUDLY: every writer replaces its section atomically
+    (``_write_record``), so a corrupt file cannot be one of our
+    interrupted runs — silently resetting it to {} would hide whatever
+    produced it and let a partial record masquerade as a fresh baseline."""
+    if not out_path.exists():
+        return {}
     try:
         return json.loads(out_path.read_text())
-    except (OSError, ValueError):
-        return {}
+    except ValueError as e:
+        raise RuntimeError(
+            f"{out_path} exists but is not valid JSON ({e}); bench writers "
+            "replace sections atomically, so this was written by something "
+            "else — inspect or delete it explicitly") from e
+
+
+def _write_record(out_path: pathlib.Path, doc: dict) -> None:
+    """Atomic section replace: serialize the WHOLE document to a temp file
+    in the same directory, then ``os.replace`` it over the record.  A
+    reader (or an interrupted run) can never observe a partially-written
+    BENCH_collectives.json."""
+    payload = json.dumps(doc, indent=2) + "\n"
+    fd, tmp = tempfile.mkstemp(dir=str(out_path.parent),
+                               prefix=out_path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        os.replace(tmp, out_path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+# Required shape of each section a full bench pass writes; consumed by
+# ``validate_record`` (run.py fails loudly on partial/stale records) and
+# by benchmarks/check_gates.py in CI.
+RECORD_SECTIONS = {
+    "bursts": (),                       # legacy top-level burst sweep
+    "contention": ("bursts",),
+    "staging": ("speedup_vs_legacy", "speedup_vs_legacy_scalar"),
+    "mesh": ("ppermutes_per_superstep", "staged_flush"),
+}
+
+
+def validate_record(required=tuple(RECORD_SECTIONS),
+                    out_path=BENCH_JSON) -> dict:
+    """Fail LOUDLY when a required section is absent or partial — a stale
+    or interrupted BENCH_collectives.json must not pass as a bench run
+    (the pre-PR --quick path silently skipped contention validation when
+    the key was missing)."""
+    doc = _read_record(out_path)
+    problems = []
+    for section in required:
+        if section not in doc:
+            problems.append(f"missing section {section!r}")
+            continue
+        for key in RECORD_SECTIONS.get(section, ()):
+            if key not in doc[section]:
+                problems.append(f"section {section!r} lacks {key!r} "
+                                "(partial record)")
+    if "contention" in required and "contention" in doc:
+        for burst, rec in doc["contention"].get("bursts", {}).items():
+            for key in ("supersteps", "preempts", "stall_slices"):
+                if key not in rec:
+                    problems.append(
+                        f"contention burst {burst} lacks {key!r}")
+    if problems:
+        raise RuntimeError(
+            f"{out_path} failed validation: " + "; ".join(problems)
+            + " — rerun `python benchmarks/run.py` (or --quick)")
+    return doc
 
 
 def _legacy_write_inputs_bulk(rt: OcclRuntime, writes: dict) -> None:
@@ -382,7 +453,7 @@ def run_staging_bench(n=16384, R=8, n_buckets=8, iters=10,
         f"vs_scalar={record['speedup_vs_legacy_scalar']:.0f}x")
     doc = _read_record(out_path)
     doc["staging"] = record
-    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    _write_record(out_path, doc)
     print(f"# wrote {out_path} (staging)")
     return record
 
@@ -467,8 +538,89 @@ def run_contention_sweep(bursts=(1, 4, 8), n=2048, R=8, C=8, conn_depth=32,
         }
     doc = _read_record(out_path)
     doc["contention"] = record
-    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    _write_record(out_path, doc)
     print(f"# wrote {out_path} (contention)")
+    return record
+
+
+def run_mesh_bench(R=8, n=16384, n_buckets=8, out_path=BENCH_JSON) -> dict:
+    """Mesh-backend fast-path record, written under the ``mesh`` key:
+
+    * ``ppermutes_per_superstep`` — ppermute ops per ``_mesh_exchange``
+      superstep, counted in the traced jaxpr per heap dtype (packed 16-bit
+      must match 32-bit at 2; the unpacked escape hatch pays 3).  The
+      count is ring-size independent, so it needs no multi-device flags —
+      CI asserts it on every run via benchmarks/check_gates.py, and the
+      8-device mesh job executes the same code path for real.
+    * ``staged_flush`` — bytes one grad-sync-shaped staged flush ships
+      (payload bytes; on the mesh backend placed per device) vs the full
+      ``[R, heap]`` mirror the pre-PR sim-style path gathered/moved.
+    """
+    from repro.core.daemon import count_exchange_ppermutes
+    from repro.core import OcclConfig as _Cfg
+
+    ppermutes = {}
+    for label, dtype, packed in [
+        ("float32", "float32", True),
+        ("bfloat16_packed", "bfloat16", True),
+        ("bfloat16_unpacked", "bfloat16", False),
+        ("float16_packed", "float16", True),
+    ]:
+        cfg = _Cfg(n_ranks=R, max_comms=1, slice_elems=BURST_SLICE_ELEMS,
+                   burst_slices=4, packed_16bit=packed, dtype=dtype)
+        ppermutes[label] = count_exchange_ppermutes(cfg)
+        row(f"collectives/mesh_ppermutes_{label}", 0.0,
+            f"ppermutes_per_superstep={ppermutes[label]}")
+
+    # Staged-flush bytes: all-ranks staged submits, one prologue flush.
+    per_bucket = n // n_buckets
+    cfg = OcclConfig(n_ranks=R, max_colls=max(8, n_buckets), max_comms=1,
+                     slice_elems=256, conn_depth=8,
+                     heap_elems=max(1 << 14, 16 * n),
+                     superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    ids = [rt.register(CollKind.ALL_REDUCE, comm, n_elems=per_bucket)
+           for _ in range(n_buckets)]
+    rng = np.random.RandomState(0)
+    for cid in ids:
+        for r in range(R):
+            rt.submit(r, cid, data=rng.randn(per_bucket).astype(np.float32))
+    rt.launch_once()
+    st = rt.stats()
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    from repro.core.state import heap_scratch_elems
+    full_heap = R * (cfg.heap_elems + heap_scratch_elems(cfg)) * itemsize
+    flush = {
+        "payload_bytes": int(st["staging_flush_bytes"]),
+        "full_heap_mirror_bytes": int(full_heap),
+        "gather_bytes_avoided_ratio":
+            full_heap / max(int(st["staging_flush_bytes"]), 1),
+        "flush_writes": int(st["staging_flush_writes"]),
+        "sharded_flushes": int(st["staging_sharded_flushes"]),
+        "backend": "sim" if rt.mesh is None else "mesh",
+    }
+    row("collectives/mesh_staged_flush", 0.0,
+        f"payload_bytes={flush['payload_bytes']};"
+        f"full_heap_mirror_bytes={flush['full_heap_mirror_bytes']}")
+
+    # Each sub-record carries ITS OWN measurement config: the ppermute
+    # counts and the flush bytes are produced by different runtimes, and
+    # full_heap_mirror_bytes depends on the flush config's scratch pad.
+    record = {
+        "ppermutes_per_superstep": ppermutes,
+        "ppermutes_config": {"n_ranks": R, "burst_slices": 4,
+                             "slice_elems": BURST_SLICE_ELEMS},
+        "staged_flush": flush,
+        "staged_flush_config": {"n_ranks": R, "n_elems": n,
+                                "n_buckets": n_buckets, "slice_elems": 256,
+                                "conn_depth": 8, "burst_slices": 1,
+                                "heap_elems": cfg.heap_elems},
+    }
+    doc = _read_record(out_path)
+    doc["mesh"] = record
+    _write_record(out_path, doc)
+    print(f"# wrote {out_path} (mesh)")
     return record
 
 
@@ -476,3 +628,6 @@ if __name__ == "__main__":
     run()
     run_burst_sweep()
     run_contention_sweep()
+    run_staging_bench()
+    run_mesh_bench()
+    validate_record()

@@ -1,0 +1,90 @@
+"""CI perf gates over BENCH_collectives.json (called from ci.yml).
+
+Replaces the inline workflow heredoc with a versioned, testable script.
+Gates (thresholds deliberately looser than local best-of-N numbers —
+shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
+
+* **staging** — the device-resident staging engine must stay >= 3x the
+  pre-PR bulk path (local best-of-N shows >= 5x; see ROADMAP "Device-
+  resident staging").
+* **contention** — burst-aware stall accounting must keep the adversarial
+  8x8 all-reduce at B=8 at no more than 0.5x the supersteps of B=1 (the
+  PR-2 record shows ~3x fewer; parity was the pre-PR failure mode).
+* **mesh pack** — packed 16-bit heaps must ride exactly 2 ppermutes per
+  ``_mesh_exchange`` superstep, same as 32-bit (3 means the packing
+  regressed to the separate header/payload exchange).
+
+A missing or partial record FAILS (validate_record): a stale
+BENCH_collectives.json silently skipping a gate was the failure mode
+that motivated this script.
+
+Usage: ``python benchmarks/check_gates.py [path/to/BENCH_collectives.json]``
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def check(doc: dict) -> list[str]:
+    """Returns a list of human-readable gate failures (empty == pass)."""
+    failures = []
+
+    s = doc["staging"]
+    speedup = s["speedup_vs_legacy"]
+    print(f"staging speedup vs legacy bulk: {speedup:.1f}x "
+          f"(vs scalar: {s['speedup_vs_legacy_scalar']:.0f}x)")
+    if speedup < 3.0:
+        failures.append(
+            f"staging engine regressed: {speedup:.2f}x vs legacy bulk "
+            "(gate: >= 3x)")
+
+    c = doc["contention"]["bursts"]
+    if "1" not in c or "8" not in c:
+        failures.append(
+            f"contention sweep lacks bursts 1 and 8 (got {sorted(c)}) — "
+            "rerun benchmarks/run.py")
+    else:
+        b1, b8 = c["1"]["supersteps"], c["8"]["supersteps"]
+        ratio = b8 / max(b1, 1)
+        print(f"contention supersteps: B=1 {b1}, B=8 {b8} "
+              f"(ratio {ratio:.2f})")
+        if ratio > 0.5:
+            failures.append(
+                f"burst-aware stall accounting regressed: B=8 ran "
+                f"{ratio:.2f}x the supersteps of B=1 (gate: <= 0.5x)")
+
+    pp = doc["mesh"]["ppermutes_per_superstep"]
+    print(f"mesh ppermutes/superstep: {pp}")
+    for key in ("float32", "bfloat16_packed", "float16_packed"):
+        if pp.get(key) != 2:
+            failures.append(
+                f"mesh exchange {key} pays {pp.get(key)} ppermutes per "
+                "superstep (gate: exactly 2 — packed 16-bit must match "
+                "32-bit)")
+    if pp.get("bfloat16_unpacked") != 3:
+        failures.append(
+            "unpacked-bf16 baseline no longer pays 3 ppermutes "
+            f"(got {pp.get('bfloat16_unpacked')}) — the escape-hatch "
+            "baseline the packed path is measured against has drifted")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    import bench_collectives
+
+    path = (pathlib.Path(argv[1]) if len(argv) > 1
+            else bench_collectives.BENCH_JSON)
+    doc = bench_collectives.validate_record(
+        required=("staging", "contention", "mesh"), out_path=path)
+    failures = check(doc)
+    for f in failures:
+        print(f"GATE FAILED: {f}", file=sys.stderr)
+    if not failures:
+        print("all perf gates passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -6,9 +6,13 @@ Prints ``name,us_per_call,derived`` CSV rows (common.row).
   Fig. 9  -> bench_gang            Roofline  -> roofline (dry-run JSON)
 
 ``--quick`` runs a CI-sized smoke (small sizes, 1 iter) that still
-rewrites BENCH_collectives.json — both the burst sweep and the
-adversarial contention sweep — so the perf record stays reproducible
-from a cold checkout.
+rewrites BENCH_collectives.json — the burst sweep, the adversarial
+contention sweep, the staging record and the mesh fast-path record — so
+the perf record stays reproducible from a cold checkout.  Both modes end
+with ``bench_collectives.validate_record()``: a stale or partial record
+(e.g. a missing ``contention`` section) fails the run loudly instead of
+silently passing; section writers replace the file atomically, so a
+partial record can never be produced by an interrupted run.
 """
 import argparse
 import pathlib
@@ -24,11 +28,21 @@ def main(quick: bool = False) -> None:
     if quick:
         bench_collectives.run(sizes=(64,), iters=1)
         bench_collectives.run_burst_sweep(bursts=(1, 8), n=8192, iters=1)
-        bench_collectives.run_contention_sweep(bursts=(1, 8), n=1024)
+        # Full-size contention sweep even in --quick: the check_gates.py
+        # B8 <= 0.5x B1 threshold is calibrated against the n=2048 record
+        # (~3x fewer supersteps); the n=1024 smoke sits at ~0.49 — a 2%
+        # margin any benign schedule shift would trip.
+        bench_collectives.run_contention_sweep(bursts=(1, 8))
         # Staging engine vs the pre-PR bulk/scalar paths at the headline
         # 8-rank / 16k-elem point (CI smoke keeps the full workload: the
         # speedup is the acceptance-tracked number).
         bench_collectives.run_staging_bench(iters=10)
+        bench_collectives.run_mesh_bench()
+        # Fail LOUDLY on a stale/partial record: every section the gates
+        # consume must have been (re)written by THIS run — a missing
+        # ``contention`` key in a stale BENCH_collectives.json used to
+        # slip through as a silent no-op.
+        bench_collectives.validate_record()
         return
     import bench_overheads
     bench_overheads.run(sizes=(64, 1024, 4096))
@@ -40,6 +54,8 @@ def main(quick: bool = False) -> None:
     bench_collectives.run_burst_sweep(iters=2)
     bench_collectives.run_contention_sweep()
     bench_collectives.run_staging_bench(iters=20)
+    bench_collectives.run_mesh_bench()
+    bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)
     import bench_gang

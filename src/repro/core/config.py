@@ -139,6 +139,25 @@ class OcclConfig:
     dtype: str = "float32"          # heap / wire dtype
     use_pallas: bool = False        # route slice math through Pallas kernels
 
+    # --- mesh-backend fast path -----------------------------------------
+    packed_16bit: bool = True       # mesh backend: bitcast PAIRS of 16-bit
+                                    # payload elements into i32 lanes so
+                                    # bf16/f16 heaps ride the same single
+                                    # fused header++payload forward ppermute
+                                    # as 32-bit dtypes (2 ppermutes per
+                                    # superstep instead of 3; an odd lane is
+                                    # zero-padded and sliced off on receive).
+                                    # False restores the separate
+                                    # header/payload ppermute pair (escape
+                                    # hatch; bit-identical results).
+    vectorized_inbox: bool = True   # apply_inbox: flatten the (coll, slot)
+                                    # scatter grid through a precomputed
+                                    # [L, B] burst-offset table into ONE
+                                    # single-axis scatter over the
+                                    # [C*K, SLICE] payload view.  False
+                                    # restores the two-axis scatter (escape
+                                    # hatch; bit-identical results).
+
     def __post_init__(self):
         assert self.n_ranks >= 1
         assert self.max_comms >= 1

@@ -96,6 +96,27 @@ def _sim_exchange(fwd_src, rev_src, outbox: Mailbox) -> Mailbox:
     )
 
 
+def _pack16_to_i32(pay: jnp.ndarray, pad: int) -> jnp.ndarray:
+    """Bitcast PAIRS of adjacent 16-bit payload elements into i32 lanes.
+
+    ``pay`` is [G, W] of a 2-byte dtype; an odd W is zero-padded by ``pad``
+    (0 or 1) so every element has a pair partner.  Returns [G, (W+pad)//2]
+    i32 — exact bits, concatenable with the i32 (coll, count) header.
+    """
+    if pad:
+        pay = jnp.concatenate(
+            [pay, jnp.zeros((pay.shape[0], pad), pay.dtype)], axis=1)
+    return jax.lax.bitcast_convert_type(
+        pay.reshape(pay.shape[0], -1, 2), jnp.int32)
+
+
+def _unpack16_from_i32(packed: jnp.ndarray, dtype, width: int) -> jnp.ndarray:
+    """Inverse of :func:`_pack16_to_i32`: [G, P] i32 -> [G, width] 16-bit
+    (the pad element, if any, is sliced off)."""
+    pairs = jax.lax.bitcast_convert_type(packed, dtype)   # [G, P, 2]
+    return pairs.reshape(pairs.shape[0], -1)[:, :width]
+
+
 def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
     """Deliver messages over the device fabric (mesh backend).
 
@@ -103,13 +124,20 @@ def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
     stacked traffic rides one ppermute pair per direction — the forward
     direction packs (coll, count) headers and the [B, SL] payload burst of
     every fused lane into a single i32 buffer (exact bitcast for 32-bit
-    heap dtypes), the reverse direction is one i32 credit-header ppermute.
-    With one communicator ring (the common case) the whole superstep costs
-    exactly two ppermutes, vs five per lane in the unfused scheme.
+    heap dtypes; for 16-bit dtypes adjacent payload-element PAIRS are
+    bitcast into i32 lanes per the registration-time
+    ``lane_group_pack16`` pairing metadata, odd lane zero-padded), the
+    reverse direction is one i32 credit-header ppermute.  With one
+    communicator ring (the common case) the whole superstep costs exactly
+    two ppermutes for BOTH 32-bit and 16-bit heaps, vs five per lane in
+    the unfused scheme; ``cfg.packed_16bit=False`` (tables built without
+    pairing metadata) restores the separate header/payload ppermutes for
+    16-bit dtypes (three per superstep).
     """
     L, B, SL = outbox.fwd_payload.shape
     dt = outbox.fwd_payload.dtype
     fuse_payload = dt.itemsize == 4
+    pack16 = t.lane_group_pack16 if dt.itemsize == 2 else None
 
     fwd_count = jnp.zeros_like(outbox.fwd_count)
     fwd_coll = jnp.zeros_like(outbox.fwd_coll)
@@ -117,7 +145,7 @@ def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
     rev_count = jnp.zeros_like(outbox.rev_count)
     rev_coll = jnp.zeros_like(outbox.rev_coll)
 
-    for group_lanes, fwd_pairs, rev_pairs in t.lane_groups:
+    for gi, (group_lanes, fwd_pairs, rev_pairs) in enumerate(t.lane_groups):
         g = jnp.asarray(group_lanes)
         hdr = jnp.stack([outbox.fwd_coll[g], outbox.fwd_count[g]], axis=1)
         pay = outbox.fwd_payload[g].reshape(len(group_lanes), B * SL)
@@ -130,6 +158,14 @@ def _mesh_exchange(t: StaticTables, outbox: Mailbox, axis_name: str) -> Mailbox:
             got_hdr, got_pay = moved[:, :2], moved[:, 2:]
             if dt != jnp.int32:
                 got_pay = jax.lax.bitcast_convert_type(got_pay, dt)
+        elif pack16 is not None:
+            # Packed 16-bit: element pairs ride i32 lanes alongside the
+            # header in the SAME single fwd ppermute.
+            cols, pad = pack16[gi]
+            packed = jnp.concatenate([hdr, _pack16_to_i32(pay, pad)], axis=1)
+            moved = jax.lax.ppermute(packed, axis_name, perm=fwd_pairs)
+            got_hdr = moved[:, :2]
+            got_pay = _unpack16_from_i32(moved[:, 2:2 + cols], dt, B * SL)
         else:
             got_hdr = jax.lax.ppermute(hdr, axis_name, perm=fwd_pairs)
             got_pay = jax.lax.ppermute(pay, axis_name, perm=fwd_pairs)
@@ -254,6 +290,62 @@ def build_shardmap_daemon(cfg: OcclConfig, t: StaticTables, mesh,
         return inner(st)
 
     return daemon
+
+
+def _count_primitive(jaxpr, name: str) -> int:
+    """Recursively count occurrences of primitive ``name`` in a jaxpr
+    (descends into call/scan/shard_map sub-jaxprs via eqn params)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    n += _count_primitive(inner, name)
+    return n
+
+
+def count_exchange_ppermutes(cfg: OcclConfig, n_comms: int = 1) -> int:
+    """Trace one ``_mesh_exchange`` superstep and count its ppermute ops.
+
+    The fusion structure depends only on the heap dtype, the packing
+    metadata and the lane grouping — not on the ring size — so the trace
+    runs on a single-device mesh (always available; tier-1 and the mesh
+    perf record both use this without multi-device XLA flags).
+    """
+    import dataclasses as _dc
+
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from .primitives import Communicator
+    from .tables import build_tables
+
+    cfg1 = _dc.replace(cfg, n_ranks=1, max_comms=max(cfg.max_comms, n_comms))
+    comms = [Communicator(comm_id=i, members=(0,), lane=i)
+             for i in range(n_comms)]
+    t = build_tables(cfg1, comms, [])
+    L, B, SL = cfg1.max_comms, cfg1.burst_slices, cfg1.slice_elems
+    dt = jnp.dtype(cfg1.dtype)
+    outbox = Mailbox(
+        fwd_count=jnp.zeros((1, L), jnp.int32),
+        fwd_coll=jnp.zeros((1, L), jnp.int32),
+        fwd_payload=jnp.zeros((1, L, B, SL), dt),
+        rev_count=jnp.zeros((1, L), jnp.int32),
+        rev_coll=jnp.zeros((1, L), jnp.int32),
+    )
+    mesh = jax.make_mesh((1,), ("rank",))
+
+    def per_dev(ob: Mailbox) -> Mailbox:
+        ob1 = jax.tree_util.tree_map(lambda a: a[0], ob)
+        out = _mesh_exchange(t, ob1, "rank")
+        return jax.tree_util.tree_map(lambda a: a[None], out)
+
+    fn = shard_map(per_dev, mesh=mesh, in_specs=P("rank"),
+                   out_specs=P("rank"), check_rep=False)
+    closed = jax.make_jaxpr(fn)(outbox)
+    return _count_primitive(closed.jaxpr, "ppermute")
 
 
 def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,

@@ -167,14 +167,25 @@ class OcclRuntime:
                     "conn_depth >= 3 * burst_slices or auto_conn_depth=True.",
                     ConnDepthWarning, stacklevel=3)
             self._tables = build_tables(self.cfg, self.comms, self.specs)
-            self._staging = StagingEngine(self.cfg, self._tables)
+            sharding = None
             if self.mesh is None:
                 self._daemon = build_sim_daemon(self.cfg, self._tables)
             else:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+
                 from .daemon import build_shardmap_daemon
+                # The [R, ...] state sharding: rank axis on the mesh axis.
+                # Plumbed into the staging engine (per-device flush
+                # placements skip the sim-style gathered commit) and into
+                # init_state (state is born sharded).
+                sharding = NamedSharding(self.mesh, P(self.mesh_axis))
                 self._daemon = build_shardmap_daemon(
                     self.cfg, self._tables, self.mesh, self.mesh_axis)
-            self._state = init_state(self.cfg, per_rank=True)
+            self._staging = StagingEngine(self.cfg, self._tables,
+                                          sharding=sharding)
+            self._state = init_state(self.cfg, per_rank=True,
+                                     sharding=sharding)
 
     @property
     def state(self) -> DaemonState:
@@ -387,4 +398,10 @@ class OcclRuntime:
             "burst_slices": self.cfg.burst_slices,
             "launches": self.launches,
             "launch_history": list(self.launch_history),
+            # Staging-flush accounting (mesh fast path observability):
+            # payload bytes shipped by StagingEngine.write and how many of
+            # those writes took the per-device sharded placement path.
+            "staging_flush_writes": self._staging.flush_writes,
+            "staging_flush_bytes": self._staging.flush_bytes,
+            "staging_sharded_flushes": self._staging.sharded_flushes,
         }

@@ -105,6 +105,16 @@ class _WritePlan:
     fn: Callable             # (heap, vals, gather_src, mask) -> heap
     gather_src: jnp.ndarray  # device-resident, uploaded once per plan
     mask: jnp.ndarray
+    # Sharded fast path (mesh backend): when the write set is one dense
+    # full-rank stacked block, the packed payload is placed PER DEVICE via
+    # jax.device_put with the heap's NamedSharding and the update runs
+    # shard-locally — no [R, ...] gather, no cross-device payload
+    # broadcast.  None when the engine has no sharding or the set is not
+    # a full-rank block (the general plan stays correct on any backend).
+    sharded_fn: Optional[Callable] = None   # (heap, block [R, span]) -> heap
+    src_np: Optional[np.ndarray] = None     # host copies for host-side pack
+    mask_np: Optional[np.ndarray] = None
+    identity: bool = False
 
 
 @dataclasses.dataclass
@@ -119,7 +129,8 @@ class StagingEngine:
     """Pack/unpack between logical user payloads and the padded heap
     layout, via precomputed index maps and per-signature compiled plans."""
 
-    def __init__(self, cfg: OcclConfig, tables: StaticTables):
+    def __init__(self, cfg: OcclConfig, tables: StaticTables,
+                 sharding=None):
         self.cfg = cfg
         self.t = tables
         # Host-side payloads are cast to the HEAP dtype before upload, so
@@ -129,6 +140,17 @@ class StagingEngine:
         self._dtype = np.dtype(jnp.zeros((), cfg.dtype).dtype)
         self._write_plans: dict = {}
         self._read_plans: dict = {}
+        # Mesh backend: the [R, ...] heap's NamedSharding (leading axis on
+        # the mesh's rank axis).  Full-rank stacked writes then stage via
+        # per-device jax.device_put placements instead of the sim-style
+        # single-device payload commit (see _WritePlan.sharded_fn).
+        self.sharding = sharding
+        # Flush observability (BENCH_collectives.json "mesh" section):
+        # payload bytes shipped by write() vs what a full [R, heap] mirror
+        # would move, and how many writes took the sharded placement path.
+        self.flush_writes = 0
+        self.flush_bytes = 0
+        self.sharded_flushes = 0
 
     # -- writes ----------------------------------------------------------
     def _write_plan(self, sig) -> _WritePlan:
@@ -177,8 +199,21 @@ class StagingEngine:
                     o += span
             return heap
 
+        # Sharded fast path: a dense block covering EVERY rank with one
+        # identical column window (the grad-sync / all-ranks-submit shape)
+        # updates shard-locally after per-device payload placement.
+        sharded_fn = None
+        if (self.sharding is not None and stack is not None
+                and stack[0] == 0 and len(merged) == self.cfg.n_ranks):
+            s_off = stack[1]
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def sharded_fn(heap, block):
+                return jax.lax.dynamic_update_slice(heap, block, (0, s_off))
+
         plan = _WritePlan(fn=fn, gather_src=jnp.asarray(src),
-                          mask=jnp.asarray(mask))
+                          mask=jnp.asarray(mask), sharded_fn=sharded_fn,
+                          src_np=src, mask_np=mask, identity=identity)
         if len(self._write_plans) > 64:    # evict least-recently-used
             self._write_plans.pop(next(iter(self._write_plans)))
         self._write_plans[sig] = plan
@@ -222,6 +257,23 @@ class StagingEngine:
             tuple((items[i][0], items[i][1], items[i][3]) for i in order))
         vals = [datas[i] for i in order]
         vals = vals[0] if len(vals) == 1 else np.concatenate(vals)
+        self.flush_writes += 1
+        self.flush_bytes += vals.nbytes
+        if plan.sharded_fn is not None:
+            # Mesh fast path: pack host-side with the same precomputed
+            # maps, then device_put the [R, span] block with the heap's
+            # NamedSharding — each device receives ONLY its own rank's
+            # rows, and the donated update runs shard-locally (the
+            # sim-style path would commit the whole payload to one device
+            # and let SPMD re-distribute it).
+            packed = vals if plan.identity else vals[plan.src_np]
+            if not plan.identity:
+                packed[~plan.mask_np] = packed.dtype.type(0)
+            block = jax.device_put(
+                packed.reshape(self.cfg.n_ranks, -1), self.sharding)
+            heap = plan.sharded_fn(state.heap_in, block)
+            self.sharded_flushes += 1
+            return state._replace(heap_in=heap)
         # vals is passed as numpy in the HEAP dtype: the jit commits it
         # inside the one dispatch (zero-copy on CPU; one heap-width H2D
         # transfer on accelerators).

@@ -108,8 +108,15 @@ class DaemonState(NamedTuple):
     global_live: jnp.ndarray   # [] bool — fabric-wide continue flag
 
 
-def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
-    """Fresh state; leading rank axis added when ``per_rank`` (sim backend)."""
+def init_state(cfg: OcclConfig, per_rank: bool = True,
+               sharding=None) -> DaemonState:
+    """Fresh state; leading rank axis added when ``per_rank``.
+
+    ``sharding`` (mesh backend) is a ``NamedSharding`` placing the leading
+    rank axis on the mesh's rank axis: every [R, ...] leaf is device_put
+    per shard at creation, so the state is device-resident and sharded
+    BEFORE the first daemon launch or staging flush — no full-array
+    single-device hop on first use."""
     C, K, L = cfg.max_colls, cfg.conn_depth, cfg.max_comms
     B = cfg.burst_slices
     SQL, CQL, H, SL = cfg.sq_len, cfg.cq_len, cfg.heap_elems, cfg.slice_elems
@@ -156,4 +163,9 @@ def init_state(cfg: OcclConfig, per_rank: bool = True) -> DaemonState:
                 for f, v in s._asdict().items()
             }
         )
+        if sharding is not None:
+            import jax
+
+            s = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, sharding), s)
     return s

@@ -58,6 +58,16 @@ class StaticTables:
     # fused into ONE stacked ppermute pair per direction in the mesh
     # backend (instead of one ppermute per lane per mailbox field).
     lane_groups: list         # [(lanes: list[int], fwd_pairs, rev_pairs)]
+    # Per-ring-group lane-pairing metadata for the packed 16-bit exchange:
+    # aligned with ``lane_groups``.  Each entry is ``(packed_cols, pad)`` —
+    # the group's [G, B*SL] 16-bit payload rows are zero-padded by ``pad``
+    # elements (odd lane) and adjacent element PAIRS are bitcast into
+    # ``packed_cols`` i32 lanes, so the payload concatenates with the i32
+    # (coll, count) header and rides ONE forward ppermute (2 ppermutes per
+    # superstep, same as 32-bit dtypes).  ``None`` when the heap dtype is
+    # not 16-bit or ``cfg.packed_16bit`` is off (escape hatch): the
+    # exchange falls back to separate header/payload ppermutes.
+    lane_group_pack16: list | None  # [(packed_cols: int, pad: int)] | None
 
     # staging layout (runtime I/O; consumed by staging.StagingEngine) -----
     # The padded chunk layout of every collective is resolved ONCE here, so
@@ -77,6 +87,13 @@ class StaticTables:
     stage_out_map: list       # [C] np.int32[out_log[c]]: logical j -> rel off
 
     max_steps: int
+
+
+def _wire_itemsize(dtype: str) -> int:
+    """Byte width of the heap/wire dtype (ml_dtypes supplies bfloat16)."""
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype).itemsize
 
 
 def build_tables(
@@ -116,6 +133,7 @@ def build_tables(
         fwd_perm_pairs=[[] for _ in range(L)],
         rev_perm_pairs=[[] for _ in range(L)],
         lane_groups=[],
+        lane_group_pack16=None,
         chunk_pad=np.zeros(C, np.int32),
         chunk_log=np.zeros(C, np.int32),
         in_log=np.zeros(C, np.int32),
@@ -153,6 +171,15 @@ def build_tables(
         (lanes, list(sig), t.rev_perm_pairs[lanes[0]])
         for sig, lanes in by_perm.items()
     ]
+    # Lane-pairing metadata for the packed 16-bit exchange (consumed by
+    # daemon._mesh_exchange): pair adjacent 16-bit payload elements of each
+    # fused [G, B*SL] group row into i32 lanes; an odd row width gets one
+    # zero pad element that the receiver slices off.
+    if cfg.packed_16bit and _wire_itemsize(cfg.dtype) == 2:
+        width = cfg.burst_slices * cfg.slice_elems
+        pad = width % 2
+        t.lane_group_pack16 = [((width + pad) // 2, pad)
+                               for _ in t.lane_groups]
 
     for s in specs:
         c = s.coll_id

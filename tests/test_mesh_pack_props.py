@@ -1,0 +1,63 @@
+"""Hypothesis property sweep for the packed 16-bit mesh exchange: for
+random lane counts, odd/even pairings (payload widths) and 16-bit dtypes,
+packing adjacent element pairs into i32 lanes, riding a ring permutation
+and unpacking is BITWISE identical to permuting the raw 16-bit rows —
+i.e. the packed exchange is a lossless transport, including NaN payloads
+and every other bit pattern.
+
+Skipped entirely when hypothesis is not installed (tier-1 containers);
+``pip install -r requirements-dev.txt`` restores the sweep.  The
+deterministic fallback lives in test_daemon_fastpath.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.daemon import _pack16_to_i32, _unpack16_from_i32
+
+DTYPES = ["bfloat16", "float16"]
+
+
+def _payload(data, rows, width, dtype):
+    """Random 16-bit BIT PATTERNS (not floats): exactness must hold for
+    NaNs, infs, subnormals — every pattern the wire can carry."""
+    bits = data.draw(st.lists(st.integers(0, (1 << 16) - 1),
+                              min_size=rows * width, max_size=rows * width))
+    return (np.array(bits, np.uint16)
+            .view(np.dtype(jnp.dtype(dtype)))
+            .reshape(rows, width))
+
+
+@settings(deadline=None, max_examples=60)
+@given(lanes=st.integers(1, 6), width=st.integers(1, 48),
+       dtype=st.sampled_from(DTYPES), data=st.data())
+def test_pack_unpack_roundtrip_bitexact(lanes, width, dtype, data):
+    pay = _payload(data, lanes, width, dtype)
+    pad = width % 2
+    packed = _pack16_to_i32(jnp.asarray(pay), pad)
+    assert packed.shape == (lanes, (width + pad) // 2)
+    assert packed.dtype == jnp.int32
+    out = _unpack16_from_i32(packed, jnp.dtype(dtype), width)
+    assert np.asarray(out).tobytes() == pay.tobytes()
+
+
+@settings(deadline=None, max_examples=40)
+@given(ring=st.integers(2, 8), width=st.integers(1, 32), shift=st.integers(1, 7),
+       dtype=st.sampled_from(DTYPES), data=st.data())
+def test_packed_exchange_equals_unpacked_exchange(ring, width, shift, dtype,
+                                                  data):
+    # A ppermute is a pure row permutation over ring members: the packed
+    # exchange (pack -> permute i32 rows -> unpack) must deliver the same
+    # bits as the unpacked exchange (permute the raw 16-bit rows).
+    pay = _payload(data, ring, width, dtype)
+    perm = np.roll(np.arange(ring), shift % ring)
+    packed = np.asarray(_pack16_to_i32(jnp.asarray(pay), width % 2))
+    got = _unpack16_from_i32(jnp.asarray(packed[perm]), jnp.dtype(dtype),
+                             width)
+    assert np.asarray(got).tobytes() == pay[perm].tobytes()

@@ -101,8 +101,9 @@ _BURST_SCRIPT = textwrap.dedent("""
         np.testing.assert_allclose(rt.read_output(r, c), want,
                                    rtol=1e-4, atol=1e-6)
 
-    # 16-bit heap dtype: fuse_payload is False, so the separate
-    # header/payload ppermute branch of _mesh_exchange executes.
+    # 16-bit heap dtype: the PACKED exchange executes (element pairs
+    # bitcast into i32 lanes ride the fused header++payload ppermute),
+    # and the all-ranks staged submits take the sharded flush placement.
     cfg16 = OcclConfig(n_ranks=8, max_colls=2, max_comms=1, slice_elems=8,
                        conn_depth=6, burst_slices=4, dtype="bfloat16",
                        heap_elems=1 << 12)
@@ -118,6 +119,8 @@ _BURST_SCRIPT = textwrap.dedent("""
         np.testing.assert_allclose(
             np.asarray(rt16.read_output(r, g), np.float32), wg,
             rtol=2e-2, atol=2e-2)
+    st16 = rt16.stats()
+    assert st16["staging_sharded_flushes"] >= 1, st16
     print("MESH_BURST_OK")
 """).replace("@SRC@", str(ROOT / "src"))
 
