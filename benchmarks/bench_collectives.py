@@ -255,6 +255,7 @@ RECORD_SECTIONS = {
     "contention": ("bursts",),
     "staging": ("speedup_vs_legacy", "speedup_vs_legacy_scalar"),
     "mesh": ("ppermutes_per_superstep", "staged_flush"),
+    "hierarchy": ("flat", "two_level", "superstep_ratio"),
 }
 
 
@@ -540,6 +541,82 @@ def run_contention_sweep(bursts=(1, 4, 8), n=2048, R=8, C=8, conn_depth=32,
     doc["contention"] = record
     _write_record(out_path, doc)
     print(f"# wrote {out_path} (contention)")
+    return record
+
+
+def _hierarchy_once(algo: str, hierarchy, R: int, n: int, burst: int,
+                    conn_depth: int, iters: int) -> dict:
+    """Supersteps + wall time of one all-reduce lowering (flat ring vs
+    the composite two-level chain) at R ranks on the sim backend.  One
+    warm iteration converges gang scheduling and compiles; the measured
+    iterations report the steady state."""
+    cfg = OcclConfig(n_ranks=R, max_colls=4, max_comms=3,
+                     slice_elems=BURST_SLICE_ELEMS, conn_depth=conn_depth,
+                     burst_slices=burst, heap_elems=1 << 17,
+                     superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    world = rt.communicator(list(range(R)))
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n, algo=algo,
+                      hierarchy=hierarchy)
+    rng = np.random.RandomState(0)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    want = np.sum(xs, axis=0)
+
+    def once():
+        for r in range(R):
+            rt.submit(r, cid, data=xs[r])
+        rt.drive()
+
+    once()                                   # warmup: compile + converge
+    np.testing.assert_allclose(rt.read_output(0, cid), want,
+                               rtol=1e-4, atol=1e-4)
+    s0 = rt.stats()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        once()
+    dt = (time.perf_counter() - t0) / iters
+    s1 = rt.stats()
+    steps = (int(s1["supersteps"].max()) - int(s0["supersteps"].max())) \
+        / iters
+    slices = (int(s1["slices_moved"].sum())
+              - int(s0["slices_moved"].sum())) / iters
+    return {"latency_s": dt, "supersteps": steps, "slices": slices}
+
+
+def run_hierarchy_bench(R=16, hierarchy=(4, 4), n=2048, burst=8,
+                        conn_depth=24, iters=3, out_path=BENCH_JSON) -> dict:
+    """Composite-layer perf record (``hierarchy`` key): the flat ring vs
+    the device-chained two-level all-reduce at R=16 on the sim backend.
+
+    With slice bursts the superstep count is latency-term dominated
+    (2R - 1 = 31 ring steps vs N + (2G - 1) + N = 15 chain steps at
+    (4, 4)), so the two-level chain must complete in FEWER supersteps —
+    the check_gates.py hierarchy gate.  Wall time is recorded alongside
+    for trajectory tracking (CPU-sim wall time includes XLA dispatch for
+    the extra lanes, so supersteps are the structural signal).
+    """
+    flat = _hierarchy_once("ring", None, R, n, burst, conn_depth, iters)
+    two = _hierarchy_once("two_level", hierarchy, R, n, burst, conn_depth,
+                          iters)
+    record = {
+        "config": {"n_ranks": R, "hierarchy": list(hierarchy), "n_elems": n,
+                   "slice_elems": BURST_SLICE_ELEMS, "burst_slices": burst,
+                   "conn_depth": conn_depth, "iters": iters,
+                   "backend": "sim",
+                   "workload": "all-reduce, flat ring vs two-level chain"},
+        "flat": flat,
+        "two_level": two,
+        "superstep_ratio": two["supersteps"] / max(flat["supersteps"], 1),
+    }
+    row("collectives/hierarchy_flat_ring", flat["latency_s"] * 1e6,
+        f"supersteps={flat['supersteps']:.0f}")
+    row("collectives/hierarchy_two_level", two["latency_s"] * 1e6,
+        f"supersteps={two['supersteps']:.0f};"
+        f"ratio_vs_flat={record['superstep_ratio']:.2f}")
+    doc = _read_record(out_path)
+    doc["hierarchy"] = record
+    _write_record(out_path, doc)
+    print(f"# wrote {out_path} (hierarchy)")
     return record
 
 

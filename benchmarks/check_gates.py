@@ -13,6 +13,11 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
 * **mesh pack** — packed 16-bit heaps must ride exactly 2 ppermutes per
   ``_mesh_exchange`` superstep, same as 32-bit (3 means the packing
   regressed to the separate header/payload exchange).
+* **hierarchy** — the composite two-level all-reduce at R=16 must
+  complete in FEWER supersteps than the flat ring (the chain's latency
+  term is N + (2G - 1) + N = 15 steps vs the ring's 2R - 1 = 31; parity
+  or worse means the device-side chain advance regressed to host round
+  trips or the stages stopped overlapping their slice bursts).
 
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
@@ -68,6 +73,17 @@ def check(doc: dict) -> list[str]:
             "unpacked-bf16 baseline no longer pays 3 ppermutes "
             f"(got {pp.get('bfloat16_unpacked')}) — the escape-hatch "
             "baseline the packed path is measured against has drifted")
+
+    h = doc["hierarchy"]
+    flat_steps = h["flat"]["supersteps"]
+    two_steps = h["two_level"]["supersteps"]
+    print(f"hierarchy supersteps at R={h['config']['n_ranks']}: "
+          f"flat {flat_steps:.0f}, two_level {two_steps:.0f} "
+          f"(ratio {h['superstep_ratio']:.2f})")
+    if not two_steps < flat_steps:
+        failures.append(
+            f"two-level all-reduce regressed: {two_steps:.0f} supersteps "
+            f"vs flat ring's {flat_steps:.0f} (gate: strictly fewer)")
     return failures
 
 
@@ -77,7 +93,8 @@ def main(argv: list[str]) -> int:
     path = (pathlib.Path(argv[1]) if len(argv) > 1
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
-        required=("staging", "contention", "mesh"), out_path=path)
+        required=("staging", "contention", "mesh", "hierarchy"),
+        out_path=path)
     failures = check(doc)
     for f in failures:
         print(f"GATE FAILED: {f}", file=sys.stderr)

@@ -38,6 +38,10 @@ def main(quick: bool = False) -> None:
         # speedup is the acceptance-tracked number).
         bench_collectives.run_staging_bench(iters=10)
         bench_collectives.run_mesh_bench()
+        # Composite layer: flat ring vs two-level chain at R=16 — the
+        # full-size point (the hierarchy gate compares supersteps, which
+        # are size-stable, so --quick keeps the acceptance workload).
+        bench_collectives.run_hierarchy_bench(iters=1)
         # Fail LOUDLY on a stale/partial record: every section the gates
         # consume must have been (re)written by THIS run — a missing
         # ``contention`` key in a stale BENCH_collectives.json used to
@@ -55,6 +59,7 @@ def main(quick: bool = False) -> None:
     bench_collectives.run_contention_sweep()
     bench_collectives.run_staging_bench(iters=20)
     bench_collectives.run_mesh_bench()
+    bench_collectives.run_hierarchy_bench()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)

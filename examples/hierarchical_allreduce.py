@@ -1,0 +1,121 @@
+"""Composite-collective demo: hierarchical two-level all-reduce via
+device-chained sub-collectives.
+
+Three acts:
+
+1. **Flat vs two-level registration** — the same logical all-reduce over a
+   4x4 rank grid registered both ways; the two-level lowering (intra-group
+   reduce-scatter -> inter-group all-reduce over chunk owners ->
+   intra-group all-gather, "The Big Send-off" decomposition) completes in
+   ~half the supersteps because its latency term is N + (2G - 1) + N = 15
+   primitive steps instead of the ring's 2R - 1 = 31.  The chain advances
+   ON DEVICE: one daemon launch runs all three stages, observable in the
+   stats() chain/stage counters.
+
+2. **Auto selection** — ``algo="auto"`` picks the flat ring below
+   ``cfg.two_level_threshold`` elements and the two-level chain above it.
+
+3. **The adversarial chained-order scenario** — two chains share the
+   derived intra/inter lanes and the ranks submit them in conflicting
+   orders.  The static single-FIFO-queue baseline deadlocks on this order
+   set; OCCL's preemption completes both chains — composed collectives
+   stay deadlock-free, not just independently submitted ones.
+
+    PYTHONPATH=src python examples/hierarchical_allreduce.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime,
+                        run_static_order)
+
+R, HIER, N_ELEMS = 16, (4, 4), 2048
+rng = np.random.RandomState(42)
+
+
+def make_runtime():
+    cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=3, slice_elems=64,
+                     conn_depth=24, burst_slices=8, heap_elems=1 << 17,
+                     superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    return rt, rt.communicator(list(range(R)))
+
+
+def drive_once(rt, cid, xs):
+    for r in range(R):
+        rt.submit(r, cid, data=xs[r])
+    s0 = int(np.asarray(rt.stats()["supersteps"]).max())
+    rt.drive()
+    return int(np.asarray(rt.stats()["supersteps"]).max()) - s0
+
+
+# --- 1. flat ring vs two-level chain -----------------------------------
+xs = [rng.randn(N_ELEMS).astype(np.float32) for _ in range(R)]
+want = np.sum(xs, axis=0)
+steps = {}
+for algo in ("ring", "two_level"):
+    rt, world = make_runtime()
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=N_ELEMS,
+                      algo=algo, hierarchy=HIER)
+    drive_once(rt, cid, xs)                    # warmup: compile + converge
+    steps[algo] = drive_once(rt, cid, xs)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                   rtol=1e-4, atol=1e-4)
+    st = rt.stats()
+    if algo == "two_level":
+        chain = st["chains"][cid]
+        print(f"two-level chain stages {chain}: per-stage completions "
+              f"{st['stage_completions'][:, chain].sum(axis=0).tolist()}, "
+              f"logical CQEs only at the tail "
+              f"{st['completed'][:, chain].sum(axis=0).tolist()}")
+print(f"supersteps per all-reduce at R={R}: flat ring {steps['ring']}, "
+      f"two-level {steps['two_level']} "
+      f"({steps['ring'] / steps['two_level']:.1f}x fewer)")
+assert steps["two_level"] < steps["ring"]
+
+# --- 2. size-based auto selection --------------------------------------
+rt, world = make_runtime()
+small = rt.register(CollKind.ALL_REDUCE, world, n_elems=256, algo="auto")
+big = rt.register(CollKind.ALL_REDUCE, world, n_elems=N_ELEMS, algo="auto")
+print(f"auto selection: {256} elems -> "
+      f"{'two_level' if small in rt.stats()['chains'] else 'ring'}, "
+      f"{N_ELEMS} elems -> "
+      f"{'two_level' if big in rt.stats()['chains'] else 'ring'} "
+      f"(threshold {rt.cfg.two_level_threshold})")
+
+# --- 3. adversarial chained submission orders --------------------------
+orders = {r: [0, 1] if r % 2 == 0 else [1, 0] for r in range(R)}
+static = run_static_order(orders, {c: list(range(R)) for c in range(2)})
+print("static single-FIFO-queue baseline on the conflicting orders:",
+      "DEADLOCK" if static.deadlocked else "ok",
+      f"(wait-for cycle over ranks {static.cycle})")
+assert static.deadlocked
+
+rt, world = make_runtime()
+a = rt.register(CollKind.ALL_REDUCE, world, n_elems=512,
+                algo="two_level", hierarchy=HIER)
+b = rt.register(CollKind.ALL_REDUCE, world, n_elems=384,
+                algo="two_level", hierarchy=HIER)
+data = {c: [rng.randn(n).astype(np.float32) for _ in range(R)]
+        for c, n in [(a, 512), (b, 384)]}
+for r in range(R):
+    for slot in orders[r]:
+        cid = [a, b][slot]
+        rt.submit(r, cid, data=data[cid][r])
+rt.drive(max_launches=128)
+for cid in (a, b):
+    w = np.sum(data[cid], axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), w,
+                                   rtol=1e-4, atol=1e-4)
+st = rt.stats()
+print(f"OCCL: both chains complete under conflicting orders — "
+      f"{int(st['preempts'].sum())} preemptions, "
+      f"{rt.launches} daemon launches")
+print("OK — composed collectives are deadlock-free, not just "
+      "independently submitted ones.")

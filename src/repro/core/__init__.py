@@ -5,6 +5,8 @@ per-rank primitive sequences over connector ring buffers, executed by a
 long-running daemon loop with decentralized preemption (spin thresholds)
 and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
 """
+from .algos import (CompositePlan, SubCollective, default_hierarchy,
+                    plan_two_level, select_algo)
 from .config import OcclConfig, OrderPolicy, ReduceOp
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
 from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
@@ -16,4 +18,6 @@ __all__ = [
     "CollKind", "CollectiveSpec", "Communicator", "Prim",
     "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning", "StagingEngine",
     "run_static_order", "consistent_order_exists",
+    "CompositePlan", "SubCollective", "default_hierarchy",
+    "plan_two_level", "select_algo",
 ]

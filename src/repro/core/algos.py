@@ -1,0 +1,257 @@
+"""Collective algorithm registry + the composite-collective IR.
+
+Two layers live here:
+
+* **Algorithm registry** — the per-kind ring program builders that used to
+  be inlined in :func:`repro.core.primitives.build_program` are registered
+  under ``("ring", kind)`` keys, so alternative single-communicator
+  algorithms (tree, bucket, ...) can be added without touching the
+  builder dispatch.  ``build_ring_program`` is the registry-backed
+  entrypoint; ``primitives.build_program`` delegates here.
+
+* **CompositePlan IR** — a logical collective over a ``G x N`` rank grid
+  lowered into a CHAIN of ring sub-collectives over derived
+  sub-communicators.  The canonical plan is the two-level all-reduce of
+  "The Big Send-off" (PAPERS.md): intra-group reduce-scatter -> inter-group
+  all-reduce over chunk owners -> intra-group all-gather, which replaces
+  the flat ring's ``2R - 1`` latency steps with ``N + (2G - 1) + N``.
+  Each stage is an ordinary registered collective; the chain edges become
+  the registration-time successor tables that let the daemon advance a
+  chain ON DEVICE (scheduler.lanes_step enqueues the successor SQE in the
+  same superstep its predecessor completes).
+
+Chained sub-collectives are exactly the inter-collective dependencies the
+source paper warns about (circular collective dependency, Sec. 1): stage
+k+1 on one rank waits for stage k on OTHER ranks.  The OCCL scheduler's
+preemption keeps composed chains deadlock-free the same way it keeps
+independently submitted collectives deadlock-free — the deadlock-freedom
+property sweep covers chains submitted in conflicting orders.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+from .primitives import CollKind, Prim
+
+# ---------------------------------------------------------------------------
+# algorithm registry (single-communicator program builders)
+# ---------------------------------------------------------------------------
+
+# (algo_name, kind) -> builder(member_idx, group_size, root_idx) -> program.
+ALGO_BUILDERS: dict = {}
+
+
+def register_algo(algo: str, kind: CollKind):
+    """Decorator: register a per-rank program builder for (algo, kind)."""
+
+    def deco(fn: Callable[[int, int, int], list]):
+        ALGO_BUILDERS[(algo, kind)] = fn
+        return fn
+
+    return deco
+
+
+@register_algo("ring", CollKind.ALL_REDUCE)
+def _ring_all_reduce(m: int, R: int, root: int) -> list:
+    # Phase 1 (reduce-scatter): chunk c starts at rank c; at step s rank r
+    # handles chunk (r - s) mod R; partial completes at step R-1.
+    prog = [(Prim.SEND, m)]
+    for s in range(1, R - 1):
+        prog.append((Prim.RECV_REDUCE_SEND, (m - s) % R))
+    prog.append((Prim.RECV_REDUCE_COPY_SEND, (m - (R - 1)) % R))
+    # Phase 2 (all-gather): fully-reduced chunks circulate once more.
+    for s in range(R, 2 * R - 2):
+        prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
+    prog.append((Prim.RECV, (m + 2) % R))
+    return prog
+
+
+@register_algo("ring", CollKind.ALL_GATHER)
+def _ring_all_gather(m: int, R: int, root: int) -> list:
+    prog = [(Prim.COPY_SEND, m)]
+    for s in range(1, R - 1):
+        prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
+    prog.append((Prim.RECV, (m + 1) % R))
+    return prog
+
+
+@register_algo("ring", CollKind.REDUCE_SCATTER)
+def _ring_reduce_scatter(m: int, R: int, root: int) -> list:
+    # Chunk c finalizes at rank c after R-1 hops, so it starts at c+1.
+    prog = [(Prim.SEND, (m - 1) % R)]
+    for s in range(1, R - 1):
+        prog.append((Prim.RECV_REDUCE_SEND, (m - s - 1) % R))
+    prog.append((Prim.RECV_REDUCE_COPY, m))
+    return prog
+
+
+@register_algo("ring", CollKind.BROADCAST)
+def _ring_broadcast(m: int, R: int, root: int) -> list:
+    d = (m - root) % R
+    prog = []
+    for k in range(R):  # pipeline the R chunks down the chain
+        if d == 0:
+            prog.append((Prim.COPY_SEND, k))
+        elif d == R - 1:
+            prog.append((Prim.RECV, k))
+        else:
+            prog.append((Prim.RECV_COPY_SEND, k))
+    return prog
+
+
+@register_algo("ring", CollKind.REDUCE)
+def _ring_reduce(m: int, R: int, root: int) -> list:
+    # R >= 2 here: single-member groups early-return a COPY in
+    # build_ring_program, so the chain roles below are total.
+    d = (m - root) % R
+    prog = []
+    for k in range(R):
+        if d == 1:
+            prog.append((Prim.SEND, k))
+        elif d == 0:
+            prog.append((Prim.RECV_REDUCE_COPY, k))
+        else:
+            prog.append((Prim.RECV_REDUCE_SEND, k))
+    return prog
+
+
+def build_ring_program(
+    kind: CollKind, member_idx: int, group_size: int, root_idx: int = 0,
+    algo: str = "ring",
+) -> list:
+    """Per-rank primitive sequence ``[(prim, chunk_idx), ...]`` from the
+    algorithm registry.  Ring algorithm, Simple protocol (paper Sec. 5)."""
+    if group_size == 1:
+        # Degenerate single-member group: a local copy (broadcast/reduce/
+        # all_* all collapse to in -> out).
+        return [(Prim.COPY, 0)]
+    try:
+        builder = ALGO_BUILDERS[(algo, CollKind(kind))]
+    except KeyError:  # pragma: no cover
+        raise ValueError(f"no registered builder for algo={algo!r}, "
+                         f"kind={CollKind(kind)!r}")
+    return builder(member_idx, group_size, root_idx)
+
+
+# ---------------------------------------------------------------------------
+# composite plans (multi-communicator chained sub-collectives)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SubCollective:
+    """One stage of a composite plan: an ordinary ring collective over a
+    PARTITIONED sub-communicator (disjoint rings sharing one lane)."""
+
+    kind: CollKind
+    members: tuple          # flat rank tuple; consecutive ``ring_size``
+                            # runs are the disjoint rings of this stage
+    ring_size: int
+    n_elems: int            # logical element count of this stage
+    root: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositePlan:
+    """A logical collective lowered to a chain of sub-collectives.
+
+    ``stages[k+1]`` consumes ``stages[k]``'s logical output; the tables
+    layer turns each edge into a registration-time heap relink map and a
+    ``next_coll`` successor entry, so the daemon advances the whole chain
+    on device.  Logical I/O addresses only the endpoints: payloads stage
+    into ``stages[0]``'s input region, results read from ``stages[-1]``'s
+    output region.
+    """
+
+    kind: CollKind          # the logical collective the chain implements
+    n_elems: int
+    hierarchy: tuple        # (G groups, N ranks per group)
+    stages: tuple           # tuple[SubCollective, ...]
+
+
+def default_hierarchy(R: int) -> tuple:
+    """(G, N) with G * N == R and N the largest divisor <= sqrt(R) —
+    the most square grid, which minimizes the two-level latency term
+    N + (2G - 1) + N.  Primes fall back to (R, 1)."""
+    best = 1
+    for n in range(2, int(math.isqrt(R)) + 1):
+        if R % n == 0:
+            best = n
+    return (R // best, best)
+
+
+def plan_two_level(kind: CollKind, members: Sequence[int],
+                   hierarchy: tuple, n_elems: int) -> CompositePlan:
+    """Lower a logical all-reduce over a ``G x N`` rank grid into the
+    two-level chain (The Big Send-off, PAPERS.md):
+
+      1. intra-group REDUCE_SCATTER over each group's N-ring: member m of
+         group g ends up owning chunk m of the group-local sum;
+      2. inter-group ALL_REDUCE over the G chunk owners of each position m
+         (one G-ring per chunk position): chunk m becomes globally reduced
+         everywhere;
+      3. intra-group ALL_GATHER over the N-rings: every rank reassembles
+         the full globally-reduced payload.
+
+    ``members`` is the logical communicator's ring order, reshaped
+    row-major: group g = members[g*N : (g+1)*N].
+    """
+    G, N = hierarchy
+    R = len(members)
+    if G * N != R:
+        raise ValueError(f"hierarchy {hierarchy} does not tile the "
+                         f"{R}-member communicator (G * N != {R})")
+    if kind != CollKind.ALL_REDUCE:
+        raise ValueError(
+            f"two_level lowering is defined for ALL_REDUCE only, got "
+            f"{CollKind(kind)!r} (register other kinds with algo='ring')")
+    members = tuple(members)
+    groups = [members[g * N:(g + 1) * N] for g in range(G)]
+    # Inter-group rings: position m's chunk owners across all groups.
+    owners = [tuple(groups[g][m] for g in range(G)) for m in range(N)]
+    intra = tuple(r for grp in groups for r in grp)          # == members
+    inter = tuple(r for ring in owners for r in ring)
+    chunk = -(-n_elems // N)                                 # ceil
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.REDUCE_SCATTER, intra, N, n_elems),
+            SubCollective(CollKind.ALL_REDUCE, inter, G, chunk),
+            SubCollective(CollKind.ALL_GATHER, intra, N, n_elems),
+        ))
+
+
+def select_algo(algo: str, kind: CollKind, n_elems: int, group_size: int,
+                hierarchy: Optional[tuple], threshold: int) -> str:
+    """Resolve ``"auto"`` to a concrete algorithm.
+
+    Flat ring below the payload threshold, two-level at/above it: with
+    slice bursts the superstep cost of a collective is dominated by its
+    primitive-step (latency) term, which grows as ``2R - 1`` for the flat
+    ring but only ``2N + 2G - 1`` for the two-level chain — the larger
+    the payload the longer a flat ring's per-step slice train, so the
+    decomposition pays off once the payload amortizes the chain's two
+    stage hand-offs.  Explicit ``"ring"`` / ``"two_level"`` pass through
+    unchanged; auto falls back to ring when the kind has no two-level
+    lowering or the grid is degenerate (prime group, G or N == 1).
+    """
+    if algo != "auto":
+        return algo
+    if kind != CollKind.ALL_REDUCE or n_elems < threshold:
+        return "ring"
+    if hierarchy is not None:
+        G, N = hierarchy
+        # A caller-provided grid that does not tile the group is a bug,
+        # not a selection hint: silently downgrading to the flat ring
+        # would hide the typo (the explicit two_level path raises the
+        # same error via plan_two_level).
+        if G * N != group_size:
+            raise ValueError(
+                f"hierarchy {hierarchy} does not tile the "
+                f"{group_size}-member communicator (G * N != {group_size})")
+    else:
+        G, N = default_hierarchy(group_size)
+    if G <= 1 or N <= 1:
+        return "ring"                          # degenerate grid (primes)
+    return "two_level"

@@ -135,6 +135,24 @@ class OcclConfig:
                                     # the cumulative epoch clock is separate
                                     # and unbounded)
 
+    # --- collective algorithms (composite layer, core/algos.py) ---------
+    algo: str = "ring"              # default algorithm for register():
+                                    # "ring" (flat single-communicator),
+                                    # "two_level" (hierarchical chain:
+                                    # intra-group reduce-scatter ->
+                                    # inter-group all-reduce -> intra-group
+                                    # all-gather over a G x N rank grid),
+                                    # or "auto" (size-based selection).
+                                    # register(algo=...) overrides per
+                                    # collective.
+    two_level_threshold: int = 1024 # "auto" payload threshold (elements):
+                                    # flat ring below, two-level at/above —
+                                    # with slice bursts the superstep cost
+                                    # is latency-term dominated (2R - 1 ring
+                                    # steps vs 2N + 2G - 1 for the chain),
+                                    # and the larger payload amortizes the
+                                    # chain's two stage hand-offs.
+
     # --- numerics / kernels ---------------------------------------------
     dtype: str = "float32"          # heap / wire dtype
     use_pallas: bool = False        # route slice math through Pallas kernels
@@ -165,6 +183,8 @@ class OcclConfig:
         assert self.slice_elems >= 1
         assert self.burst_slices >= 1
         assert self.spin_base >= self.spin_min
+        assert self.algo in ("ring", "two_level", "auto"), self.algo
+        assert self.two_level_threshold >= 0
         if self.auto_conn_depth and self.conn_depth < 3 * self.burst_slices:
             # Credit round trip (commit, consume, credit-return) is ~3
             # supersteps; K >= 3B keeps the ring from saturating.

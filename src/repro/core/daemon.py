@@ -61,6 +61,12 @@ def shared_tables(t: StaticTables) -> SharedTables:
         out_chunked=jnp.asarray(t.out_chunked),
         base_in_off=jnp.asarray(t.base_in_off),
         base_out_off=jnp.asarray(t.base_out_off),
+        next_coll=jnp.asarray(t.next_coll),
+        chain_tail=jnp.asarray(t.chain_tail),
+        chain_prio_inherit=jnp.asarray(t.chain_prio_inherit),
+        chain_mask=jnp.asarray(t.chain_mask),
+        chain_src=jnp.asarray(t.chain_src),
+        chain_dst=jnp.asarray(t.chain_dst),
     )
 
 

@@ -72,58 +72,13 @@ def build_program(
 
     ``member_idx`` is the rank's position in the communicator's ring order;
     data flows member m -> member (m+1) % group_size.  Ring algorithm,
-    Simple protocol (paper Sec. 5 Benchmarks).
+    Simple protocol (paper Sec. 5 Benchmarks).  The per-kind builders
+    live in the algorithm registry (:mod:`repro.core.algos`); this
+    wrapper keeps the historical entrypoint.
     """
-    m, R = member_idx, group_size
-    if R == 1:
-        # Degenerate single-member group: a local copy (broadcast/reduce/
-        # all_* all collapse to in -> out).
-        return [(Prim.COPY, 0)]
+    from .algos import build_ring_program
 
-    prog: list[tuple[Prim, int]] = []
-    if kind == CollKind.ALL_REDUCE:
-        # Phase 1 (reduce-scatter): chunk c starts at rank c; at step s rank r
-        # handles chunk (r - s) mod R; partial completes at step R-1.
-        prog.append((Prim.SEND, m))
-        for s in range(1, R - 1):
-            prog.append((Prim.RECV_REDUCE_SEND, (m - s) % R))
-        prog.append((Prim.RECV_REDUCE_COPY_SEND, (m - (R - 1)) % R))
-        # Phase 2 (all-gather): fully-reduced chunks circulate once more.
-        for s in range(R, 2 * R - 2):
-            prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
-        prog.append((Prim.RECV, (m + 2) % R))
-    elif kind == CollKind.ALL_GATHER:
-        prog.append((Prim.COPY_SEND, m))
-        for s in range(1, R - 1):
-            prog.append((Prim.RECV_COPY_SEND, (m - s) % R))
-        prog.append((Prim.RECV, (m + 1) % R))
-    elif kind == CollKind.REDUCE_SCATTER:
-        # Chunk c finalizes at rank c after R-1 hops, so it starts at c+1.
-        prog.append((Prim.SEND, (m - 1) % R))
-        for s in range(1, R - 1):
-            prog.append((Prim.RECV_REDUCE_SEND, (m - s - 1) % R))
-        prog.append((Prim.RECV_REDUCE_COPY, m))
-    elif kind == CollKind.BROADCAST:
-        d = (m - root_idx) % R
-        for k in range(R):  # pipeline the R chunks down the chain
-            if d == 0:
-                prog.append((Prim.COPY_SEND, k))
-            elif d == R - 1:
-                prog.append((Prim.RECV, k))
-            else:
-                prog.append((Prim.RECV_COPY_SEND, k))
-    elif kind == CollKind.REDUCE:
-        d = (m - root_idx) % R
-        for k in range(R):
-            if d == 1 or (R == 1):
-                prog.append((Prim.SEND, k))
-            elif d == 0:
-                prog.append((Prim.RECV_REDUCE_COPY, k))
-            else:
-                prog.append((Prim.RECV_REDUCE_SEND, k))
-    else:  # pragma: no cover
-        raise ValueError(kind)
-    return prog
+    return build_ring_program(kind, member_idx, group_size, root_idx)
 
 
 def program_len(kind: CollKind, group_size: int) -> int:
@@ -152,39 +107,63 @@ def io_chunked(kind: CollKind) -> tuple[bool, bool]:
 
 @dataclasses.dataclass(frozen=True)
 class Communicator:
-    """A group of ranks with a fixed ring order, bound to a daemon lane.
+    """Rank group(s) with fixed ring order, bound to a daemon lane.
 
     The lane is the CUDA-block analogue (paper Sec. 4): lane ``l`` on every
     device gang-schedules with lane ``l`` on its ring peers and owns a
     private connector channel (one forward slice exchange + one reverse
     credit exchange per superstep).
+
+    A communicator may be PARTITIONED into several disjoint rings of equal
+    size sharing the one lane (``ring_size < len(members)``): consecutive
+    ``ring_size``-runs of ``members`` are independent rings, each with its
+    own wrap-around data flow.  Disjoint rings merge into one well-defined
+    lane permutation, which is how the composite layer runs e.g. all G
+    intra-group rings of a two-level decomposition on a single lane.
+    ``size`` is the RING size (the group size programs are built for),
+    not the member count.
     """
 
     comm_id: int
-    members: tuple[int, ...]      # global ranks, in ring order
+    members: tuple[int, ...]      # global ranks; consecutive ring_size runs
     lane: int
+    ring_size: int | None = None  # None: one ring over all members
 
     def __post_init__(self):
         assert len(set(self.members)) == len(self.members)
+        if self.ring_size is not None:
+            assert self.ring_size >= 1
+            assert len(self.members) % self.ring_size == 0, (
+                "members must tile into equal-size rings")
 
     @property
     def size(self) -> int:
-        return len(self.members)
+        return (len(self.members) if self.ring_size is None
+                else self.ring_size)
 
     def member_index(self, rank: int) -> int:
-        return self.members.index(rank)
+        """Position of ``rank`` within ITS ring (ring-local index)."""
+        return self.members.index(rank) % self.size
+
+    def rings(self) -> list[tuple[int, ...]]:
+        rs = self.size
+        return [self.members[i:i + rs]
+                for i in range(0, len(self.members), rs)]
 
     def fwd_perm(self, n_ranks: int) -> np.ndarray:
-        """perm[src] = dst for the forward (data) exchange; identity off-group."""
+        """perm[src] = dst for the forward (data) exchange; identity
+        off-group.  Each partitioned ring wraps independently."""
         perm = np.arange(n_ranks)
-        for i, r in enumerate(self.members):
-            perm[r] = self.members[(i + 1) % self.size]
+        for ring in self.rings():
+            for i, r in enumerate(ring):
+                perm[r] = ring[(i + 1) % len(ring)]
         return perm
 
     def rev_perm(self, n_ranks: int) -> np.ndarray:
         perm = np.arange(n_ranks)
-        for i, r in enumerate(self.members):
-            perm[r] = self.members[(i - 1) % self.size]
+        for ring in self.rings():
+            for i, r in enumerate(ring):
+                perm[r] = ring[(i - 1) % len(ring)]
         return perm
 
 
@@ -207,6 +186,13 @@ class CollectiveSpec:
     out_off: int = 0
     n_slices: int = 1             # slices per chunk PER ROUND (derived)
     n_rounds: int = 1             # primitive-sequence repetitions (derived)
+    # Composite-chain linkage (core/algos.py CompositePlan): a chained
+    # sub-collective names its successor, which the daemon enqueues ON
+    # DEVICE when this stage completes; only the chain tail (next_coll ==
+    # -1) emits a CQE for the logical collective.
+    next_coll: int = -1           # successor collective id (-1: tail/flat)
+    chain_stage: int = 0          # 0 = head/standalone, 1.. = later stages
+    inherit_prio: bool = True     # successor inherits the live priority
 
     @property
     def group_size(self) -> int:

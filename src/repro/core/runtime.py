@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .algos import default_hierarchy, plan_two_level, select_algo
 from .config import OcclConfig, ReduceOp
 from .daemon import build_sim_daemon
 from .primitives import (
@@ -82,6 +83,16 @@ class OcclRuntime:
         self.mesh_axis = mesh_axis
         self.comms: list[Communicator] = []
         self.specs: list[CollectiveSpec] = []
+        # Composite-collective bookkeeping: a logical collective registered
+        # with a multi-stage algorithm is a CHAIN of specs; the returned id
+        # is the HEAD (the logical input endpoint), `_tail_of` maps it to
+        # the tail (the logical output endpoint read_output addresses) and
+        # `_chain_of` to the full stage list (per-stage stats).  Derived
+        # sub-communicators are cached by their partition signature so
+        # multiple composite collectives over the same grid share lanes.
+        self._tail_of: dict[int, int] = {}
+        self._chain_of: dict[int, list[int]] = {}
+        self._derived_comms: dict = {}
         # Separate allocation arenas for input and output buffers: in_off
         # indexes heap_in and out_off indexes heap_out — two DIFFERENT
         # arrays — so a shared pointer only interleaved dead holes into
@@ -118,6 +129,16 @@ class OcclRuntime:
         self.comms.append(comm)
         return comm
 
+    def logical_communicator(self, members: Sequence[int]) -> Communicator:
+        """A communicator DESCRIPTOR for composite registration: names the
+        member grid without claiming a daemon lane.  Composite chains run
+        entirely on their derived sub-communicator lanes, so a logical
+        group that only ever registers multi-stage algorithms would waste
+        a traced-every-superstep lane on a ring no collective uses (the
+        grad-sync hierarchy mode saves one max_comms slot this way).
+        Flat (``algo="ring"``) registration on it is rejected."""
+        return Communicator(comm_id=-1, members=tuple(members), lane=-1)
+
     def _alloc_in(self, elems: int) -> int:
         off = self._in_ptr
         self._in_ptr += elems
@@ -131,12 +152,48 @@ class OcclRuntime:
         return off
 
     def register(self, kind: CollKind, comm: Communicator, n_elems: int,
-                 op: ReduceOp = ReduceOp.SUM, root: int = 0) -> int:
-        """Register a collective; returns its unique id (paper Sec. 3.1.1)."""
+                 op: ReduceOp = ReduceOp.SUM, root: int = 0,
+                 algo: Optional[str] = None,
+                 hierarchy: Optional[tuple] = None,
+                 inherit_prio: bool = True) -> int:
+        """Register a collective; returns its unique id (paper Sec. 3.1.1).
+
+        ``algo`` selects the lowering (default ``cfg.algo``): ``"ring"``
+        is the flat single-communicator ring; ``"two_level"`` lowers an
+        all-reduce over a ``G x N`` rank grid (``hierarchy``; the most
+        square factorization when omitted) into a device-chained
+        intra-group reduce-scatter -> inter-group all-reduce ->
+        intra-group all-gather; ``"auto"`` picks by payload size
+        (``cfg.two_level_threshold``).  For a chain the returned id is the
+        logical handle: submit/stage payloads against it, read results
+        from it (the runtime routes reads to the chain tail), and its CQ
+        callback fires ONCE when the whole chain completes.
+        ``inherit_prio`` lets device-enqueued successor stages inherit the
+        submission's live priority (the chain competes as one unit).
+        """
         if self._tables is not None:
             raise RegistrationClosed("register collectives before first launch")
+        algo = select_algo(self.cfg.algo if algo is None else algo,
+                           kind, n_elems, len(comm.members), hierarchy,
+                           self.cfg.two_level_threshold)
+        if algo == "two_level":
+            return self._register_two_level(kind, comm, n_elems, op,
+                                            hierarchy, inherit_prio)
+        assert algo == "ring", f"unknown algorithm {algo!r}"
+        return self._register_ring(kind, comm, n_elems, op, root)
+
+    def _register_ring(self, kind: CollKind, comm: Communicator,
+                       n_elems: int, op: ReduceOp = ReduceOp.SUM,
+                       root: int = 0, next_coll: int = -1,
+                       chain_stage: int = 0,
+                       inherit_prio: bool = True) -> int:
         cid = len(self.specs)
         assert cid < self.cfg.max_colls, "raise cfg.max_colls"
+        if comm.lane < 0:
+            raise ValueError(
+                "flat (ring) registration needs a lane-bound communicator "
+                "from runtime.communicator(); logical_communicator() "
+                "descriptors only support composite algorithms")
         ns, rounds = derive_slicing(
             n_elems, comm.size, self.cfg.slice_elems, self.cfg.conn_depth)
         chunk = rounds * ns * self.cfg.slice_elems
@@ -147,9 +204,66 @@ class OcclRuntime:
         spec = CollectiveSpec(
             coll_id=cid, kind=kind, comm=comm, n_elems=n_elems, op=int(op),
             root=root, in_off=in_off, out_off=out_off, n_slices=ns,
-            n_rounds=rounds)
+            n_rounds=rounds, next_coll=next_coll, chain_stage=chain_stage,
+            inherit_prio=inherit_prio)
         self.specs.append(spec)
         return cid
+
+    def _register_two_level(self, kind: CollKind, comm: Communicator,
+                            n_elems: int, op: ReduceOp,
+                            hierarchy: Optional[tuple],
+                            inherit_prio: bool) -> int:
+        """Lower to the two-level chain (algos.plan_two_level) and register
+        its stages back-to-back with successor links.  Derived heap regions
+        for the chain intermediates come from the same split in/out arenas
+        as flat collectives; lane budgets are validated as each derived
+        sub-communicator partition claims a lane, and each stage's
+        ``derive_slicing`` enforces the per-round connector cap for the
+        widest stage's ring."""
+        if comm.ring_size is not None and comm.ring_size != len(comm.members):
+            raise ValueError("two_level lowering expects a flat logical "
+                             "communicator, not an already-partitioned one")
+        hier = (tuple(hierarchy) if hierarchy is not None
+                else default_hierarchy(len(comm.members)))
+        plan = plan_two_level(kind, comm.members, hier, n_elems)
+        head = len(self.specs)
+        n_stages = len(plan.stages)
+        assert head + n_stages <= self.cfg.max_colls, (
+            f"composite registration needs {n_stages} collective slots; "
+            "raise cfg.max_colls")
+        for k, stage in enumerate(plan.stages):
+            sub = self._derived_communicator(stage.members, stage.ring_size)
+            self._register_ring(
+                stage.kind, sub, stage.n_elems, op=op, root=stage.root,
+                next_coll=(head + k + 1 if k + 1 < n_stages else -1),
+                chain_stage=k, inherit_prio=inherit_prio)
+        tail = head + n_stages - 1
+        self._tail_of[head] = tail
+        self._chain_of[head] = list(range(head, tail + 1))
+        return head
+
+    def _derived_communicator(self, members, ring_size: int) -> Communicator:
+        """Sub-communicator for one composite stage: ``members`` tiled into
+        disjoint ``ring_size`` rings sharing ONE lane.  Cached by partition
+        signature so composite collectives over the same grid share lanes
+        (e.g. every two-level bucket of a grad sync uses the same intra
+        and inter lanes)."""
+        key = (tuple(members), int(ring_size))
+        cached = self._derived_comms.get(key)
+        if cached is not None:
+            return cached
+        lane = len(self.comms)
+        if lane >= self.cfg.max_comms:
+            raise ValueError(
+                f"composite stage needs daemon lane {lane} but "
+                f"cfg.max_comms={self.cfg.max_comms}; each derived "
+                "sub-communicator partition occupies one lane — raise "
+                "max_comms")
+        comm = Communicator(comm_id=lane, members=tuple(members),
+                            lane=lane, ring_size=int(ring_size))
+        self.comms.append(comm)
+        self._derived_comms[key] = comm
+        return comm
 
     # ------------------------------------------------------------------
     # lazy build (first launch closes registration)
@@ -218,9 +332,18 @@ class OcclRuntime:
                                  int(self._tables.in_span[coll_id]),
                                  "in_off")
 
+    def _out_cid(self, coll_id: int) -> int:
+        """Logical OUTPUT endpoint: the chain tail for composite
+        collectives, the collective itself otherwise."""
+        return self._tail_of.get(coll_id, coll_id)
+
     def _resolve_out_off(self, coll_id: int, off: Optional[int]) -> int:
-        return self._resolve_off(coll_id, off, self._spec(coll_id).out_off,
-                                 int(self._tables.out_span[coll_id]),
+        # Offsets resolve against the chain TAIL — the logical output
+        # endpoint a per-SQE override addresses (runtime + daemon agree:
+        # fetch_sqe applies the override at chain_tail[c]).
+        tcid = self._out_cid(coll_id)
+        return self._resolve_off(coll_id, off, self._spec(tcid).out_off,
+                                 int(self._tables.out_span[tcid]),
                                  "out_off")
 
     def write_input(self, rank: int, coll_id: int, data: np.ndarray,
@@ -259,34 +382,49 @@ class OcclRuntime:
     def read_outputs_bulk(self, reads: list) -> dict:
         """Batch heap reads: ``[(rank, coll_id), ...]`` (or ``(rank,
         coll_id, out_off)``) with ONE fused gather + device->host transfer.
-        Returns ``{(rank, coll_id): logical output}`` as owned copies."""
+        Returns ``{(rank, coll_id): logical output}`` as owned copies.
+        Composite collectives read from their chain TAIL's output region
+        but stay keyed by the logical (head) id the caller passed."""
         self._ensure_built()
         specs = self.specs
         # Identical repeats dedup (pre-PR dict semantics); only CONFLICTING
         # offsets for one (rank, coll_id) are ambiguous — the result dict
         # could hold just one of them — and must be rejected.
         resolved: dict = {}
+        orig_of: dict = {}
         for e in reads:
+            tcid = self._out_cid(e[1])
             off = (self._resolve_out_off(e[1], e[2]) if len(e) > 2
-                   else specs[e[1]].out_off)
-            prev = resolved.setdefault((e[0], e[1]), off)
+                   else specs[tcid].out_off)
+            prev = resolved.setdefault((e[0], tcid), off)
             if prev != off:
                 raise ValueError(
                     f"conflicting out_off reads for (rank={e[0]}, "
                     f"coll={e[1]}): {prev} vs {off}; read each "
                     "dynamic-offset result with its own read_output call")
+            orig_of.setdefault((e[0], tcid), []).append((e[0], e[1]))
         keys = [(r, c, off) for (r, c), off in resolved.items()]
-        return self._staging.read(self._state, keys)
+        got = self._staging.read(self._state, keys)
+        out: dict = {}
+        for (r, tcid), v in got.items():
+            for i, okey in enumerate(dict.fromkeys(orig_of[(r, tcid)])):
+                # Every result stays an OWNED array even when a head and
+                # its tail were both requested (aliased reads get copies).
+                out[okey] = v if i == 0 else v.copy()
+        return out
 
     def read_output(self, rank: int, coll_id: int,
                     out_off: Optional[int] = None) -> np.ndarray:
         """Gather logical output data from the rank's heap (un-pad);
-        returns an owned copy (callers may mutate it in place)."""
+        returns an owned copy (callers may mutate it in place).  For a
+        composite collective this reads the chain tail's output region —
+        the logical endpoint of the chain."""
         self._ensure_built()
+        tcid = self._out_cid(coll_id)
         return self._staging.read(
             self._state,
-            [(rank, coll_id, self._resolve_out_off(coll_id, out_off))]
-        )[(rank, coll_id)]
+            [(rank, tcid, self._resolve_out_off(coll_id, out_off))]
+        )[(rank, tcid)]
 
     # ------------------------------------------------------------------
     # submission + event-driven execution (paper Sec. 3.1.2 / 3.1.3)
@@ -300,7 +438,13 @@ class OcclRuntime:
         prologue (one batched transfer per launch), not written at call
         time.  ``in_off``/``out_off`` override the registered heap offsets
         for this submission (-1 keeps the defaults); the override is
-        honored both by the daemon (SQE fetch) and by the staged write."""
+        honored both by the daemon (SQE fetch) and by the staged write.
+
+        For a composite (chained) collective the id is the logical
+        handle: the payload stages into the chain HEAD's input region,
+        ``out_off`` overrides the chain TAIL's output region, and the
+        callback fires once — when the tail completes — with the logical
+        id the caller submitted."""
         self._ensure_built()
         in_off = self._resolve_in_off(coll_id, in_off)
         out_off = self._resolve_out_off(coll_id, out_off)
@@ -312,14 +456,40 @@ class OcclRuntime:
             # the mutation in.
             self.queues.stage(rank, coll_id,
                               self._staging.snapshot(coll_id, data), in_off)
+        tcid = self._out_cid(coll_id)
+        cb = callback
+        if callback is not None and tcid != coll_id:
+            # CQEs of a chain are emitted by the TAIL; surface the
+            # LOGICAL id to the user callback.
+            def cb(r, _c, _cb=callback, _lc=coll_id):
+                _cb(r, _lc)
         self.queues.submit(rank, SQE(coll_id=coll_id, prio=prio,
                                      in_off=in_off, out_off=out_off,
-                                     callback=callback))
+                                     callback=cb),
+                           cb_coll=tcid)
 
-    def submit_all(self, coll_id: int, prio: int = 0) -> None:
+    def submit_all(self, coll_id: int, prio=0, data=None, callback=None,
+                   in_off=-1, out_off=-1) -> None:
+        """Submit one collective on every member rank.
+
+        Every argument is forwarded to :meth:`submit` and may be either a
+        single value applied to all ranks or a per-rank ``{rank: value}``
+        mapping (missing ranks take the default) — so a caller can hand
+        per-rank priorities, payloads, completion callbacks and dynamic
+        buffer offsets without falling back to a hand-rolled submit loop.
+        """
         spec = self._spec(coll_id)
+
+        def pick(v, r, default):
+            return v.get(r, default) if isinstance(v, dict) else v
+
         for r in spec.comm.members:
-            self.submit(r, coll_id, prio=prio)
+            self.submit(r, coll_id,
+                        prio=pick(prio, r, 0),
+                        data=pick(data, r, None),
+                        callback=pick(callback, r, None),
+                        in_off=pick(in_off, r, -1),
+                        out_off=pick(out_off, r, -1))
 
     def _flush_staged(self) -> None:
         """Launch prologue: drain the submit-time staging queue into the
@@ -385,7 +555,14 @@ class OcclRuntime:
                                                           # slices denied by
                                                           # the credit gate
             "qlen_at_fetch": np.asarray(st.qlen_at_fetch),
-            "completed": np.asarray(st.completed),
+            "completed": np.asarray(st.completed),    # LOGICAL completions
+                                                      # (chain tails only)
+            # Per-stage completions, chain intermediates included: for a
+            # composite collective, stage_completions[:, head..tail] counts
+            # each sub-collective's executions — `chains` maps each logical
+            # head id to its stage ids so callers can index the matrix.
+            "stage_completions": np.asarray(st.stage_completions),
+            "chains": dict(self._chain_of),
             "supersteps": np.asarray(st.supersteps),      # cumulative epoch
                                                           # clock (never
                                                           # reset)

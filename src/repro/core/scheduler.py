@@ -129,6 +129,16 @@ class SharedTables(NamedTuple):
     out_chunked: jnp.ndarray  # [C]
     base_in_off: jnp.ndarray  # [C]
     base_out_off: jnp.ndarray # [C]
+    # Composite-chain tables (tables.StaticTables; all-identity /
+    # all-sentinel when no composite collectives are registered).
+    next_coll: jnp.ndarray    # [C] — device-enqueued successor (-1 none)
+    chain_tail: jnp.ndarray   # [C] — tail stage of c's chain (self: flat)
+    chain_prio_inherit: jnp.ndarray  # [C] bool
+    chain_mask: jnp.ndarray   # [C, C] bool — stages sharing c's chain
+    chain_src: jnp.ndarray    # [C, M] — heap relink gather map (M == 0
+                              #   when chain-free: the relink scatter is
+                              #   not traced at all)
+    chain_dst: jnp.ndarray    # [C, M]
 
 
 class LocalTables(NamedTuple):
@@ -300,12 +310,28 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     c = st.sq_coll[slot]
     # Head-of-line wait: a re-submission of an in-flight collective waits
     # (the runtime never has two executions of one collective concurrently).
+    # For a composite chain the head's inflight bit covers the WHOLE chain
+    # (set below via chain_mask, cleared when the tail completes), so a
+    # re-submitted chain head also waits for its predecessor's device-
+    # enqueued stages to drain.
     ok = want & (c >= 0) & ~st.inflight[c] & local.member[c] & shared.registered[c]
     qlen = jnp.sum(st.tq_active).astype(jnp.int32)
     one = jnp.where(ok, 1, 0)
+    # Per-SQE out_off overrides resolve END-TO-END: the override (or the
+    # tail's registered default) lands on the chain TAIL — the logical
+    # output endpoint — while a chained head keeps its registered
+    # intermediate output region.  Flat collectives have tail == c, so
+    # the second write is a no-op and the behavior is exactly the seed's.
+    tail = shared.chain_tail[c]
+    resolved_out = jnp.where(st.sq_out[slot] >= 0, st.sq_out[slot],
+                             shared.base_out_off[tail])
+    out_off = st.out_off.at[tail].set(
+        jnp.where(ok, resolved_out, st.out_off[tail]))
+    out_off = out_off.at[c].set(
+        jnp.where(ok & (tail != c), shared.base_out_off[c], out_off[c]))
     st = st._replace(
         tq_active=st.tq_active.at[c].set(jnp.where(ok, True, st.tq_active[c])),
-        inflight=st.inflight.at[c].set(jnp.where(ok, True, st.inflight[c])),
+        inflight=st.inflight | (shared.chain_mask[c] & ok),
         # Launch-clock queue age: behind every rebased carryover (< C).
         arrival=st.arrival.at[c].set(
             jnp.where(ok, cfg.max_colls + st.launch_steps, st.arrival[c])),
@@ -315,10 +341,7 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
             ok,
             jnp.where(st.sq_in[slot] >= 0, st.sq_in[slot], shared.base_in_off[c]),
             st.in_off[c])),
-        out_off=st.out_off.at[c].set(jnp.where(
-            ok,
-            jnp.where(st.sq_out[slot] >= 0, st.sq_out[slot], shared.base_out_off[c]),
-            st.out_off[c])),
+        out_off=out_off,
         ctx_step=st.ctx_step.at[c].set(jnp.where(ok, 0, st.ctx_step[c])),
         ctx_slice=st.ctx_slice.at[c].set(jnp.where(ok, 0, st.ctx_slice[c])),
         ctx_round=st.ctx_round.at[c].set(jnp.where(ok, 0, st.ctx_round[c])),
@@ -518,24 +541,82 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         slices_moved=st.slices_moved + jnp.sum(n),
     )
 
-    # --- completion: write the CQEs (paper Sec. 3.1.2) --------------------
+    # --- completion + chain advance (Sec. 3.1.2 / composite layer) --------
+    # A completing stage with a registered successor (tables.next_coll)
+    # enqueues the successor SQE ON DEVICE in the same superstep: the
+    # whole chain advances inside one launch with no host round trip per
+    # stage.  Only LOGICAL completions (chain tails and flat collectives)
+    # write a CQE / advance `completed` — the host sees one completion
+    # per submitted logical collective; per-stage progress is tracked
+    # separately in `stage_completions`.  With no chains registered,
+    # next_coll is all -1, chain_mask is the identity and every branch
+    # below reduces bit-exactly to the seed completion semantics.
+    #
     # The CQ is a RING: slots wrap modulo cq_len so completions past cq_len
     # per launch rotate through the buffer instead of silently overwriting
     # the last CQE (host reconciliation counts completions exactly via the
     # cumulative `completed` matrix, sqcq.HostQueues.reconcile).
-    done_i = coll_done.astype(jnp.int32)
+    succ = shared.next_coll[c]                              # [L]
+    succ_c = jnp.clip(succ, 0, C - 1)
+    chain_adv = coll_done & (succ >= 0)                     # enqueue next
+    logical_done = coll_done & (succ < 0)                   # tail or flat
+    done_i = logical_done.astype(jnp.int32)
     slot_off = jnp.cumsum(done_i) - done_i                  # exclusive scan
     cq_slot = (st.cq_count + slot_off) % cfg.cq_len
-    cq_tgt = jnp.where(coll_done, cq_slot, cfg.cq_len)
+    cq_tgt = jnp.where(logical_done, cq_slot, cfg.cq_len)
     cd = jnp.where(coll_done, c, C)
+    # Inflight clears CHAIN-WIDE at logical completion (set chain-wide at
+    # head fetch), so a re-submitted head waits for the full chain.
+    clear = jnp.any(shared.chain_mask[c] & logical_done[:, None], axis=0)
+    # Successor context: fresh dynamic context, inherited priority (when
+    # the chain's inherit flag is set), arrival stamped on the launch
+    # clock like any rotation — the successor joins the BACK of its
+    # lane's queue and competes under the normal preemption rules.
+    sc = jnp.where(chain_adv, succ_c, C)                    # drop-gated tgt
+    succ_prio = jnp.where(shared.chain_prio_inherit[succ_c],
+                          st.prio[c], 0)
+    # Intermediate successors run at their registered output region; a
+    # TAIL successor keeps the out_off pre-resolved at head fetch (the
+    # per-SQE override's logical endpoint).
+    sc_mid = jnp.where(chain_adv & (shared.next_coll[succ_c] >= 0),
+                       succ_c, C)
     st = st._replace(
-        tq_active=st.tq_active.at[cd].set(False, mode="drop"),
-        inflight=st.inflight.at[cd].set(False, mode="drop"),
+        tq_active=st.tq_active.at[cd].set(False, mode="drop")
+                             .at[sc].set(True, mode="drop"),
+        inflight=st.inflight & ~clear,
         completed=st.completed.at[c].add(done_i),
+        stage_completions=st.stage_completions.at[c].add(
+            coll_done.astype(jnp.int32)),
+        arrival=st.arrival.at[sc].set(
+            cfg.max_colls + st.launch_steps + 1, mode="drop"),
+        prio=st.prio.at[sc].set(succ_prio, mode="drop"),
+        ctx_step=st.ctx_step.at[sc].set(0, mode="drop"),
+        ctx_slice=st.ctx_slice.at[sc].set(0, mode="drop"),
+        ctx_round=st.ctx_round.at[sc].set(0, mode="drop"),
+        spin=st.spin.at[sc].set(0, mode="drop"),
+        boost=st.boost.at[sc].set(0, mode="drop"),
+        in_off=st.in_off.at[sc].set(shared.base_in_off[succ_c],
+                                    mode="drop"),
+        out_off=st.out_off.at[sc_mid].set(shared.base_out_off[succ_c],
+                                          mode="drop"),
         cq_coll=st.cq_coll.at[cq_tgt].set(c, mode="drop"),
         cq_count=st.cq_count + jnp.sum(done_i),
         cur=jnp.where(coll_done | ~valid, -1, cand),
     )
+
+    # Chain hand-off relink: rewrite the successor's padded input span in
+    # heap_in from the predecessor's just-finalized heap_out region via
+    # the registration-time composed stage maps (pads zero-filled).  The
+    # gather/scatter pair is only TRACED when the registration actually
+    # contains chains (M > 0) — chain-free daemons pay nothing.
+    if shared.chain_src.shape[1] > 0:
+        src = shared.chain_src[c]                           # [L, M]
+        vals = jnp.where(src >= 0, st.heap_out[jnp.maximum(src, 0)],
+                         0).astype(st.heap_in.dtype)
+        dstg = jnp.where(chain_adv[:, None], shared.chain_dst[c],
+                         jnp.int32(1 << 30))
+        st = st._replace(
+            heap_in=st.heap_in.at[dstg].set(vals, mode="drop"))
 
     outbox = Mailbox(
         fwd_count=n_send,

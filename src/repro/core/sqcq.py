@@ -78,10 +78,16 @@ class HostQueues:
         self._completed_seen = np.zeros(
             (cfg.n_ranks, cfg.max_colls), np.int64)
 
-    def submit(self, rank: int, sqe: SQE) -> None:
+    def submit(self, rank: int, sqe: SQE, cb_coll: Optional[int] = None
+               ) -> None:
+        """``cb_coll`` keys the callback under a different collective id
+        than the submitted SQE — the runtime passes a composite chain's
+        TAIL here, because that is the id the device CQE will carry."""
         self.pending[rank].append(sqe)
         if sqe.callback is not None:
-            self.callbacks[rank][sqe.coll_id].append(sqe.callback)
+            self.callbacks[rank][
+                sqe.coll_id if cb_coll is None else cb_coll
+            ].append(sqe.callback)
         self.submitted[rank] += 1
 
     # -- submit-time payload staging --------------------------------------

@@ -92,7 +92,13 @@ class DaemonState(NamedTuple):
     # counts daemon launches.  Only the launch clock feeds scheduling
     # decisions, so no decision ever depends on how long the runtime has
     # been alive.
-    completed: jnp.ndarray     # [C] i32 — completions (repeat submissions)
+    completed: jnp.ndarray     # [C] i32 — LOGICAL completions (chain tails
+                               #   and flat collectives; repeat submissions
+                               #   accumulate) — drives host reconciliation
+    stage_completions: jnp.ndarray  # [C] i32 — per-stage completions,
+                               #   counting chain intermediates too (chain
+                               #   observability; == completed when no
+                               #   composite collectives are registered)
     preempts: jnp.ndarray      # [C] i32 — context switches (Fig. 9)
     stall_slices: jnp.ndarray  # [C] i32 — burst slices denied by credit
                                #   gating, counting partial denials (stall
@@ -149,7 +155,8 @@ def init_state(cfg: OcclConfig, per_rank: bool = True,
         mb_fwd_payload=z((L, B, SL), dt),
         mb_rev_count=z((L,)),
         mb_rev_coll=z((L,)),
-        completed=z((C,)), preempts=z((C,)), stall_slices=z((C,)),
+        completed=z((C,)), stage_completions=z((C,)),
+        preempts=z((C,)), stall_slices=z((C,)),
         qlen_at_fetch=z((C,)),
         supersteps=z(()), launch_steps=z(()), epoch=z(()), no_prog=z(()),
         made_prog_prev=z((), jnp.bool_, False),

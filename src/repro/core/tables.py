@@ -86,7 +86,35 @@ class StaticTables:
                               #   is a pad position the engine zero-fills
     stage_out_map: list       # [C] np.int32[out_log[c]]: logical j -> rel off
 
+    # composite chains (core/algos.py CompositePlan) ----------------------
+    # Successor/chain tables: when collective ``c`` completes on a rank and
+    # ``next_coll[c] >= 0``, the daemon enqueues the successor SQE on
+    # device in the same superstep; only the chain TAIL emits a CQE.
+    next_coll: np.ndarray     # [C] i32 — successor collective id (-1 none)
+    chain_stage: np.ndarray   # [C] i32 — stage index within the chain
+    chain_tail: np.ndarray    # [C] i32 — tail collective of c's chain
+                              #   (self for flat collectives)
+    chain_prio_inherit: np.ndarray  # [C] bool — device-enqueued successor
+                              #   inherits the predecessor's live priority
+    chain_mask: np.ndarray    # [C, C] bool — row c marks every stage of
+                              #   c's chain (one-hot for flat colls);
+                              #   drives chain-wide inflight set/clear
+    # Heap relink maps for the chain hand-off: when stage c completes, the
+    # successor's ENTIRE padded input span (base offsets; intermediates
+    # are never offset-overridden) is rewritten from c's output region —
+    # logical elements gathered via the composed stage maps, pad positions
+    # zero-filled (-1 source).  [C, M] with M = max successor in-span over
+    # chained collectives; M == 0 when the registration has no chains, so
+    # the scheduler skips tracing the relink scatter entirely.
+    chain_src: np.ndarray     # [C, M] i32 — absolute heap_out offsets, -1=0
+    chain_dst: np.ndarray     # [C, M] i32 — absolute heap_in offsets
+                              #   (out-of-range sentinel on unused rows)
+
     max_steps: int
+
+    @property
+    def has_chains(self) -> bool:
+        return self.chain_src.shape[1] > 0
 
 
 def _wire_itemsize(dtype: str) -> int:
@@ -142,6 +170,13 @@ def build_tables(
         out_span=np.zeros(C, np.int32),
         stage_in_map=[np.zeros(0, np.int32)] * C,
         stage_out_map=[np.zeros(0, np.int32)] * C,
+        next_coll=np.full(C, -1, np.int32),
+        chain_stage=np.zeros(C, np.int32),
+        chain_tail=np.arange(C, dtype=np.int32),
+        chain_prio_inherit=np.zeros(C, bool),
+        chain_mask=np.eye(C, dtype=bool),
+        chain_src=np.zeros((C, 0), np.int32),
+        chain_dst=np.zeros((C, 0), np.int32),
         max_steps=S,
     )
 
@@ -198,6 +233,9 @@ def build_tables(
         t.base_in_off[c] = s.in_off
         t.base_out_off[c] = s.out_off
         _build_stage_maps(t, c, s, cfg.slice_elems, inc, outc)
+        t.next_coll[c] = s.next_coll
+        t.chain_stage[c] = s.chain_stage
+        t.chain_prio_inherit[c] = bool(s.inherit_prio)
         for rank in s.comm.members:
             m = s.comm.member_index(rank)
             t.member[rank, c] = True
@@ -205,7 +243,78 @@ def build_tables(
             for step, (prim, chunk) in enumerate(prog):
                 t.prog_kind[rank, c, step] = int(prim)
                 t.prog_chunk[rank, c, step] = chunk
+    _build_chain_tables(t, specs)
     return t
+
+
+def _build_chain_tables(t: StaticTables, specs: list) -> None:
+    """Resolve chain closure (tail ids, chain membership masks) and the
+    heap relink maps of every chain edge.
+
+    The relink map of edge ``c -> succ`` rewrites the successor's whole
+    padded input span from c's output region by composing the two
+    registration-time stage maps: logical element j of the hand-off lives
+    at ``base_out_off[c] + stage_out_map[c][j]`` in ``heap_out`` and must
+    land at ``base_in_off[succ] + stage_in_map[succ][j]`` in ``heap_in``;
+    every other in-span position is a pad the relink zero-fills (source
+    -1), so stale heap data can never leak into the successor's slices.
+    Offsets are ABSOLUTE: chain intermediates always run at their
+    registered base offsets (per-SQE overrides apply only to the logical
+    endpoints — the head's input, the tail's output).
+    """
+    by_id = {s.coll_id: s for s in specs}
+    edges = []
+    for s in specs:
+        c = s.coll_id
+        if s.next_coll < 0:
+            continue
+        succ = by_id.get(s.next_coll)
+        assert succ is not None, (
+            f"collective {c}: successor {s.next_coll} is not registered")
+        assert int(t.out_log[c]) == int(t.in_log[succ.coll_id]), (
+            f"chain edge {c} -> {succ.coll_id}: logical sizes differ "
+            f"({int(t.out_log[c])} vs {int(t.in_log[succ.coll_id])})")
+        edges.append((c, succ.coll_id))
+    # Tail closure + chain membership masks (rows identical for every
+    # stage of a chain; one-hot + self-tail for flat collectives).
+    for s in specs:
+        members = _chain_members(by_id, s.coll_id)
+        for a in members:
+            t.chain_tail[a] = members[-1]
+            for b in members:
+                t.chain_mask[a, b] = True
+    if not edges:
+        return
+    M = max(int(t.in_span[succ]) for _, succ in edges)
+    t.chain_src = np.full((t.chain_mask.shape[0], M), -1, np.int32)
+    # Unused rows point the scatter at an out-of-heap sentinel (dropped by
+    # mode='drop'); they are also gated off by the completion mask.
+    t.chain_dst = np.full((t.chain_mask.shape[0], M), 1 << 30, np.int32)
+    for c, succ in edges:
+        span = int(t.in_span[succ])
+        src = np.full(span, -1, np.int32)
+        n_log = int(t.in_log[succ])
+        src[t.stage_in_map[succ]] = (
+            t.base_out_off[c] + t.stage_out_map[c][:n_log])
+        t.chain_src[c, :span] = src
+        t.chain_dst[c, :span] = t.base_in_off[succ] + np.arange(
+            span, dtype=np.int32)
+
+
+def _chain_members(by_id: dict, c: int) -> list:
+    """All collective ids sharing c's chain (walk to the head, then down)."""
+    preds = {s.next_coll: s.coll_id for s in by_id.values()
+             if s.next_coll >= 0}
+    head, hops = c, 0
+    while head in preds:
+        head = preds[head]
+        hops += 1
+        assert hops <= len(by_id), "cycle in collective chain"
+    members = [head]
+    while by_id[members[-1]].next_coll >= 0:
+        members.append(by_id[members[-1]].next_coll)
+        assert len(members) <= len(by_id), "cycle in collective chain"
+    return members
 
 
 def _build_stage_maps(t: StaticTables, c: int, s: CollectiveSpec,

@@ -42,7 +42,14 @@ class OcclGradSync:
     def __init__(self, grads_template, n_ranks: int,
                  bucket_elems: int = 4096, slice_elems: int = 256,
                  priority_preempts: bool = False,
-                 compress_wire: bool = False):
+                 compress_wire: bool = False,
+                 hierarchy: tuple | None = None):
+        """``hierarchy=(G, N)`` routes every bucket through the composite
+        two-level all-reduce (intra-group reduce-scatter -> inter-group
+        all-reduce -> intra-group all-gather over the G x N rank grid,
+        chained on device) instead of the flat ring — the node-aware
+        topology of real fleets, where N is the intra-node (fast-domain)
+        size.  Requires G * N == n_ranks."""
         leaves = jax.tree_util.tree_leaves(grads_template)
         self.treedef = jax.tree_util.tree_structure(grads_template)
         self.shapes = [l.shape for l in leaves]
@@ -68,22 +75,37 @@ class OcclGradSync:
 
         heap = sum(2 * b.total + 64 * len(buckets) for b in buckets)
         self.compress_wire = compress_wire
+        self.hierarchy = hierarchy
+        if hierarchy is not None:
+            G, N = hierarchy
+            assert G * N == n_ranks, (
+                f"hierarchy {hierarchy} does not tile {n_ranks} ranks")
+        # A two-level bucket is a 3-stage chain: 3 collective slots per
+        # bucket, two lanes (all buckets share the derived intra and inter
+        # partitions; the logical group claims NO lane of its own), and
+        # intermediate heap regions (~2x per side).
+        n_colls = len(buckets) * (3 if hierarchy is not None else 1)
         self.occl = OcclRuntime(OcclConfig(
             n_ranks=n_ranks,
-            max_colls=max(8, len(buckets)),
-            max_comms=1,
+            max_colls=max(8, n_colls),
+            max_comms=2 if hierarchy is not None else 1,
             slice_elems=slice_elems,
             conn_depth=8,
-            heap_elems=max(1 << 14, 4 * heap),
+            heap_elems=max(1 << 14, 4 * heap)
+                       * (2 if hierarchy is not None else 1),
             order_policy=OrderPolicy.PRIORITY,
             priority_preempts=priority_preempts,
             superstep_budget=1 << 16,
             dtype="bfloat16" if compress_wire else "float32",
         ))
-        comm = self.occl.communicator(list(range(n_ranks)))
+        comm = (self.occl.communicator(list(range(n_ranks)))
+                if hierarchy is None
+                else self.occl.logical_communicator(list(range(n_ranks))))
         for b in buckets:
             b.coll_id = self.occl.register(
-                CollKind.ALL_REDUCE, comm, n_elems=b.total)
+                CollKind.ALL_REDUCE, comm, n_elems=b.total,
+                algo="ring" if hierarchy is None else "two_level",
+                hierarchy=hierarchy)
 
     # ------------------------------------------------------------------
     def _pack(self, grads, bucket: Bucket) -> np.ndarray:

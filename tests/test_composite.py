@@ -1,0 +1,370 @@
+"""Composite-collective layer: hierarchical two-level algorithms via
+device-chained sub-collectives (core/algos.py + the chain tables /
+scheduler successor-enqueue machinery).
+
+Covers the acceptance criteria of the composite tentpole:
+* two-level all-reduce numerically equivalent to the flat ring
+  (numpy-reference tolerance) across hierarchies and ragged sizes;
+* the chain advances ON DEVICE — one ``launch_once`` completes the whole
+  chain when uncontended, observed via the ``stats()`` chain/stage
+  counters;
+* per-SQE offset overrides resolve end-to-end through the chain (head
+  input, tail output);
+* chained sub-collectives submitted in conflicting orders complete
+  (deterministic adversarial scenario; the hypothesis sweep lives in
+  test_deadlock_freedom_props.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime, OrderPolicy,
+                        default_hierarchy, plan_two_level, select_algo,
+                        run_static_order)
+
+
+def _runtime(R, max_colls=16, max_comms=4, slice_elems=8, conn_depth=6,
+             heap_elems=1 << 15, **kw):
+    cfg = OcclConfig(n_ranks=R, max_colls=max_colls, max_comms=max_comms,
+                     slice_elems=slice_elems, conn_depth=conn_depth,
+                     heap_elems=heap_elems, superstep_budget=1 << 14, **kw)
+    rt = OcclRuntime(cfg)
+    return rt, rt.communicator(list(range(R)))
+
+
+# ---------------------------------------------------------------------------
+# planning / selection units
+# ---------------------------------------------------------------------------
+
+def test_default_hierarchy_most_square():
+    assert default_hierarchy(16) == (4, 4)
+    assert default_hierarchy(8) == (4, 2)
+    assert default_hierarchy(12) == (4, 3)
+    assert default_hierarchy(7) == (7, 1)      # prime: degenerate
+
+
+def test_plan_two_level_stage_shapes():
+    plan = plan_two_level(CollKind.ALL_REDUCE, range(8), (2, 4), 100)
+    rs, ar, ag = plan.stages
+    assert rs.kind == CollKind.REDUCE_SCATTER and rs.ring_size == 4
+    assert rs.members == tuple(range(8)) and rs.n_elems == 100
+    # Inter rings join the chunk owners at each intra position.
+    assert ar.kind == CollKind.ALL_REDUCE and ar.ring_size == 2
+    assert ar.members == (0, 4, 1, 5, 2, 6, 3, 7)
+    assert ar.n_elems == 25                    # ceil(100 / 4)
+    assert ag.kind == CollKind.ALL_GATHER and ag.n_elems == 100
+
+
+def test_plan_two_level_rejects_bad_grids():
+    with pytest.raises(ValueError, match="does not tile"):
+        plan_two_level(CollKind.ALL_REDUCE, range(8), (3, 2), 10)
+    with pytest.raises(ValueError, match="ALL_REDUCE only"):
+        plan_two_level(CollKind.BROADCAST, range(8), (2, 4), 10)
+
+
+def test_select_algo_threshold():
+    sel = lambda n, **kw: select_algo("auto", CollKind.ALL_REDUCE, n, 16,
+                                      kw.get("hierarchy"), 1024)
+    assert sel(512) == "ring"                  # below the payload threshold
+    assert sel(4096) == "two_level"            # above it
+    assert sel(4096, hierarchy=(4, 4)) == "two_level"
+    # Degenerate grids and non-all-reduce kinds fall back to ring.
+    assert select_algo("auto", CollKind.ALL_REDUCE, 4096, 7, None,
+                       1024) == "ring"
+    assert select_algo("auto", CollKind.BROADCAST, 4096, 16, None,
+                       1024) == "ring"
+    # Explicit algorithms pass through untouched.
+    assert select_algo("ring", CollKind.ALL_REDUCE, 1 << 20, 16, None,
+                       1024) == "ring"
+    assert select_algo("two_level", CollKind.ALL_REDUCE, 4, 16, None,
+                       1024) == "two_level"
+    # An explicitly passed grid that does not tile the group is a BUG,
+    # not a hint: auto must raise, not silently downgrade to ring.
+    with pytest.raises(ValueError, match="does not tile"):
+        select_algo("auto", CollKind.ALL_REDUCE, 4096, 16, (4, 5), 1024)
+
+
+def test_logical_communicator_claims_no_lane():
+    """A logical_communicator() descriptor supports composite registration
+    without spending a max_comms slot; flat registration on it is
+    rejected."""
+    cfg = OcclConfig(n_ranks=8, max_colls=8, max_comms=2, slice_elems=8,
+                     conn_depth=6, heap_elems=1 << 15,
+                     superstep_budget=1 << 14)
+    rt = OcclRuntime(cfg)                     # exactly the derived lanes
+    grid = rt.logical_communicator(range(8))
+    cid = rt.register(CollKind.ALL_REDUCE, grid, n_elems=48,
+                      algo="two_level", hierarchy=(2, 4))
+    assert len(rt.comms) == 2                 # intra + inter only
+    with pytest.raises(ValueError, match="lane-bound"):
+        rt.register(CollKind.ALL_REDUCE, grid, n_elems=8)
+    xs = [np.full(48, r + 1.0, np.float32) for r in range(8)]
+    for r in range(8):
+        rt.submit(r, cid, data=xs[r])
+    rt.drive()
+    for r in range(8):
+        np.testing.assert_allclose(rt.read_output(r, cid),
+                                   np.sum(xs, axis=0), rtol=1e-5)
+
+
+def test_registration_chain_tables():
+    rt, world = _runtime(8)
+    flat = rt.register(CollKind.ALL_REDUCE, world, n_elems=32)
+    head = rt.register(CollKind.ALL_REDUCE, world, n_elems=64,
+                       algo="two_level", hierarchy=(2, 4))
+    rt._ensure_built()
+    t = rt._tables
+    stages = rt.stats()["chains"][head]
+    assert stages == [head, head + 1, head + 2]
+    assert t.next_coll[flat] == -1 and t.chain_tail[flat] == flat
+    assert list(t.next_coll[stages]) == [head + 1, head + 2, -1]
+    assert list(t.chain_tail[stages]) == [head + 2] * 3
+    assert list(t.chain_stage[stages]) == [0, 1, 2]
+    # chain_mask: one-hot for flat, the full stage set for every stage.
+    assert t.chain_mask[flat].sum() == 1
+    for s in stages:
+        assert sorted(np.nonzero(t.chain_mask[s])[0]) == stages
+    # Relink maps cover each successor's whole padded input span; logical
+    # positions point into the predecessor's output region.
+    assert t.has_chains
+    for c, succ in zip(stages[:-1], stages[1:]):
+        span = int(t.in_span[succ])
+        dst = t.chain_dst[c, :span]
+        np.testing.assert_array_equal(
+            dst, t.base_in_off[succ] + np.arange(span))
+        src = t.chain_src[c, :span]
+        logical = src[t.stage_in_map[succ]]
+        assert (logical >= t.base_out_off[c]).all()
+        pads = np.setdiff1d(np.arange(span), t.stage_in_map[succ])
+        assert (src[pads] == -1).all()        # pads zero-fill
+
+
+def test_derived_communicators_share_lanes():
+    """Composite collectives over the same grid reuse the derived intra
+    and inter sub-communicator partitions (one lane each)."""
+    rt, world = _runtime(8)
+    a = rt.register(CollKind.ALL_REDUCE, world, n_elems=64,
+                    algo="two_level", hierarchy=(2, 4))
+    b = rt.register(CollKind.ALL_REDUCE, world, n_elems=48,
+                    algo="two_level", hierarchy=(2, 4))
+    lanes_a = {rt.specs[c].comm.lane for c in rt._chain_of[a]}
+    lanes_b = {rt.specs[c].comm.lane for c in rt._chain_of[b]}
+    assert lanes_a == lanes_b                 # shared intra + inter lanes
+    assert len(rt.comms) == 3                 # world + intra + inter
+
+
+def test_lane_budget_validated():
+    rt, world = _runtime(8, max_comms=2)      # world takes lane 0
+    with pytest.raises(ValueError, match="max_comms"):
+        rt.register(CollKind.ALL_REDUCE, world, n_elems=64,
+                    algo="two_level", hierarchy=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,hier", [(4, (2, 2)), (8, (2, 4)), (8, (4, 2))])
+@pytest.mark.parametrize("n", [8, 40, 100])
+def test_two_level_matches_numpy_reference(R, hier, n):
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                      algo="two_level", hierarchy=hier)
+    rng = np.random.RandomState(n + R)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    for r in range(R):
+        rt.submit(r, cid, data=xs[r])
+    rt.drive()
+    want = np.sum(xs, axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_two_level_repeat_submissions_serialize():
+    """A re-submitted chain head waits for the whole previous chain
+    (chain-wide inflight), and both logical executions complete."""
+    R, n = 4, 24
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                      algo="two_level", hierarchy=(2, 2))
+    rng = np.random.RandomState(7)
+    xs1 = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    xs2 = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    done = []
+    for r in range(R):
+        rt.submit(r, cid, data=xs1[r], callback=lambda rk, c: done.append(1))
+        rt.submit(r, cid, data=xs2[r], callback=lambda rk, c: done.append(2))
+    rt.drive()
+    assert len(done) == 2 * R
+    # Second execution's results are live (last submission wins the heap).
+    want = np.sum(xs2, axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                   rtol=1e-4, atol=1e-5)
+    st = rt.stats()
+    # Logical completions count 2 per rank, on the TAIL only; every stage
+    # ran twice per rank.
+    chain = st["chains"][cid]
+    assert (st["completed"][:, chain[-1]] == 2).all()
+    assert (st["completed"][:, chain[:-1]] == 0).all()
+    assert (st["stage_completions"][:, chain] == 2).all()
+
+
+def test_chain_advances_on_device_single_launch():
+    """One launch_once completes the whole chain when uncontended: no
+    host round trip between stages (the tentpole's scheduler criterion),
+    asserted via the stats() chain/stage counters."""
+    R = 8
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=64,
+                      algo="two_level", hierarchy=(2, 4))
+    xs = [np.full(64, r + 1, np.float32) for r in range(R)]
+    for r in range(R):
+        rt.submit(r, cid, data=xs[r])
+    fired = rt.launch_once()
+    assert fired == R                          # all logical CQEs in launch 1
+    assert rt.launches == 1
+    assert rt.queues.outstanding() == 0
+    st = rt.stats()
+    chain = st["chains"][cid]
+    assert (st["stage_completions"][:, chain] == 1).all()
+    assert (st["completed"][:, chain[-1]] == 1).all()
+    want = np.sum(xs, axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), want, rtol=1e-5)
+
+
+def test_auto_selection_registers_chain_above_threshold():
+    rt, world = _runtime(8, heap_elems=1 << 16, slice_elems=64)
+    small = rt.register(CollKind.ALL_REDUCE, world, n_elems=256,
+                        algo="auto")
+    big = rt.register(CollKind.ALL_REDUCE, world, n_elems=4096,
+                      algo="auto")
+    assert small not in rt._chain_of           # flat ring below threshold
+    assert big in rt._chain_of                 # two-level above
+    rng = np.random.RandomState(0)
+    data = {c: [rng.randn(n).astype(np.float32) for _ in range(8)]
+            for c, n in [(small, 256), (big, 4096)]}
+    for r in range(8):
+        rt.submit(r, big, data=data[big][r])
+        rt.submit(r, small, data=data[small][r])
+    rt.drive()
+    for c in (small, big):
+        want = np.sum(data[c], axis=0)
+        for r in range(8):
+            np.testing.assert_allclose(rt.read_output(r, c), want,
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_offset_overrides_end_to_end_through_chain():
+    """in_off lands on the chain HEAD's read, out_off on the TAIL's
+    write; intermediates stay at their registered regions."""
+    R, n = 4, 32
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                      algo="two_level", hierarchy=(2, 2))
+    alt_in = 1 << 12
+    alt_out = (1 << 12) + 512
+    rng = np.random.RandomState(1)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    for r in range(R):
+        rt.submit(r, cid, data=xs[r], in_off=alt_in, out_off=alt_out)
+    rt.drive()
+    want = np.sum(xs, axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid, out_off=alt_out),
+                                   want, rtol=1e-4, atol=1e-5)
+    # The registered default output region was never the destination.
+    default_out = np.asarray(
+        rt.read_output(0, cid))                # registered tail region
+    assert not np.allclose(default_out, want)
+    # Out-of-range overrides are rejected against the TAIL's span.
+    with pytest.raises(ValueError, match="out_off"):
+        rt.submit(0, cid, out_off=rt.cfg.heap_elems)
+
+
+def test_priority_inherits_down_the_chain():
+    """Under PRIORITY ordering, a chain submitted with high priority keeps
+    outranking a low-priority flat collective through its device-enqueued
+    successor stages (inherit_prio=True default)."""
+    R, n = 4, 64
+    rt, world = _runtime(R, order_policy=OrderPolicy.PRIORITY)
+    lo = rt.register(CollKind.ALL_REDUCE, world, n_elems=n)
+    hi = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                     algo="two_level", hierarchy=(2, 2))
+    rng = np.random.RandomState(2)
+    xs = {c: [rng.randn(n).astype(np.float32) for _ in range(R)]
+          for c in (lo, hi)}
+    for r in range(R):
+        rt.submit(r, lo, prio=0, data=xs[lo][r])
+        rt.submit(r, hi, prio=7, data=xs[hi][r])
+    rt.drive()
+    for c in (lo, hi):
+        want = np.sum(xs[c], axis=0)
+        for r in range(R):
+            np.testing.assert_allclose(rt.read_output(r, c), want,
+                                       rtol=1e-4, atol=1e-5)
+    # The device propagated the submission priority to the chain stages.
+    chain = rt.stats()["chains"][hi]
+    prio = np.asarray(rt.state.prio)
+    assert (prio[:, chain[1:]] == 7).all()
+
+
+def test_submit_all_forwards_per_rank_arguments():
+    """Satellite: submit_all carries per-rank prio, payloads, callbacks
+    and offset overrides (scalar-or-dict forms)."""
+    R, n = 4, 16
+    rt, world = _runtime(R, order_policy=OrderPolicy.PRIORITY)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n)
+    rng = np.random.RandomState(3)
+    xs = {r: rng.randn(n).astype(np.float32) for r in range(R)}
+    seen = []
+    rt.submit_all(cid,
+                  prio={r: r for r in range(R)},
+                  data=xs,
+                  callback={0: lambda rk, c: seen.append((rk, c))},
+                  out_off={1: 1 << 12})
+    rt.drive()
+    want = np.sum(list(xs.values()), axis=0)
+    np.testing.assert_allclose(rt.read_output(0, cid), want, rtol=1e-5)
+    # Rank 1 wrote through its per-rank out_off override...
+    np.testing.assert_allclose(rt.read_output(1, cid, out_off=1 << 12),
+                               want, rtol=1e-5)
+    # ...and only rank 0's callback was registered.
+    assert seen == [(0, cid)]
+
+
+def test_mixed_chained_and_flat_conflicting_orders_complete():
+    """The acceptance scenario, deterministic form: two two-level chains
+    plus a flat all-reduce submitted in pairwise-conflicting orders across
+    ranks.  The static single-FIFO-queue baseline deadlocks on the
+    logical order set; OCCL completes every chain with correct results
+    and nonzero preemption."""
+    R, n = 8, 48
+    orders = {r: [0, 1, 2] if r % 2 == 0 else [2, 1, 0] for r in range(R)}
+    static = run_static_order(orders, {c: list(range(R)) for c in range(3)})
+    assert static.deadlocked
+
+    # Both chains use the SAME grid, so their stages CONTEND on the shared
+    # derived intra/inter lanes — the conflicting submission orders below
+    # force the scheduler to preempt between the two chains' stages.
+    rt, world = _runtime(R, max_colls=12, max_comms=3)
+    a = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                    algo="two_level", hierarchy=(2, 4))
+    b = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                    algo="two_level", hierarchy=(2, 4))
+    flat = rt.register(CollKind.ALL_REDUCE, world, n_elems=n)
+    ids = [a, b, flat]
+    rng = np.random.RandomState(5)
+    xs = {c: [rng.randn(n).astype(np.float32) for _ in range(R)]
+          for c in ids}
+    for r in range(R):
+        for slot in orders[r]:
+            rt.submit(r, ids[slot], data=xs[ids[slot]][r])
+    rt.drive(max_launches=128)
+    for c in ids:
+        want = np.sum(xs[c], axis=0)
+        for r in range(R):
+            np.testing.assert_allclose(rt.read_output(r, c), want,
+                                       rtol=1e-4, atol=1e-5)
+    assert rt.stats()["preempts"].sum() > 0

@@ -52,6 +52,39 @@ def _run_occl(R, colls, orders, policy, stickiness, seed, burst_slices=1):
     return rt, ids, inputs, roots
 
 
+def _run_occl_chained(R, hierarchy, n_chained, n_flat, orders, seed,
+                      policy=OrderPolicy.FIFO):
+    """Chained-composite variant of the driver: ``n_chained`` two-level
+    all-reduces (device-chained sub-collectives sharing the derived
+    intra/inter lanes) plus ``n_flat`` flat all-reduces, submitted in the
+    given per-rank orders.  Returns (runtime, logical ids, inputs)."""
+    n_coll = n_chained + n_flat
+    cfg = OcclConfig(
+        n_ranks=R, max_colls=max(4, 3 * n_chained + n_flat), max_comms=3,
+        slice_elems=4, conn_depth=3, heap_elems=1 << 14,
+        order_policy=policy, superstep_budget=1 << 14, quit_threshold=64)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    rng = np.random.RandomState(seed)
+    ids = []
+    for i in range(n_coll):
+        n_elems = int(rng.randint(4, 40))
+        if i < n_chained:
+            ids.append(rt.register(CollKind.ALL_REDUCE, comm,
+                                   n_elems=n_elems, algo="two_level",
+                                   hierarchy=hierarchy))
+        else:
+            ids.append(rt.register(CollKind.ALL_REDUCE, comm,
+                                   n_elems=n_elems))
+    inputs = {cid: [rng.randn(rt.specs[cid].n_elems).astype(np.float32)
+                    for _ in range(R)] for cid in ids}
+    for r in range(R):
+        for slot in orders[r]:
+            rt.submit(r, ids[slot], data=inputs[ids[slot]][r])
+    rt.drive(max_launches=128)
+    return rt, ids, inputs
+
+
 def test_pairwise_opposite_orders_deadlock_baseline_not_occl():
     """The canonical Fig. 1(a) two-collective inversion."""
     orders = {0: [0, 1], 1: [1, 0]}

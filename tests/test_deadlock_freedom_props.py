@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import CollKind, OrderPolicy, run_static_order
 
-from test_deadlock_freedom import KINDS, _run_occl
+from test_deadlock_freedom import KINDS, _run_occl, _run_occl_chained
 
 
 @settings(max_examples=25, deadline=None)
@@ -88,5 +88,42 @@ def test_occl_survives_static_deadlocks(data):
     for cid in ids:
         want = sum(inputs[cid])
         np.testing.assert_allclose(rt.read_output(0, cid), want, rtol=1e-4, atol=1e-6)
+    if static.deadlocked:
+        assert static.cycle is not None or static.blocked_at
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_chained_conflicting_orders_complete(data):
+    """Composite tentpole acceptance: CHAINED sub-collectives (two-level
+    all-reduces whose stages share the derived intra/inter lanes and are
+    enqueued on device) submitted in conflicting orders across lanes.
+    Every order set that deadlocks the StaticOrderExecutor baseline must
+    complete under OCCL with correct sums — the chain edges are exactly
+    the inter-collective dependencies the paper's Sec. 1 warns about."""
+    R, hierarchy = data.draw(st.sampled_from(
+        [(4, (2, 2)), (8, (2, 4)), (8, (4, 2))]), label="grid")
+    n_chained = data.draw(st.integers(1, 3), label="n_chained")
+    n_flat = data.draw(st.integers(0, 2), label="n_flat")
+    n_coll = n_chained + n_flat
+    orders = {r: list(data.draw(st.permutations(range(n_coll)),
+                                label=f"order{r}"))
+              for r in range(R)}
+    policy = data.draw(st.sampled_from(
+        [OrderPolicy.FIFO, OrderPolicy.PRIORITY]), label="policy")
+    seed = data.draw(st.integers(0, 1000), label="seed")
+
+    # The baseline sees the LOGICAL submission orders (a chain is one
+    # collective to the application).
+    static = run_static_order(orders,
+                              {c: list(range(R)) for c in range(n_coll)})
+    rt, ids, inputs = _run_occl_chained(
+        R, hierarchy, n_chained, n_flat,
+        [orders[r] for r in range(R)], seed, policy)
+    for cid in ids:
+        want = sum(inputs[cid])
+        for r in range(R):
+            np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                       rtol=1e-4, atol=1e-5)
     if static.deadlocked:
         assert static.cycle is not None or static.blocked_at

@@ -132,6 +132,59 @@ def test_mesh_backend_burst_slices():
     assert "MESH_BURST_OK" in r.stdout
 
 
+_CHAINED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "@SRC@")
+    import numpy as np, jax
+    from repro.core import OcclConfig, CollKind, OcclRuntime
+
+    # Composite two-level all-reduces on the REAL shard_map fabric: the
+    # chain (intra reduce-scatter -> inter all-reduce -> intra all-gather)
+    # advances on device across the ppermute connector exchanges, two
+    # chains share the derived intra/inter lanes, and the ranks submit
+    # them in conflicting orders (the chained-collective deadlock
+    # scenario on the mesh backend).
+    mesh = jax.make_mesh((8,), ("rank",))
+    cfg = OcclConfig(n_ranks=8, max_colls=8, max_comms=3, slice_elems=8,
+                     conn_depth=4, heap_elems=1 << 13,
+                     superstep_budget=1 << 14)
+    rt = OcclRuntime(cfg, mesh=mesh)
+    world = rt.communicator(list(range(8)))
+    a = rt.register(CollKind.ALL_REDUCE, world, n_elems=96,
+                    algo="two_level", hierarchy=(2, 4))
+    b = rt.register(CollKind.ALL_REDUCE, world, n_elems=56,
+                    algo="two_level", hierarchy=(2, 4))
+    rng = np.random.RandomState(0)
+    xa = [rng.randn(96).astype(np.float32) for _ in range(8)]
+    xb = [rng.randn(56).astype(np.float32) for _ in range(8)]
+    for r in range(8):
+        order = [(a, xa), (b, xb)] if r % 2 == 0 else [(b, xb), (a, xa)]
+        for cid, xs in order:
+            rt.submit(r, cid, data=xs[r])
+    rt.drive(max_launches=128)
+    for r in range(8):
+        np.testing.assert_allclose(rt.read_output(r, a), sum(xa),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(rt.read_output(r, b), sum(xb),
+                                   rtol=1e-4, atol=1e-5)
+    st = rt.stats()
+    chain = st["chains"][a]
+    assert (st["stage_completions"][:, chain] >= 1).all(), st["chains"]
+    assert (st["completed"][:, chain[-1]] == 1).all()
+    print("MESH_CHAIN_OK", int(st["supersteps"].max()),
+          int(st["preempts"].sum()))
+""").replace("@SRC@", str(ROOT / "src"))
+
+
+def test_mesh_backend_chained_two_level():
+    r = subprocess.run([sys.executable, "-c", _CHAINED_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_CHAIN_OK" in r.stdout
+
+
 _ELASTIC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -57,6 +57,54 @@ def test_broadcast_roles(R, root):
     assert all(p == Prim.RECV for p, _ in progs[last])
 
 
+@pytest.mark.parametrize("R", [2, 3, 4, 7])
+def test_broadcast_nonzero_roots(R):
+    """Every root placement: exactly one all-COPY_SEND rank (the root),
+    exactly one all-RECV rank (its ring predecessor), everyone else
+    relays — and chunk ids stay the pipeline order on every rank."""
+    for root in range(R):
+        progs = [build_program(CollKind.BROADCAST, m, R, root)
+                 for m in range(R)]
+        roles = ["send" if all(p == Prim.COPY_SEND for p, _ in pr)
+                 else "recv" if all(p == Prim.RECV for p, _ in pr)
+                 else "relay" for pr in progs]
+        assert roles.count("send") == 1 and roles.index("send") == root
+        assert roles.count("recv") == 1
+        assert roles.index("recv") == (root - 1) % R
+        for pr in progs:
+            assert [c for _, c in pr] == list(range(R))
+
+
+@pytest.mark.parametrize("R", [2, 3, 4, 7])
+def test_reduce_nonzero_roots(R):
+    """REDUCE chain roles for every root: the root's ring successor only
+    SENDs (chain start), the root only RECV_REDUCE_COPYs (chain end),
+    intermediates RECV_REDUCE_SEND.  Regression for the unreachable
+    ``R == 1`` guard that used to sit in the d == 1 branch: single-member
+    groups early-return a COPY, so the distance-1 role must be pure SEND
+    for every R >= 2 and every root."""
+    for root in range(R):
+        progs = [build_program(CollKind.REDUCE, m, R, root)
+                 for m in range(R)]
+        for m, pr in enumerate(progs):
+            d = (m - root) % R
+            if d == 1:
+                want = Prim.SEND
+            elif d == 0:
+                want = Prim.RECV_REDUCE_COPY
+            else:
+                want = Prim.RECV_REDUCE_SEND
+            assert all(p == want for p, _ in pr), (m, root, pr)
+            assert [c for _, c in pr] == list(range(R))
+
+
+def test_single_member_groups_collapse_to_copy():
+    """R == 1 degenerates to one local COPY for every kind and root —
+    the early return that makes the in-branch R == 1 guard unreachable."""
+    for kind in CollKind:
+        assert build_program(kind, 0, 1, 0) == [(Prim.COPY, 0)]
+
+
 def test_slicing_caps_rounds():
     """Per-round slices <= conn_depth - 1 (the wedge-freedom invariant)."""
     for n in [1, 5, 64, 1000, 12345]:

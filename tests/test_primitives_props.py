@@ -1,0 +1,123 @@
+"""Hypothesis property sweep: cross-rank program consistency of every
+registered ring-program builder (the invariant the composite-collective
+algorithm registry must preserve PER SUB-COLLECTIVE, core/algos.py).
+
+For every kind x group size x root the per-rank primitive programs must be
+mutually consistent along the ring:
+
+* **flow matching** — the sequence of chunks rank m sends equals, in FIFO
+  order, the sequence of chunks rank (m+1) % R receives (connectors are
+  FIFO ring buffers, so a chunk mismatch would silently combine unrelated
+  slices);
+* **drain** — executing the programs dataflow-style with unbounded
+  connectors terminates with every program complete and no dangling
+  sends (a structural wedge here would deadlock the daemon regardless of
+  scheduling);
+* **flow conservation** — every chunk reaches its destination with
+  exactly the right contribution set (all ranks for reductions, the
+  originator for gathers/broadcast).
+
+Skipped when hypothesis is absent (tier-1 containers);
+``pip install -r requirements-dev.txt`` restores the sweep.
+"""
+import collections
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.primitives import (_FLAGS, CollKind, Prim, build_program)
+
+
+def _simulate(kind: CollKind, R: int, root: int):
+    """Dataflow-execute the R per-rank programs over unbounded FIFO
+    connectors, tracking each output chunk's contribution set (the set of
+    ranks whose INPUT was combined into it)."""
+    progs = [build_program(kind, m, R, root) for m in range(R)]
+    pc = [0] * R
+    fifo = [collections.deque() for _ in range(R)]  # edge m -> (m+1) % R
+    out: list[dict] = [dict() for _ in range(R)]
+    progress = True
+    while progress:
+        progress = False
+        for m in range(R):
+            while pc[m] < len(progs[m]):
+                prim, k = progs[m][pc[m]]
+                recv, send, _reduce, copy, reads = _FLAGS[Prim(prim)]
+                src = (m - 1) % R
+                if recv and not fifo[src]:
+                    break                      # wait for the upstream send
+                val: set = set()
+                if recv:
+                    wk, wv = fifo[src].popleft()
+                    # Flow matching: the FIFO hands this rank exactly the
+                    # chunk its program expects next.
+                    assert wk == k, (
+                        f"{kind.name} R={R} root={root}: rank {m} step "
+                        f"{pc[m]} expects chunk {k}, wire has {wk}")
+                    val |= wv
+                if reads:
+                    val.add(m)
+                if copy:
+                    out[m][k] = frozenset(val)
+                if send:
+                    fifo[m].append((k, frozenset(val)))
+                pc[m] += 1
+                progress = True
+    assert all(pc[m] == len(progs[m]) for m in range(R)), (
+        f"{kind.name} R={R} root={root}: programs wedge at {pc}")
+    assert all(not f for f in fifo), "dangling sends after completion"
+    return out
+
+
+@settings(max_examples=120, deadline=None)
+@given(data=st.data())
+def test_flow_conservation(data):
+    kind = data.draw(st.sampled_from(list(CollKind)), label="kind")
+    R = data.draw(st.integers(1, 9), label="group_size")
+    root = data.draw(st.integers(0, R - 1), label="root")
+    out = _simulate(kind, R, root)
+    everyone = frozenset(range(R))
+
+    if R == 1:
+        # Degenerate single-member group: local copy of the own input.
+        assert out[0] == {0: frozenset({0})}
+        return
+    if kind == CollKind.ALL_REDUCE:
+        for m in range(R):
+            assert out[m] == {k: everyone for k in range(R)}
+    elif kind == CollKind.ALL_GATHER:
+        for m in range(R):
+            assert out[m] == {k: frozenset({k}) for k in range(R)}
+    elif kind == CollKind.REDUCE_SCATTER:
+        for m in range(R):
+            # Rank m finalizes exactly its own chunk, fully reduced.
+            assert out[m] == {m: everyone}
+    elif kind == CollKind.BROADCAST:
+        for m in range(R):
+            assert out[m] == {k: frozenset({root}) for k in range(R)}
+    elif kind == CollKind.REDUCE:
+        assert out[root] == {k: everyone for k in range(R)}
+        for m in range(R):
+            if m != root:
+                assert out[m] == {}   # non-roots copy nothing
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_send_recv_counts_balance(data):
+    """Per ring edge, #sends == #recvs (no chunk is ever dropped on the
+    wire) — the counting form of flow conservation."""
+    from repro.core.primitives import PRIM_RECV, PRIM_SEND
+
+    kind = data.draw(st.sampled_from(list(CollKind)), label="kind")
+    R = data.draw(st.integers(2, 9), label="group_size")
+    root = data.draw(st.integers(0, R - 1), label="root")
+    progs = [build_program(kind, m, R, root) for m in range(R)]
+    for m in range(R):
+        sends = sum(int(PRIM_SEND[p]) for p, _ in progs[m])
+        recvs = sum(int(PRIM_RECV[p]) for p, _ in progs[(m + 1) % R])
+        assert sends == recvs, (kind, R, root, m)
