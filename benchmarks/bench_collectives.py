@@ -255,7 +255,12 @@ RECORD_SECTIONS = {
     "contention": ("bursts",),
     "staging": ("speedup_vs_legacy", "speedup_vs_legacy_scalar"),
     "mesh": ("ppermutes_per_superstep", "staged_flush"),
-    "hierarchy": ("flat", "two_level", "superstep_ratio"),
+    "hierarchy": ("flat", "two_level", "superstep_ratio", "skew"),
+    # Per-algorithm sweep (the algorithm zoo) + the auto-selection picks
+    # benchmarks/calibrate.py records after fitting the cost model — a
+    # record whose "algos" section lacks "auto" is a sweep that was never
+    # calibrated, and validation fails it loudly.
+    "algos": ("config", "sweep", "auto"),
 }
 
 
@@ -544,43 +549,72 @@ def run_contention_sweep(bursts=(1, 4, 8), n=2048, R=8, C=8, conn_depth=32,
     return record
 
 
-def _hierarchy_once(algo: str, hierarchy, R: int, n: int, burst: int,
-                    conn_depth: int, iters: int) -> dict:
-    """Supersteps + wall time of one all-reduce lowering (flat ring vs
-    the composite two-level chain) at R ranks on the sim backend.  One
-    warm iteration converges gang scheduling and compiles; the measured
-    iterations report the steady state."""
-    cfg = OcclConfig(n_ranks=R, max_colls=4, max_comms=3,
+def _algo_once(algo: str, kind: CollKind, hierarchy, R: int, n: int,
+               burst: int, conn_depth: int, iters: int,
+               bandwidth_groups: int = 0, inter_burst_cap: int = 0,
+               max_comms: int = 3, root: int = 0) -> dict:
+    """Supersteps + wall time of ONE algorithm lowering of ``kind`` at R
+    ranks on the sim backend, optionally under the bandwidth-skew lane
+    model (``bandwidth_groups``/``inter_burst_cap``).  One warm iteration
+    converges gang scheduling and compiles; the measured iterations
+    report the steady state.  The returned record carries the plan's
+    cost-model features next to the measurement — the (X, y) pairs
+    benchmarks/calibrate.py fits (α, β, γ) from."""
+    from repro.core import plan_features
+
+    cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=max_comms,
                      slice_elems=BURST_SLICE_ELEMS, conn_depth=conn_depth,
-                     burst_slices=burst, heap_elems=1 << 17,
-                     superstep_budget=1 << 15)
+                     burst_slices=burst, heap_elems=1 << 18,
+                     superstep_budget=1 << 15,
+                     bandwidth_groups=bandwidth_groups,
+                     inter_burst_cap=inter_burst_cap)
     rt = OcclRuntime(cfg)
-    world = rt.communicator(list(range(R)))
-    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n, algo=algo,
+    world = (rt.communicator(list(range(R))) if algo == "ring"
+             else rt.logical_communicator(list(range(R))))
+    cid = rt.register(kind, world, n_elems=n, algo=algo, root=root,
                       hierarchy=hierarchy)
     rng = np.random.RandomState(0)
     xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
-    want = np.sum(xs, axis=0)
+    want = (np.sum(xs, axis=0) if kind != CollKind.BROADCAST else xs[root])
 
     def once():
-        for r in range(R):
-            rt.submit(r, cid, data=xs[r])
+        rt.submit_all(cid, data={r: xs[r] for r in range(R)})
         rt.drive()
 
     once()                                   # warmup: compile + converge
-    np.testing.assert_allclose(rt.read_output(0, cid), want,
+    check_rank = root if kind in (CollKind.REDUCE, CollKind.BROADCAST) \
+        else 0
+    np.testing.assert_allclose(rt.read_output(check_rank, cid), want,
                                rtol=1e-4, atol=1e-4)
     s0 = rt.stats()
-    t0 = time.perf_counter()
+    # Best-of-N latency: the sim daemon's wall time at small payloads is
+    # dominated by dispatch, and single-shot timings jitter by ~20% on
+    # shared runners — the minimum is the standard noise-robust
+    # microbenchmark statistic (supersteps are deterministic and
+    # averaged).
+    dt = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         once()
-    dt = (time.perf_counter() - t0) / iters
+        dt = min(dt, time.perf_counter() - t0)
     s1 = rt.stats()
     steps = (int(s1["supersteps"].max()) - int(s0["supersteps"].max())) \
         / iters
     slices = (int(s1["slices_moved"].sum())
               - int(s0["slices_moved"].sum())) / iters
-    return {"latency_s": dt, "supersteps": steps, "slices": slices}
+    feats = plan_features(cfg, kind, n, R, hierarchy, algo, root=root)
+    return {"latency_s": dt, "supersteps": steps, "slices": slices,
+            "features": {"supersteps": feats["supersteps"],
+                         "bytes": feats["bytes"],
+                         "stages": feats["stages"]}}
+
+
+def _hierarchy_once(algo: str, hierarchy, R: int, n: int, burst: int,
+                    conn_depth: int, iters: int, **skew) -> dict:
+    """Back-compat shim: the original hierarchy measurement is the
+    all-reduce case of ``_algo_once``."""
+    return _algo_once(algo, CollKind.ALL_REDUCE, hierarchy, R, n, burst,
+                      conn_depth, iters, **skew)
 
 
 def run_hierarchy_bench(R=16, hierarchy=(4, 4), n=2048, burst=8,
@@ -594,10 +628,28 @@ def run_hierarchy_bench(R=16, hierarchy=(4, 4), n=2048, burst=8,
     the check_gates.py hierarchy gate.  Wall time is recorded alongside
     for trajectory tracking (CPU-sim wall time includes XLA dispatch for
     the extra lanes, so supersteps are the structural signal).
+
+    The ``skew`` subrecord re-measures both lowerings under the
+    bandwidth-skew lane model (G islands, inter lanes capped): the flat
+    ring's single lane crosses islands every hop, so here the two-level
+    chain must win on WALL-CLOCK too (its bulk stages ride intra lanes
+    at the full burst) — the wall-time gate of check_gates.py.
     """
     flat = _hierarchy_once("ring", None, R, n, burst, conn_depth, iters)
     two = _hierarchy_once("two_level", hierarchy, R, n, burst, conn_depth,
                           iters)
+    skew_kw = dict(bandwidth_groups=hierarchy[0], inter_burst_cap=2)
+    skew_n = n * 8        # skew penalties are bandwidth-term dominated
+    # Deeper connectors for the bulk skew points: the two-level chain's
+    # intra hops carry skew_n / N elements per rotation, and a ring
+    # buffer shallower than that chunk throttles the chain on credit
+    # stalls rather than the modeled lane bandwidth (both lowerings get
+    # the same fabric).
+    skew_depth = max(conn_depth, 64)
+    skew_flat = _hierarchy_once("ring", None, R, skew_n, burst,
+                                skew_depth, iters, **skew_kw)
+    skew_two = _hierarchy_once("two_level", hierarchy, R, skew_n, burst,
+                               skew_depth, iters, **skew_kw)
     record = {
         "config": {"n_ranks": R, "hierarchy": list(hierarchy), "n_elems": n,
                    "slice_elems": BURST_SLICE_ELEMS, "burst_slices": burst,
@@ -607,16 +659,81 @@ def run_hierarchy_bench(R=16, hierarchy=(4, 4), n=2048, burst=8,
         "flat": flat,
         "two_level": two,
         "superstep_ratio": two["supersteps"] / max(flat["supersteps"], 1),
+        "skew": {
+            "config": {"n_elems": skew_n, "conn_depth": skew_depth,
+                       **skew_kw},
+            "flat": skew_flat,
+            "two_level": skew_two,
+            "wall_ratio": skew_two["latency_s"]
+                / max(skew_flat["latency_s"], 1e-12),
+        },
     }
     row("collectives/hierarchy_flat_ring", flat["latency_s"] * 1e6,
         f"supersteps={flat['supersteps']:.0f}")
     row("collectives/hierarchy_two_level", two["latency_s"] * 1e6,
         f"supersteps={two['supersteps']:.0f};"
         f"ratio_vs_flat={record['superstep_ratio']:.2f}")
+    row("collectives/hierarchy_skew_flat", skew_flat["latency_s"] * 1e6,
+        f"supersteps={skew_flat['supersteps']:.0f}")
+    row("collectives/hierarchy_skew_two_level",
+        skew_two["latency_s"] * 1e6,
+        f"supersteps={skew_two['supersteps']:.0f};"
+        f"wall_ratio={record['skew']['wall_ratio']:.2f}")
     doc = _read_record(out_path)
     doc["hierarchy"] = record
     _write_record(out_path, doc)
     print(f"# wrote {out_path} (hierarchy)")
+    return record
+
+
+def run_algo_sweep(R=16, hierarchy=(4, 4), small_n=256, large_n=16384,
+                   burst=8, conn_depth=64, iters=3,
+                   out_path=BENCH_JSON) -> dict:
+    """Algorithm-zoo sweep (``algos`` record section): measure EVERY
+    registered lowering of all-reduce and broadcast at two payload sizes
+    straddling the small/large crossover, under the bandwidth-skew lane
+    model (hierarchy[0] islands, inter lanes capped at 2 slices/superstep
+    — the regime where hierarchical plans earn their extra stages).
+
+    Each measurement records wall-clock, supersteps and the plan's
+    cost-model features; benchmarks/calibrate.py fits (α, β, γ) from
+    exactly these samples and appends the fitted auto-selection picks
+    under ``algos.auto`` (check_gates.py asserts the picks match the
+    measured winners on both sides of the crossover).
+    """
+    from repro.core import AUTO_CANDIDATES
+
+    skew_kw = dict(bandwidth_groups=hierarchy[0], inter_burst_cap=2)
+    sweep: dict = {}
+    for label, kind in [("all_reduce", CollKind.ALL_REDUCE),
+                        ("broadcast", CollKind.BROADCAST)]:
+        sweep[label] = {}
+        for size_label, n in [("small", small_n), ("large", large_n)]:
+            entry = {"n_elems": n}
+            for algo in AUTO_CANDIDATES[kind]:
+                hier = None if algo == "ring" else hierarchy
+                entry[algo] = _algo_once(algo, kind, hier, R, n, burst,
+                                         conn_depth, iters, **skew_kw)
+                row(f"collectives/algos_{label}_{size_label}_{algo}",
+                    entry[algo]["latency_s"] * 1e6,
+                    f"supersteps={entry[algo]['supersteps']:.0f}")
+            sweep[label][size_label] = entry
+    record = {
+        "config": {"n_ranks": R, "hierarchy": list(hierarchy),
+                   "small_n": small_n, "large_n": large_n,
+                   "slice_elems": BURST_SLICE_ELEMS, "burst_slices": burst,
+                   "conn_depth": conn_depth, "iters": iters,
+                   "backend": "sim", **skew_kw},
+        "sweep": sweep,
+    }
+    doc = _read_record(out_path)
+    # Replace the section wholesale, DROPPING any prior auto picks: they
+    # were fitted against the previous sweep, and validate_record's
+    # missing-"auto" failure is what forces benchmarks/calibrate.py to
+    # re-fit against THIS sweep before the record passes as complete.
+    doc["algos"] = record
+    _write_record(out_path, doc)
+    print(f"# wrote {out_path} (algos)")
     return record
 
 

@@ -1,0 +1,117 @@
+"""Fit the α-β-γ cost model from the measured algorithm sweep.
+
+Reads the ``algos`` section run_algo_sweep wrote into
+BENCH_collectives.json (every sample pairs a plan's structural features
+with its measured wall-clock), fits the non-negative least squares of
+:func:`repro.core.costmodel.fit`, persists the per-backend coefficients
+to BENCH_calibration.json (what ``select_algo("auto")`` loads at
+registration time), and appends the fitted model's auto-selection picks
+for the sweep's own small/large configurations under ``algos.auto`` —
+so benchmarks/check_gates.py can assert "auto picks the measured
+winner" from the JSON record alone, without importing repro.
+
+Usage: ``python benchmarks/calibrate.py`` (after ``run_algo_sweep``;
+``benchmarks/run.py`` chains both).
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from common import row  # noqa: E402
+from bench_collectives import (BENCH_JSON, _read_record,  # noqa: E402
+                               _write_record)
+
+KIND_OF = {"all_reduce": "ALL_REDUCE", "broadcast": "BROADCAST"}
+
+
+def collect_samples(algos_record: dict) -> list[dict]:
+    """Flatten the sweep into fit() samples: one (features, wall) pair
+    per (kind, size, algorithm) measurement."""
+    samples = []
+    for label, sizes in algos_record["sweep"].items():
+        for size_label, entry in sizes.items():
+            for algo, rec in entry.items():
+                if not isinstance(rec, dict) or "features" not in rec:
+                    continue
+                samples.append({
+                    **rec["features"],
+                    "wall": rec["latency_s"],
+                    "tag": f"{label}/{size_label}/{algo}",
+                })
+    return samples
+
+
+def auto_picks(record: dict, model) -> dict:
+    """The fitted model's selection for each swept (kind, size) — the
+    exact configs the sweep measured, so the gate can compare pick vs
+    measured winner without re-deriving features."""
+    from repro.core import CollKind, OcclConfig, select_algo
+
+    cfg_rec = record["config"]
+    cfg = OcclConfig(
+        n_ranks=cfg_rec["n_ranks"], max_colls=8, max_comms=3,
+        slice_elems=cfg_rec["slice_elems"],
+        conn_depth=cfg_rec["conn_depth"],
+        burst_slices=cfg_rec["burst_slices"],
+        heap_elems=1 << 18, superstep_budget=1 << 15,
+        bandwidth_groups=cfg_rec["bandwidth_groups"],
+        inter_burst_cap=cfg_rec["inter_burst_cap"])
+    hierarchy = tuple(cfg_rec["hierarchy"])
+    picks: dict = {}
+    for label, sizes in record["sweep"].items():
+        kind = CollKind[KIND_OF[label]]
+        picks[label] = {}
+        for size_label, entry in sizes.items():
+            pick = select_algo("auto", kind, entry["n_elems"],
+                               cfg_rec["n_ranks"], hierarchy=hierarchy,
+                               cfg=cfg, model=model)
+            walls = {a: r["latency_s"] for a, r in entry.items()
+                     if isinstance(r, dict) and "latency_s" in r}
+            picks[label][size_label] = {
+                "pick": pick,
+                "pick_wall_s": walls.get(pick),
+                "best_algo": min(walls, key=walls.get),
+                "best_wall_s": min(walls.values()),
+            }
+    return picks
+
+
+def main(out_path=BENCH_JSON) -> dict:
+    from repro.core import costmodel
+
+    doc = _read_record(out_path)
+    if "algos" not in doc or "sweep" not in doc.get("algos", {}):
+        raise RuntimeError(
+            f"{out_path} has no algos sweep — run "
+            "benchmarks/bench_collectives.py run_algo_sweep first "
+            "(python benchmarks/run.py does)")
+    record = doc["algos"]
+    samples = collect_samples(record)
+    model = costmodel.fit(samples)
+    path = model.save(backend="sim", extra={
+        "n_samples": len(samples),
+        "source_record": str(out_path.name),
+    })
+    row("collectives/calibration_alpha", model.alpha * 1e6, "us/superstep")
+    row("collectives/calibration_beta", model.beta * 1e9, "ns/byte")
+    row("collectives/calibration_gamma", model.gamma * 1e6, "us/stage")
+    picks = auto_picks(record, model)
+    doc = _read_record(out_path)            # re-read: atomic append
+    doc.setdefault("algos", {})["auto"] = {
+        "model": {"alpha": model.alpha, "beta": model.beta,
+                  "gamma": model.gamma, "source": model.source},
+        "picks": picks,
+    }
+    _write_record(out_path, doc)
+    print(f"# wrote {path} (calibration) + {out_path} (algos.auto)")
+    for label, sizes in picks.items():
+        for size_label, p in sizes.items():
+            print(f"#   auto[{label}/{size_label}] -> {p['pick']} "
+                  f"(measured best: {p['best_algo']})")
+    return {"model": model, "picks": picks}
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,19 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
   complete in FEWER supersteps than the flat ring (the chain's latency
   term is N + (2G - 1) + N = 15 steps vs the ring's 2R - 1 = 31; parity
   or worse means the device-side chain advance regressed to host round
-  trips or the stages stopped overlapping their slice bursts).
+  trips or the stages stopped overlapping their slice bursts).  Under
+  the bandwidth-skew lane model the two-level chain must also win on
+  WALL-CLOCK (its bulk stages ride intra lanes at the full burst while
+  the flat ring pays the inter cap every hop).
+* **algos** — the algorithm zoo at R=16 under bandwidth skew: at the
+  large payload at least one NEW chained plan (torus/hybrid/two_level)
+  must beat the flat ring on wall-clock, and the calibrated cost model's
+  ``auto`` picks (benchmarks/calibrate.py) must land on the measured
+  winner's side of the crossover at BOTH payload sizes — small must stay
+  single-stage-cheap (flat ring family), large must go hierarchical, and
+  each pick's measured wall must be within 1.15x of the measured best
+  (the model may break near-ties either way; picking a genuinely slow
+  algorithm is the regression).
 
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
@@ -84,6 +96,61 @@ def check(doc: dict) -> list[str]:
         failures.append(
             f"two-level all-reduce regressed: {two_steps:.0f} supersteps "
             f"vs flat ring's {flat_steps:.0f} (gate: strictly fewer)")
+    sk = h["skew"]
+    print(f"hierarchy skew wall: flat {sk['flat']['latency_s']*1e3:.1f}ms, "
+          f"two_level {sk['two_level']['latency_s']*1e3:.1f}ms "
+          f"(ratio {sk['wall_ratio']:.2f})")
+    if not sk["two_level"]["latency_s"] < sk["flat"]["latency_s"]:
+        failures.append(
+            "two-level all-reduce lost its WALL-CLOCK win under bandwidth "
+            f"skew: {sk['two_level']['latency_s']*1e3:.1f}ms vs flat "
+            f"{sk['flat']['latency_s']*1e3:.1f}ms (gate: strictly faster)")
+
+    a = doc["algos"]
+    large = a["sweep"]["all_reduce"]["large"]
+    flat_wall = large["ring"]["latency_s"]
+    new_walls = {algo: rec["latency_s"] for algo, rec in large.items()
+                 if algo not in ("ring", "n_elems")
+                 and isinstance(rec, dict)}
+    best_new = min(new_walls, key=new_walls.get)
+    print(f"algos large all-reduce wall: ring {flat_wall*1e3:.1f}ms, "
+          + ", ".join(f"{k} {v*1e3:.1f}ms" for k, v in new_walls.items()))
+    if not new_walls[best_new] < flat_wall:
+        failures.append(
+            "no chained all-reduce plan beats the flat ring on wall-clock "
+            f"at the large payload (best: {best_new} "
+            f"{new_walls[best_new]*1e3:.1f}ms vs ring {flat_wall*1e3:.1f}ms)")
+    # Auto picks: the calibrated model must land on the measured winner's
+    # SIDE of the all-reduce crossover, and never pick something
+    # measurably slow.  The crossover families apply to ALL-REDUCE only:
+    # a hierarchical broadcast ships the full payload over the capped
+    # leader lanes, so the flat ring legitimately stays the measured
+    # winner at every size there — for broadcast the wall-tolerance
+    # check below is the whole gate.
+    AR_SMALL_FAMILY = {"ring"}                   # single-stage plans
+    AR_LARGE_FAMILY = {"two_level", "torus", "hybrid"}
+    picks = a["auto"]["picks"]
+    for label, sizes in picks.items():
+        for size_label, p in sizes.items():
+            print(f"auto[{label}/{size_label}]: pick {p['pick']} "
+                  f"(measured best {p['best_algo']})")
+            if label == "all_reduce":
+                family = (AR_SMALL_FAMILY if size_label == "small"
+                          else AR_LARGE_FAMILY)
+                if p["pick"] not in family:
+                    failures.append(
+                        f"auto pick for {label}/{size_label} is "
+                        f"{p['pick']!r} — outside the expected "
+                        f"{sorted(family)} family for that side of the "
+                        "crossover")
+            if (p.get("pick_wall_s") is not None
+                    and p["pick_wall_s"] > 1.15 * p["best_wall_s"]):
+                failures.append(
+                    f"auto pick for {label}/{size_label} ({p['pick']}) "
+                    f"measured {p['pick_wall_s']*1e3:.1f}ms, "
+                    f">1.15x the best ({p['best_algo']} "
+                    f"{p['best_wall_s']*1e3:.1f}ms) — the calibrated "
+                    "model is selecting a measurably slow algorithm")
     return failures
 
 
@@ -93,7 +160,7 @@ def main(argv: list[str]) -> int:
     path = (pathlib.Path(argv[1]) if len(argv) > 1
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
-        required=("staging", "contention", "mesh", "hierarchy"),
+        required=("staging", "contention", "mesh", "hierarchy", "algos"),
         out_path=path)
     failures = check(doc)
     for f in failures:

@@ -41,7 +41,19 @@ def main(quick: bool = False) -> None:
         # Composite layer: flat ring vs two-level chain at R=16 — the
         # full-size point (the hierarchy gate compares supersteps, which
         # are size-stable, so --quick keeps the acceptance workload).
-        bench_collectives.run_hierarchy_bench(iters=1)
+        # iters=3 even in --quick: the skew gate compares WALL-CLOCK, and
+        # best-of-1 timings jitter by ~20% — enough to flip near-ties.
+        bench_collectives.run_hierarchy_bench(iters=3)
+        # Algorithm zoo + cost-model calibration: the per-algorithm sweep
+        # at the two crossover-straddling sizes, then the α-β-γ fit +
+        # auto-pick record (check_gates asserts auto matches the measured
+        # winners).  Full-size points even in --quick: the gates compare
+        # measured winners, and smaller payloads move the crossover.
+        # iters=3: the pick-vs-best wall tolerance is 1.15x, within
+        # single-shot dispatch noise at the small payload.
+        bench_collectives.run_algo_sweep(iters=3)
+        import calibrate
+        calibrate.main()
         # Fail LOUDLY on a stale/partial record: every section the gates
         # consume must have been (re)written by THIS run — a missing
         # ``contention`` key in a stale BENCH_collectives.json used to
@@ -60,6 +72,9 @@ def main(quick: bool = False) -> None:
     bench_collectives.run_staging_bench(iters=20)
     bench_collectives.run_mesh_bench()
     bench_collectives.run_hierarchy_bench()
+    bench_collectives.run_algo_sweep()
+    import calibrate
+    calibrate.main()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)

@@ -12,8 +12,12 @@ Three acts:
    ON DEVICE: one daemon launch runs all three stages, observable in the
    stats() chain/stage counters.
 
-2. **Auto selection** — ``algo="auto"`` picks the flat ring below
-   ``cfg.two_level_threshold`` elements and the two-level chain above it.
+2. **Auto selection** — ``algo="auto"`` ranks the registered candidate
+   plans (ring / two_level / torus / hybrid for all-reduce) with the
+   measured α-β-γ cost model: at a small payload the per-stage overhead
+   term keeps the flat ring, under inter-island bandwidth skew at a
+   large payload a hierarchical chain wins (core/costmodel.py; calibrate
+   with ``python benchmarks/calibrate.py``).
 
 3. **The adversarial chained-order scenario** — two chains share the
    derived intra/inter lanes and the ranks submit them in conflicting
@@ -78,15 +82,24 @@ print(f"supersteps per all-reduce at R={R}: flat ring {steps['ring']}, "
       f"({steps['ring'] / steps['two_level']:.1f}x fewer)")
 assert steps["two_level"] < steps["ring"]
 
-# --- 2. size-based auto selection --------------------------------------
-rt, world = make_runtime()
-small = rt.register(CollKind.ALL_REDUCE, world, n_elems=256, algo="auto")
-big = rt.register(CollKind.ALL_REDUCE, world, n_elems=N_ELEMS, algo="auto")
-print(f"auto selection: {256} elems -> "
-      f"{'two_level' if small in rt.stats()['chains'] else 'ring'}, "
-      f"{N_ELEMS} elems -> "
-      f"{'two_level' if big in rt.stats()['chains'] else 'ring'} "
-      f"(threshold {rt.cfg.two_level_threshold})")
+# --- 2. cost-model auto selection --------------------------------------
+# Under the bandwidth-skew lane model (4 islands, inter lanes capped at
+# 2 slices/superstep) the flat ring pays the inter cap on EVERY hop, so
+# the model's latency term flips the selection at large payloads while
+# the per-stage overhead term keeps small payloads on the single-stage
+# ring.
+skew_cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=3, slice_elems=64,
+                      conn_depth=24, burst_slices=8, heap_elems=1 << 17,
+                      superstep_budget=1 << 15,
+                      bandwidth_groups=4, inter_burst_cap=2)
+rt = OcclRuntime(skew_cfg)
+world = rt.communicator(list(range(R)))
+small = rt.register(CollKind.ALL_REDUCE, world, n_elems=64, algo="auto")
+big = rt.register(CollKind.ALL_REDUCE, world, n_elems=1 << 16, algo="auto")
+algos = rt.stats()["algos"]
+print(f"auto selection under bandwidth skew: 64 elems -> "
+      f"{algos.get(small, 'ring')}, {1 << 16} elems -> "
+      f"{algos.get(big, 'ring')}")
 
 # --- 3. adversarial chained submission orders --------------------------
 orders = {r: [0, 1] if r % 2 == 0 else [1, 0] for r in range(R)}

@@ -5,9 +5,13 @@ per-rank primitive sequences over connector ring buffers, executed by a
 long-running daemon loop with decentralized preemption (spin thresholds)
 and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
 """
-from .algos import (CompositePlan, SubCollective, default_hierarchy,
-                    plan_two_level, select_algo)
+from .algos import (AUTO_CANDIDATES, PLAN_BUILDERS, CompositePlan,
+                    SubCollective, build_plan, default_hierarchy,
+                    plan_hybrid, plan_torus, plan_tree_broadcast,
+                    plan_tree_reduce, plan_two_level, register_plan,
+                    select_algo)
 from .config import OcclConfig, OrderPolicy, ReduceOp
+from .costmodel import CostModel, fit, plan_features
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
 from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
 from .staging import StagingEngine
@@ -19,5 +23,8 @@ __all__ = [
     "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning", "StagingEngine",
     "run_static_order", "consistent_order_exists",
     "CompositePlan", "SubCollective", "default_hierarchy",
-    "plan_two_level", "select_algo",
+    "plan_two_level", "plan_torus", "plan_hybrid",
+    "plan_tree_broadcast", "plan_tree_reduce",
+    "PLAN_BUILDERS", "AUTO_CANDIDATES", "register_plan", "build_plan",
+    "select_algo", "CostModel", "plan_features", "fit",
 ]

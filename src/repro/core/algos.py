@@ -26,6 +26,53 @@ k+1 on one rank waits for stage k on OTHER ranks.  The OCCL scheduler's
 preemption keeps composed chains deadlock-free the same way it keeps
 independently submitted collectives deadlock-free — the deadlock-freedom
 property sweep covers chains submitted in conflicting orders.
+
+Plan registry (the algorithm zoo)
+---------------------------------
+Multi-stage lowerings are registered in ``PLAN_BUILDERS`` under
+``(algo_name, kind)`` keys; :func:`build_plan` is the dispatch.  Shipped
+plans over a ``G x N`` grid (root at grid position ``(g0, m0) =
+divmod(root, N)``):
+
+* ``two_level`` ALL_REDUCE — intra reduce-scatter -> inter all-reduce over
+  chunk owners -> intra all-gather (latency ``2N + 2G - 1``).
+* ``torus`` ALL_REDUCE — the 2D-torus decomposition: intra reduce-scatter
+  -> inter reduce-scatter -> inter all-gather -> intra all-gather
+  (``2N + 2G``; the inter traffic is a further factor G smaller than
+  two_level's, which wins under inter-lane bandwidth skew).
+* ``hybrid`` ALL_REDUCE — pipelined ring+tree: intra REDUCE to the group
+  leaders -> leader-ring all-reduce over the FULL payload -> intra
+  BROADCAST (latency ``N + (2G - 1) + N`` but no payload split: strong at
+  latency-bound sizes, weak when inter bandwidth is scarce).
+* ``tree`` BROADCAST / REDUCE — leader-ring hop + intra hop (latency
+  ``G + N`` vs the flat ring's ``R``).
+
+Stages may cover only a SUBSET of the logical members (tree/hybrid inter
+stages run on the G group leaders): the tables layer derives per-rank
+chain successor/tail maps, the runtime redirects each rank's submission
+to its first participating stage, and a rank's logical CQE fires at its
+LAST participating stage.
+
+Adding an algorithm: write ``plan_<name>(members, hierarchy, n_elems,
+root)`` returning a CompositePlan whose adjacent stages satisfy
+``out_log(stage k) == in_log(stage k+1)`` (the chain-relink handshake,
+asserted at registration), register it with ``@register_plan(name,
+kind)``, and list it in :data:`AUTO_CANDIDATES` so ``algo="auto"`` can
+pick it.  The hypothesis sweep in tests/test_primitives_props.py
+validates any registered plan structurally (flow conservation across
+stages, every grid x root).
+
+Calibration workflow (``algo="auto"``)
+--------------------------------------
+``select_algo("auto", ...)`` ranks the registered candidate plans with
+the measured α-β-γ cost model of :mod:`repro.core.costmodel`:
+``benchmarks/bench_collectives.py run_algo_sweep`` measures every
+candidate's wall-clock into the ``algos`` section of
+BENCH_collectives.json, ``benchmarks/calibrate.py`` fits (α, β, γ) to
+those samples and persists them to BENCH_calibration.json, and
+registration-time ``select_algo`` loads the fit to pick the plan with
+the lowest PREDICTED WALL-CLOCK — not superstep count — for the
+submitted payload size, topology and bandwidth skew.
 """
 from __future__ import annotations
 
@@ -181,6 +228,17 @@ def default_hierarchy(R: int) -> tuple:
     return (R // best, best)
 
 
+def _grid(members: Sequence[int], hierarchy: tuple) -> list:
+    """Row-major ``G x N`` grid of the member ranks; validates tiling."""
+    G, N = hierarchy
+    R = len(members)
+    if G * N != R:
+        raise ValueError(f"hierarchy {hierarchy} does not tile the "
+                         f"{R}-member communicator (G * N != {R})")
+    members = tuple(members)
+    return [members[g * N:(g + 1) * N] for g in range(G)]
+
+
 def plan_two_level(kind: CollKind, members: Sequence[int],
                    hierarchy: tuple, n_elems: int) -> CompositePlan:
     """Lower a logical all-reduce over a ``G x N`` rank grid into the
@@ -197,17 +255,12 @@ def plan_two_level(kind: CollKind, members: Sequence[int],
     ``members`` is the logical communicator's ring order, reshaped
     row-major: group g = members[g*N : (g+1)*N].
     """
-    G, N = hierarchy
-    R = len(members)
-    if G * N != R:
-        raise ValueError(f"hierarchy {hierarchy} does not tile the "
-                         f"{R}-member communicator (G * N != {R})")
     if kind != CollKind.ALL_REDUCE:
         raise ValueError(
             f"two_level lowering is defined for ALL_REDUCE only, got "
             f"{CollKind(kind)!r} (register other kinds with algo='ring')")
-    members = tuple(members)
-    groups = [members[g * N:(g + 1) * N] for g in range(G)]
+    G, N = hierarchy
+    groups = _grid(members, hierarchy)
     # Inter-group rings: position m's chunk owners across all groups.
     owners = [tuple(groups[g][m] for g in range(G)) for m in range(N)]
     intra = tuple(r for grp in groups for r in grp)          # == members
@@ -222,36 +275,215 @@ def plan_two_level(kind: CollKind, members: Sequence[int],
         ))
 
 
-def select_algo(algo: str, kind: CollKind, n_elems: int, group_size: int,
-                hierarchy: Optional[tuple], threshold: int) -> str:
-    """Resolve ``"auto"`` to a concrete algorithm.
+def plan_torus(kind: CollKind, members: Sequence[int], hierarchy: tuple,
+               n_elems: int, root: int = 0) -> CompositePlan:
+    """2D-torus all-reduce: replace two_level's inter ALL_REDUCE with an
+    inter REDUCE_SCATTER + ALL_GATHER pair.  One more latency step
+    (``2N + 2G`` vs ``2N + 2G - 1``) but each inter primitive step moves
+    a chunk a further factor G smaller — the right trade when the
+    inter-group lane is bandwidth-starved (cfg.bandwidth_groups skew).
 
-    Flat ring below the payload threshold, two-level at/above it: with
-    slice bursts the superstep cost of a collective is dominated by its
-    primitive-step (latency) term, which grows as ``2R - 1`` for the flat
-    ring but only ``2N + 2G - 1`` for the two-level chain — the larger
-    the payload the longer a flat ring's per-step slice train, so the
-    decomposition pays off once the payload amortizes the chain's two
-    stage hand-offs.  Explicit ``"ring"`` / ``"two_level"`` pass through
-    unchanged; auto falls back to ring when the kind has no two-level
-    lowering or the grid is degenerate (prime group, G or N == 1).
+    Chain-edge exactness: stage logical sizes compose as
+    ``n -> cl1 = ceil(n/N) -> cl2 = ceil(cl1/G) -> cl1 -> n`` using the
+    SAME ceil at producer and consumer, so every edge's
+    ``out_log == in_log`` holds for ragged payloads too."""
+    if kind != CollKind.ALL_REDUCE:
+        raise ValueError(
+            f"torus lowering is defined for ALL_REDUCE only, got "
+            f"{CollKind(kind)!r}")
+    G, N = hierarchy
+    groups = _grid(members, hierarchy)
+    owners = [tuple(groups[g][m] for g in range(G)) for m in range(N)]
+    intra = tuple(r for grp in groups for r in grp)
+    inter = tuple(r for ring in owners for r in ring)
+    cl1 = -(-n_elems // N)                                   # ceil
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.REDUCE_SCATTER, intra, N, n_elems),
+            SubCollective(CollKind.REDUCE_SCATTER, inter, G, cl1),
+            SubCollective(CollKind.ALL_GATHER, inter, G, cl1),
+            SubCollective(CollKind.ALL_GATHER, intra, N, n_elems),
+        ))
+
+
+def plan_hybrid(kind: CollKind, members: Sequence[int], hierarchy: tuple,
+                n_elems: int, root: int = 0) -> CompositePlan:
+    """Pipelined ring+tree all-reduce: intra REDUCE to each group's
+    leader (grid column ``m0``), leader-ring ALL_REDUCE over the FULL
+    payload, intra BROADCAST back out.  Latency ``N + (2G - 1) + N``
+    with no payload split across stages — competitive at latency-bound
+    sizes, deliberately bandwidth-hungry on the inter lane (the cost
+    model learns to avoid it when skew makes that lane scarce).
+
+    Non-leader ranks participate only in stages 0 and 2: their chains
+    skip the leader ring (per-rank successor maps, tables layer)."""
+    if kind != CollKind.ALL_REDUCE:
+        raise ValueError(
+            f"hybrid lowering is defined for ALL_REDUCE only, got "
+            f"{CollKind(kind)!r}")
+    G, N = hierarchy
+    g0, m0 = divmod(root, N)
+    groups = _grid(members, hierarchy)
+    leaders = tuple(groups[g][m0] for g in range(G))
+    intra = tuple(r for grp in groups for r in grp)
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.REDUCE, intra, N, n_elems, root=m0),
+            SubCollective(CollKind.ALL_REDUCE, leaders, G, n_elems),
+            SubCollective(CollKind.BROADCAST, intra, N, n_elems, root=m0),
+        ))
+
+
+def plan_tree_broadcast(kind: CollKind, members: Sequence[int],
+                        hierarchy: tuple, n_elems: int, root: int = 0
+                        ) -> CompositePlan:
+    """Tree broadcast over the grid: root's payload hops the leader ring
+    (grid column ``m0`` of the root), then every group's leader fans out
+    over its intra ring — ``G + N`` latency steps vs the flat ring's
+    ``R``.  Non-leader ranks participate only in the intra stage."""
+    if kind != CollKind.BROADCAST:
+        raise ValueError(
+            f"tree broadcast lowering got {CollKind(kind)!r}")
+    G, N = hierarchy
+    g0, m0 = divmod(root, N)
+    groups = _grid(members, hierarchy)
+    leaders = tuple(groups[g][m0] for g in range(G))
+    intra = tuple(r for grp in groups for r in grp)
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.BROADCAST, leaders, G, n_elems,
+                          root=g0),
+            SubCollective(CollKind.BROADCAST, intra, N, n_elems,
+                          root=m0),
+        ))
+
+
+def plan_tree_reduce(kind: CollKind, members: Sequence[int],
+                     hierarchy: tuple, n_elems: int, root: int = 0
+                     ) -> CompositePlan:
+    """Tree reduce: mirror of the tree broadcast — every group reduces
+    onto its leader (the root's grid column ``m0``), then the leader
+    ring reduces onto the root's group leader, i.e. the root itself."""
+    if kind != CollKind.REDUCE:
+        raise ValueError(f"tree reduce lowering got {CollKind(kind)!r}")
+    G, N = hierarchy
+    g0, m0 = divmod(root, N)
+    groups = _grid(members, hierarchy)
+    leaders = tuple(groups[g][m0] for g in range(G))
+    intra = tuple(r for grp in groups for r in grp)
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.REDUCE, intra, N, n_elems, root=m0),
+            SubCollective(CollKind.REDUCE, leaders, G, n_elems, root=g0),
+        ))
+
+
+# (algo_name, kind) -> plan builder(members, hierarchy, n_elems, root).
+PLAN_BUILDERS: dict = {
+    ("two_level", CollKind.ALL_REDUCE):
+        lambda members, hier, n, root=0: plan_two_level(
+            CollKind.ALL_REDUCE, members, hier, n),
+    ("torus", CollKind.ALL_REDUCE):
+        lambda members, hier, n, root=0: plan_torus(
+            CollKind.ALL_REDUCE, members, hier, n, root),
+    ("hybrid", CollKind.ALL_REDUCE):
+        lambda members, hier, n, root=0: plan_hybrid(
+            CollKind.ALL_REDUCE, members, hier, n, root),
+    ("tree", CollKind.BROADCAST):
+        lambda members, hier, n, root=0: plan_tree_broadcast(
+            CollKind.BROADCAST, members, hier, n, root),
+    ("tree", CollKind.REDUCE):
+        lambda members, hier, n, root=0: plan_tree_reduce(
+            CollKind.REDUCE, members, hier, n, root),
+}
+
+
+def register_plan(algo: str, kind: CollKind):
+    """Decorator: register a composite plan builder for (algo, kind)."""
+
+    def deco(fn):
+        PLAN_BUILDERS[(algo, CollKind(kind))] = fn
+        return fn
+
+    return deco
+
+
+# Candidate plans ``algo="auto"`` ranks per kind (flat ring is always a
+# candidate; plans needing a non-degenerate grid are filtered at select
+# time).  Order breaks cost ties: earlier wins.
+AUTO_CANDIDATES: dict = {
+    CollKind.ALL_REDUCE: ("ring", "two_level", "torus", "hybrid"),
+    CollKind.BROADCAST: ("ring", "tree"),
+    CollKind.REDUCE: ("ring", "tree"),
+    CollKind.ALL_GATHER: ("ring",),
+    CollKind.REDUCE_SCATTER: ("ring",),
+}
+
+
+def build_plan(algo: str, kind: CollKind, members: Sequence[int],
+               hierarchy: tuple, n_elems: int, root: int = 0
+               ) -> CompositePlan:
+    """Dispatch a composite lowering from the plan registry."""
+    try:
+        builder = PLAN_BUILDERS[(algo, CollKind(kind))]
+    except KeyError:
+        raise ValueError(
+            f"no registered composite plan for algo={algo!r}, "
+            f"kind={CollKind(kind)!r} (registered: "
+            f"{sorted(set(a for a, _ in PLAN_BUILDERS))})")
+    return builder(tuple(members), tuple(hierarchy), n_elems, root)
+
+
+def select_algo(algo: str, kind: CollKind, n_elems: int, group_size: int,
+                hierarchy: Optional[tuple] = None, cfg=None,
+                model=None) -> str:
+    """Resolve ``"auto"`` to the concrete algorithm with the lowest
+    PREDICTED WALL-CLOCK under the measured α-β-γ cost model
+    (:mod:`repro.core.costmodel`).
+
+    Explicit algorithm names pass through unchanged.  ``"auto"`` ranks
+    the :data:`AUTO_CANDIDATES` of the kind: per candidate the model
+    predicts ``α·supersteps + β·bytes_on_wire + γ·n_stages`` from the
+    plan's stage structure, the config's slicing geometry and the
+    bandwidth-skew lane caps; (α, β, γ) come from ``model`` (default:
+    the persisted BENCH_calibration.json fit of benchmarks/calibrate.py,
+    falling back to conservative defaults when absent).  Composite
+    candidates are dropped when the grid is degenerate (G or N == 1 —
+    prime groups) — a lone flat ring short-circuits without consulting
+    the model, so flat-only workloads never touch the calibration file.
     """
     if algo != "auto":
         return algo
-    if kind != CollKind.ALL_REDUCE or n_elems < threshold:
-        return "ring"
     if hierarchy is not None:
         G, N = hierarchy
         # A caller-provided grid that does not tile the group is a bug,
         # not a selection hint: silently downgrading to the flat ring
-        # would hide the typo (the explicit two_level path raises the
-        # same error via plan_two_level).
+        # would hide the typo (the explicit composite path raises the
+        # same error via _grid).
         if G * N != group_size:
             raise ValueError(
                 f"hierarchy {hierarchy} does not tile the "
                 f"{group_size}-member communicator (G * N != {group_size})")
     else:
         G, N = default_hierarchy(group_size)
-    if G <= 1 or N <= 1:
-        return "ring"                          # degenerate grid (primes)
-    return "two_level"
+    candidates = [
+        a for a in AUTO_CANDIDATES[CollKind(kind)]
+        if a == "ring" or (G > 1 and N > 1
+                           and (a, CollKind(kind)) in PLAN_BUILDERS)
+    ]
+    if len(candidates) == 1:
+        return candidates[0]
+    from .costmodel import CostModel, plan_features
+
+    if model is None:
+        model = CostModel.load()
+    costs = {
+        a: model.predict(plan_features(cfg, kind, n_elems, group_size,
+                                       (G, N), a))
+        for a in candidates
+    }
+    return min(candidates, key=lambda a: costs[a])

@@ -137,21 +137,35 @@ class OcclConfig:
 
     # --- collective algorithms (composite layer, core/algos.py) ---------
     algo: str = "ring"              # default algorithm for register():
-                                    # "ring" (flat single-communicator),
-                                    # "two_level" (hierarchical chain:
-                                    # intra-group reduce-scatter ->
-                                    # inter-group all-reduce -> intra-group
-                                    # all-gather over a G x N rank grid),
-                                    # or "auto" (size-based selection).
+                                    # "ring" (flat single-communicator);
+                                    # the composite plans "two_level",
+                                    # "torus", "hybrid" (ALL_REDUCE) and
+                                    # "tree" (BROADCAST/REDUCE) over a
+                                    # G x N rank grid; or "auto" — rank the
+                                    # registered candidate plans with the
+                                    # measured α-β-γ cost model
+                                    # (core/costmodel.py, calibrated by
+                                    # benchmarks/calibrate.py into
+                                    # BENCH_calibration.json).
                                     # register(algo=...) overrides per
                                     # collective.
-    two_level_threshold: int = 1024 # "auto" payload threshold (elements):
-                                    # flat ring below, two-level at/above —
-                                    # with slice bursts the superstep cost
-                                    # is latency-term dominated (2R - 1 ring
-                                    # steps vs 2N + 2G - 1 for the chain),
-                                    # and the larger payload amortizes the
-                                    # chain's two stage hand-offs.
+
+    # --- lane bandwidth skew (sim backend physical model) ---------------
+    # Model a hierarchical fabric: the n_ranks are split into
+    # ``bandwidth_groups`` equal islands of consecutive ranks (NVLink
+    # boxes / hosts); a lane whose ring permutation has ANY hop crossing
+    # an island boundary is an INTER lane, the rest are INTRA lanes.  A
+    # lane moves at most its class cap slices per superstep (0 = the full
+    # burst_slices; caps clamp to [1, burst_slices]).  bandwidth_groups=0
+    # disables the model — every lane keeps the uniform burst, and the
+    # scheduler math is value-identical to the unskewed path.  This is
+    # what lets the sim backend measure WALL-CLOCK algorithm crossovers
+    # (flat rings cross islands every ~N hops; hierarchical plans confine
+    # the bulk to intra lanes), feeding the algos bench section and the
+    # cost-model calibration.
+    bandwidth_groups: int = 0
+    intra_burst_cap: int = 0        # islands-local lanes (0 = burst_slices)
+    inter_burst_cap: int = 0        # island-crossing lanes (0 = burst_slices)
 
     # --- numerics / kernels ---------------------------------------------
     dtype: str = "float32"          # heap / wire dtype
@@ -168,6 +182,19 @@ class OcclConfig:
                                     # False restores the separate
                                     # header/payload ppermute pair (escape
                                     # hatch; bit-identical results).
+    cond_chain_relink: bool = True  # mesh backend: wrap the chain-relink
+                                    # gather/scatter in a lax.cond on "any
+                                    # chained stage completed this
+                                    # superstep", so workloads that
+                                    # registered chains but complete none
+                                    # in a given superstep skip the relink
+                                    # memory traffic (it fires on the rare
+                                    # completion supersteps only).  Sim
+                                    # backend ignores it: under vmap a
+                                    # lax.cond degenerates to a select and
+                                    # both branches execute anyway.  False
+                                    # restores the unconditional scatter
+                                    # (escape hatch; bit-identical results).
     vectorized_inbox: bool = True   # apply_inbox: flatten the (coll, slot)
                                     # scatter grid through a precomputed
                                     # [L, B] burst-offset table into ONE
@@ -183,8 +210,14 @@ class OcclConfig:
         assert self.slice_elems >= 1
         assert self.burst_slices >= 1
         assert self.spin_base >= self.spin_min
-        assert self.algo in ("ring", "two_level", "auto"), self.algo
-        assert self.two_level_threshold >= 0
+        assert self.algo in ("ring", "two_level", "torus", "hybrid",
+                             "tree", "auto"), self.algo
+        assert self.bandwidth_groups >= 0
+        assert self.intra_burst_cap >= 0 and self.inter_burst_cap >= 0
+        if self.bandwidth_groups > 1:
+            assert self.n_ranks % self.bandwidth_groups == 0, (
+                f"bandwidth_groups={self.bandwidth_groups} must divide "
+                f"n_ranks={self.n_ranks} (equal islands)")
         if self.auto_conn_depth and self.conn_depth < 3 * self.burst_slices:
             # Credit round trip (commit, consume, credit-return) is ~3
             # supersteps; K >= 3B keeps the ring from saturating.

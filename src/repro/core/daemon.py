@@ -41,6 +41,7 @@ from .scheduler import (
     LocalTables,
     Mailbox,
     SharedTables,
+    chain_relink_fired,
     rank_superstep,
     rebase_arrivals,
 )
@@ -67,6 +68,7 @@ def shared_tables(t: StaticTables) -> SharedTables:
         chain_mask=jnp.asarray(t.chain_mask),
         chain_src=jnp.asarray(t.chain_src),
         chain_dst=jnp.asarray(t.chain_dst),
+        lane_caps=jnp.asarray(t.lane_caps),
     )
 
 
@@ -76,6 +78,8 @@ def local_tables(t: StaticTables) -> LocalTables:
         member=jnp.asarray(t.member),
         prog_kind=jnp.asarray(t.prog_kind),
         prog_chunk=jnp.asarray(t.prog_chunk),
+        chain_next=jnp.asarray(t.chain_next),
+        chain_tail_r=jnp.asarray(t.chain_tail_r),
     )
 
 
@@ -198,30 +202,115 @@ def _drained(st: DaemonState) -> jnp.ndarray:
             & ~jnp.any(st.inflight))
 
 
-# One compiled daemon per OcclConfig (tables are ARGUMENTS, so different
-# registrations / test instances with the same config share the binary).
+def _relink_edges(t: StaticTables) -> tuple:
+    """Static per-edge relink descriptors for the sim daemon.
+
+    Each chain edge c -> next_coll[c] rewrites the successor's contiguous
+    input span ``heap_in[dst_lo : dst_lo + span]`` from a build-time-known
+    gather of ``heap_out`` (tables._build_chain_links).  Because every
+    offset is static, the sim daemon can apply the hand-off as a cheap
+    static-slice + ``where``-select per superstep — no dynamic scatter, no
+    cond over the heap.  When the source map is itself one contiguous run
+    (the common chunk hand-off), the gather degrades to a static slice.
+
+    Returns a hashable tuple of
+    ``(c, dst_lo, span, ('slice', src_lo, n) | ('gather', idx_bytes))``
+    entries (part of the jit-cache key alongside the config).
+    """
+    edges = []
+    C = t.chain_dst.shape[0]
+    for c in range(C):
+        dst = t.chain_dst[c]
+        valid = dst < (1 << 30)
+        if not valid.any():
+            continue
+        span = int(valid.sum())
+        dst_lo = int(dst[0])
+        src = t.chain_src[c, :span]
+        live = src >= 0
+        n = int(live.sum())
+        contiguous = (n > 0 and bool(live[:n].all())
+                      and np.array_equal(src[:n],
+                                         src[0] + np.arange(n, dtype=src.dtype)))
+        if contiguous:
+            desc = ("slice", int(src[0]), n)
+        else:
+            desc = ("gather", src.tobytes())
+        edges.append((c, dst_lo, span, desc))
+    return tuple(edges)
+
+
+# One compiled daemon per (OcclConfig, relink edges) (tables are
+# ARGUMENTS, so different registrations / test instances with the same
+# config share the binary; the static chain-edge descriptors are part of
+# the key because they shape the in-body relink slices).
 _SIM_JIT_CACHE: dict = {}
 
 
-def _sim_daemon_jit(cfg: OcclConfig) -> Callable:
-    if cfg in _SIM_JIT_CACHE:
-        return _SIM_JIT_CACHE[cfg]
+def _sim_daemon_jit(cfg: OcclConfig, edges: tuple = ()) -> Callable:
+    key = (cfg, edges)
+    if key in _SIM_JIT_CACHE:
+        return _SIM_JIT_CACHE[key]
 
     def vstep(sh, lt, st, inbox):
         return jax.vmap(
-            functools.partial(rank_superstep, cfg, sh),
+            functools.partial(rank_superstep, cfg, sh, defer_relink=True),
             in_axes=(0, 0, 0), out_axes=(0, 0))(lt, st, inbox)
 
     def cond(carry):
         st = carry[0]
         return st.global_live[0]
 
+    # Unpack the static edge descriptors once (trace-time constants).
+    edge_plan = []
+    for c, dst_lo, span, desc in edges:
+        if desc[0] == "slice":
+            edge_plan.append((c, dst_lo, span, desc[1], desc[2], None))
+        else:
+            idx = np.frombuffer(desc[1], dtype=np.int32).copy()
+            edge_plan.append((c, dst_lo, span, None, None,
+                              (jnp.asarray(np.maximum(idx, 0)),
+                               jnp.asarray(idx >= 0))))
+
     @jax.jit
     def daemon(sh: SharedTables, lt: LocalTables, fwd_src, rev_src,
                st: DaemonState) -> DaemonState:
         def body(carry):
             st, inbox = carry
+            prev_sc = st.stage_completions
             st, outbox = vstep(sh, lt, st, inbox)
+            # Deferred chain relink, applied in-body from purely STATIC
+            # slices: under the per-rank vmap a cond predicate is batched
+            # (lowers to a select paying the O(M) hand-off gather every
+            # superstep), and a scalar-predicate cond touching the heap
+            # in this hot body costs a full heap copy per superstep (XLA
+            # loses carry aliasing at the loop back-edge).  Instead each
+            # chain edge rewrites the successor's contiguous input span
+            # with a static-slice + ``where``-select keyed on "did this
+            # rank complete the predecessor this superstep" — a few KB of
+            # vectorized traffic per superstep, no scatter, no cond.
+            if edge_plan:
+                fired = jax.vmap(chain_relink_fired,
+                                 in_axes=(None, 0, 0, 0))(
+                    sh, lt, prev_sc, st.stage_completions)
+                heap_in, heap_out = st.heap_in, st.heap_out
+                for c, dst_lo, span, src_lo, n, gather in edge_plan:
+                    if gather is None:
+                        vals = heap_out[:, src_lo:src_lo + n]
+                        if n < span:            # zero-filled pad tail
+                            vals = jnp.concatenate(
+                                [vals, jnp.zeros((vals.shape[0],
+                                                  span - n), vals.dtype)],
+                                axis=1)
+                    else:
+                        idx, live = gather
+                        vals = jnp.where(live[None, :],
+                                         heap_out[:, idx], 0)
+                    cur = heap_in[:, dst_lo:dst_lo + span]
+                    new = jnp.where(fired[:, c][:, None],
+                                    vals.astype(cur.dtype), cur)
+                    heap_in = heap_in.at[:, dst_lo:dst_lo + span].set(new)
+                st = st._replace(heap_in=heap_in)
             inbox = _sim_exchange(fwd_src, rev_src, outbox)
             all_drained = jnp.all(jax.vmap(_drained)(st))
             quit_now = jnp.min(st.no_prog) >= cfg.quit_threshold
@@ -269,7 +358,7 @@ def build_sim_daemon(cfg: OcclConfig, t: StaticTables) -> Callable:
     lt = local_tables(t)
     fwd_src = jnp.asarray(t.fwd_src)
     rev_src = jnp.asarray(t.rev_src)
-    fn = _sim_daemon_jit(cfg)
+    fn = _sim_daemon_jit(cfg, _relink_edges(t))
     return lambda st: fn(sh, lt, fwd_src, rev_src, st)
 
 
@@ -380,7 +469,8 @@ def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
 
         def body(carry):
             st, inbox = carry
-            st, outbox = rank_superstep(cfg, sh, lt, st, inbox)
+            st, outbox = rank_superstep(cfg, sh, lt, st, inbox,
+                                        cond_relink=cfg.cond_chain_relink)
             inbox = _mesh_exchange(t, outbox, axis_name)
             # Fabric-wide consensus on liveness (computed in the body so the
             # cond stays collective-free).

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .algos import default_hierarchy, plan_two_level, select_algo
+from .algos import build_plan, default_hierarchy, select_algo
 from .config import OcclConfig, ReduceOp
 from .daemon import build_sim_daemon
 from .primitives import (
@@ -74,13 +74,18 @@ class ConnDepthWarning(UserWarning):
 
 
 class OcclRuntime:
-    def __init__(self, cfg: OcclConfig, mesh=None, mesh_axis: str = "rank"):
+    def __init__(self, cfg: OcclConfig, mesh=None, mesh_axis: str = "rank",
+                 cost_model=None):
         """mesh=None: sim backend (vmapped ranks on one device).
         mesh: a jax Mesh whose ``mesh_axis`` has cfg.n_ranks devices —
-        the shard_map backend (ppermute connector fabric)."""
+        the shard_map backend (ppermute connector fabric).
+        cost_model: a costmodel.CostModel used by ``algo="auto"``
+        registration; None loads the persisted calibration lazily
+        (BENCH_calibration.json / REPRO_CALIBRATION)."""
         self.cfg = cfg
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        self._cost_model = cost_model
         self.comms: list[Communicator] = []
         self.specs: list[CollectiveSpec] = []
         # Composite-collective bookkeeping: a logical collective registered
@@ -93,6 +98,19 @@ class OcclRuntime:
         self._tail_of: dict[int, int] = {}
         self._chain_of: dict[int, list[int]] = {}
         self._derived_comms: dict = {}
+        # Partial-membership chains (tree / hybrid plans): a rank that is
+        # not a member of every stage SUBMITS at its first participating
+        # stage (`_entry_of[head][rank]`) and COMPLETES at its last
+        # (`_rank_tail[head][rank]`) — the daemon's per-rank chain maps
+        # (tables.chain_next / chain_tail_r) advance it stage-to-stage in
+        # between.  `_logical_members` keeps the logical group of each
+        # composite head (the head SPEC's comm is only stage 0's derived
+        # sub-communicator); `_algo_of` records the lowered algorithm per
+        # logical collective for stats()/auto observability.
+        self._entry_of: dict[int, dict[int, int]] = {}
+        self._rank_tail: dict[int, dict[int, int]] = {}
+        self._logical_members: dict[int, tuple] = {}
+        self._algo_of: dict[int, str] = {}
         # Separate allocation arenas for input and output buffers: in_off
         # indexes heap_in and out_off indexes heap_out — two DIFFERENT
         # arrays — so a shared pointer only interleaved dead holes into
@@ -159,28 +177,31 @@ class OcclRuntime:
         """Register a collective; returns its unique id (paper Sec. 3.1.1).
 
         ``algo`` selects the lowering (default ``cfg.algo``): ``"ring"``
-        is the flat single-communicator ring; ``"two_level"`` lowers an
-        all-reduce over a ``G x N`` rank grid (``hierarchy``; the most
-        square factorization when omitted) into a device-chained
-        intra-group reduce-scatter -> inter-group all-reduce ->
-        intra-group all-gather; ``"auto"`` picks by payload size
-        (``cfg.two_level_threshold``).  For a chain the returned id is the
-        logical handle: submit/stage payloads against it, read results
-        from it (the runtime routes reads to the chain tail), and its CQ
-        callback fires ONCE when the whole chain completes.
+        is the flat single-communicator ring; the composite plans
+        (algos.PLAN_BUILDERS — ``"two_level"``/``"torus"``/``"hybrid"``
+        for ALL_REDUCE, ``"tree"`` for BROADCAST/REDUCE) lower the
+        collective over a ``G x N`` rank grid (``hierarchy``; the most
+        square factorization when omitted) into a device-chained stage
+        sequence; ``"auto"`` ranks the registered candidates with the
+        measured α-β-γ cost model (core/costmodel.py — the calibration
+        persisted by benchmarks/calibrate.py, or the runtime's injected
+        ``cost_model``).  For a chain the returned id is the logical
+        handle: submit/stage payloads against it, read results from it
+        (the runtime routes reads to the chain tail), and its CQ callback
+        fires ONCE when the whole chain completes on the callback's rank.
         ``inherit_prio`` lets device-enqueued successor stages inherit the
         submission's live priority (the chain competes as one unit).
         """
         if self._tables is not None:
             raise RegistrationClosed("register collectives before first launch")
         algo = select_algo(self.cfg.algo if algo is None else algo,
-                           kind, n_elems, len(comm.members), hierarchy,
-                           self.cfg.two_level_threshold)
-        if algo == "two_level":
-            return self._register_two_level(kind, comm, n_elems, op,
-                                            hierarchy, inherit_prio)
-        assert algo == "ring", f"unknown algorithm {algo!r}"
-        return self._register_ring(kind, comm, n_elems, op, root)
+                           kind, n_elems, len(comm.members),
+                           hierarchy=hierarchy, cfg=self.cfg,
+                           model=self._cost_model)
+        if algo == "ring":
+            return self._register_ring(kind, comm, n_elems, op, root)
+        return self._register_composite(algo, kind, comm, n_elems, op,
+                                        root, hierarchy, inherit_prio)
 
     def _register_ring(self, kind: CollKind, comm: Communicator,
                        n_elems: int, op: ReduceOp = ReduceOp.SUM,
@@ -209,23 +230,29 @@ class OcclRuntime:
         self.specs.append(spec)
         return cid
 
-    def _register_two_level(self, kind: CollKind, comm: Communicator,
-                            n_elems: int, op: ReduceOp,
-                            hierarchy: Optional[tuple],
+    def _register_composite(self, algo: str, kind: CollKind,
+                            comm: Communicator, n_elems: int, op: ReduceOp,
+                            root: int, hierarchy: Optional[tuple],
                             inherit_prio: bool) -> int:
-        """Lower to the two-level chain (algos.plan_two_level) and register
-        its stages back-to-back with successor links.  Derived heap regions
-        for the chain intermediates come from the same split in/out arenas
-        as flat collectives; lane budgets are validated as each derived
-        sub-communicator partition claims a lane, and each stage's
-        ``derive_slicing`` enforces the per-round connector cap for the
-        widest stage's ring."""
+        """Lower ``algo`` to its stage chain (algos.build_plan) and
+        register the stages back-to-back with successor links.  Derived
+        heap regions for the chain intermediates come from the same split
+        in/out arenas as flat collectives; lane budgets are validated as
+        each derived sub-communicator partition claims a lane, and each
+        stage's ``derive_slicing`` enforces the per-round connector cap
+        for the widest stage's ring.
+
+        Tree/hybrid plans have PARTIAL-membership stages (leader-only
+        rings): per-rank entry/tail maps are recorded here so submit()
+        can route each rank's SQE to its first participating stage and
+        key its completion on its last — on device, tables.chain_next /
+        chain_tail_r advance each rank through exactly its own stages."""
         if comm.ring_size is not None and comm.ring_size != len(comm.members):
-            raise ValueError("two_level lowering expects a flat logical "
+            raise ValueError(f"{algo} lowering expects a flat logical "
                              "communicator, not an already-partitioned one")
         hier = (tuple(hierarchy) if hierarchy is not None
                 else default_hierarchy(len(comm.members)))
-        plan = plan_two_level(kind, comm.members, hier, n_elems)
+        plan = build_plan(algo, kind, comm.members, hier, n_elems, root)
         head = len(self.specs)
         n_stages = len(plan.stages)
         assert head + n_stages <= self.cfg.max_colls, (
@@ -240,6 +267,23 @@ class OcclRuntime:
         tail = head + n_stages - 1
         self._tail_of[head] = tail
         self._chain_of[head] = list(range(head, tail + 1))
+        self._logical_members[head] = tuple(comm.members)
+        self._algo_of[head] = algo
+        entry: dict[int, int] = {}
+        rtail: dict[int, int] = {}
+        for r in comm.members:
+            mine = [head + k for k, stage in enumerate(plan.stages)
+                    if r in stage.members]
+            assert mine, (f"{algo} plan leaves rank {r} out of every "
+                          "stage — logical members must all participate")
+            if mine[0] != head:
+                entry[r] = mine[0]
+            if mine[-1] != tail:
+                rtail[r] = mine[-1]
+        if entry:
+            self._entry_of[head] = entry
+        if rtail:
+            self._rank_tail[head] = rtail
         return head
 
     def _derived_communicator(self, members, ring_size: int) -> Communicator:
@@ -443,8 +487,12 @@ class OcclRuntime:
         For a composite (chained) collective the id is the logical
         handle: the payload stages into the chain HEAD's input region,
         ``out_off`` overrides the chain TAIL's output region, and the
-        callback fires once — when the tail completes — with the logical
-        id the caller submitted."""
+        callback fires once — when this rank's last participating stage
+        completes — with the logical id the caller submitted.  On a
+        partial-membership chain (tree/hybrid plans) the SQE itself is
+        routed to the rank's ENTRY stage: a rank skipping the head would
+        otherwise fetch a stage it is not a member of and stall the
+        chain forever."""
         self._ensure_built()
         in_off = self._resolve_in_off(coll_id, in_off)
         out_off = self._resolve_out_off(coll_id, out_off)
@@ -456,15 +504,24 @@ class OcclRuntime:
             # the mutation in.
             self.queues.stage(rank, coll_id,
                               self._staging.snapshot(coll_id, data), in_off)
-        tcid = self._out_cid(coll_id)
+        entry = self._entry_of.get(coll_id, {}).get(rank, coll_id)
+        # This rank's completion endpoint (CQE source stage): its last
+        # participating stage — the logical tail except on chains that
+        # drop the rank early (e.g. tree-reduce non-leaders).
+        tcid = self._rank_tail.get(coll_id, {}).get(
+            rank, self._out_cid(coll_id))
         cb = callback
         if callback is not None and tcid != coll_id:
-            # CQEs of a chain are emitted by the TAIL; surface the
-            # LOGICAL id to the user callback.
+            # CQEs of a chain are emitted by the rank's tail stage;
+            # surface the LOGICAL id to the user callback.
             def cb(r, _c, _cb=callback, _lc=coll_id):
                 _cb(r, _lc)
-        self.queues.submit(rank, SQE(coll_id=coll_id, prio=prio,
-                                     in_off=in_off, out_off=out_off,
+        # A non-head entry stage never reads the logical input (broadcast
+        # non-roots), so the head-resolved in_off override must not leak
+        # into its fetch — the entry keeps its registered default.
+        sqe_in = in_off if entry == coll_id else -1
+        self.queues.submit(rank, SQE(coll_id=entry, prio=prio,
+                                     in_off=sqe_in, out_off=out_off,
                                      callback=cb),
                            cb_coll=tcid)
 
@@ -478,12 +535,13 @@ class OcclRuntime:
         per-rank priorities, payloads, completion callbacks and dynamic
         buffer offsets without falling back to a hand-rolled submit loop.
         """
-        spec = self._spec(coll_id)
+        members = self._logical_members.get(
+            coll_id, self._spec(coll_id).comm.members)
 
         def pick(v, r, default):
             return v.get(r, default) if isinstance(v, dict) else v
 
-        for r in spec.comm.members:
+        for r in members:
             self.submit(r, coll_id,
                         prio=pick(prio, r, 0),
                         data=pick(data, r, None),
@@ -563,6 +621,12 @@ class OcclRuntime:
             # head id to its stage ids so callers can index the matrix.
             "stage_completions": np.asarray(st.stage_completions),
             "chains": dict(self._chain_of),
+            # Lowered algorithm per logical collective (composite heads
+            # only; flat registrations are implicitly "ring") and the
+            # per-lane burst caps the bandwidth-skew model assigned —
+            # what auto-selection observability and the algos bench read.
+            "algos": dict(self._algo_of),
+            "lane_caps": np.asarray(self._tables.lane_caps),
             "supersteps": np.asarray(st.supersteps),      # cumulative epoch
                                                           # clock (never
                                                           # reset)

@@ -122,6 +122,10 @@ class SharedTables(NamedTuple):
     kind: jnp.ndarray         # [C]
     op: jnp.ndarray           # [C]
     lane: jnp.ndarray         # [C]
+    lane_caps: jnp.ndarray    # [L] — per-lane slice burst cap (uniform
+                              #   burst_slices unless the bandwidth-skew
+                              #   model classifies the lane; <= B always,
+                              #   so mailbox payload width is unchanged)
     n_steps: jnp.ndarray      # [C]
     n_slices: jnp.ndarray     # [C]
     n_rounds: jnp.ndarray     # [C]
@@ -147,6 +151,13 @@ class LocalTables(NamedTuple):
     member: jnp.ndarray       # [C] bool
     prog_kind: jnp.ndarray    # [C, S]
     prog_chunk: jnp.ndarray   # [C, S]
+    # Per-rank composite-chain maps (tables._build_rank_chain_maps): a
+    # chain stage may cover only a subset of the logical members, so each
+    # rank advances to ITS next participating stage and completes
+    # logically at ITS last one.  Equal to the shared next_coll /
+    # chain_tail rows for full-membership chains; -1 / self for flat.
+    chain_next: jnp.ndarray   # [C] — rank's successor stage (-1 = tail)
+    chain_tail_r: jnp.ndarray # [C] — rank's chain tail (self for flat)
 
 
 class Mailbox(NamedTuple):
@@ -318,12 +329,17 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     qlen = jnp.sum(st.tq_active).astype(jnp.int32)
     one = jnp.where(ok, 1, 0)
     # Per-SQE out_off overrides resolve END-TO-END: the override (or the
-    # tail's registered default) lands on the chain TAIL — the logical
-    # output endpoint — while a chained head keeps its registered
+    # tail's registered default) lands on THIS RANK'S chain tail — its
+    # logical output endpoint — while a chained head keeps its registered
     # intermediate output region.  Flat collectives have tail == c, so
     # the second write is a no-op and the behavior is exactly the seed's.
-    tail = shared.chain_tail[c]
-    resolved_out = jnp.where(st.sq_out[slot] >= 0, st.sq_out[slot],
+    # On a partial-membership chain a rank whose own tail is NOT the
+    # logical tail (e.g. tree-reduce non-leaders) ignores the override:
+    # it was sized for the logical endpoint's span, and this rank's
+    # output is not part of the logical result.
+    tail = local.chain_tail_r[c]
+    use_ovr = (st.sq_out[slot] >= 0) & (tail == shared.chain_tail[c])
+    resolved_out = jnp.where(use_ovr, st.sq_out[slot],
                              shared.base_out_off[tail])
     out_off = st.out_off.at[tail].set(
         jnp.where(ok, resolved_out, st.out_off[tail]))
@@ -355,10 +371,24 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
 
 
 def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
-               local: LocalTables
+               local: LocalTables, cond_relink: bool = False,
+               defer_relink: bool = False
                ) -> tuple[DaemonState, jnp.ndarray, Mailbox]:
     """Phase C for ALL lanes: two-phase-blocking selection + one credit-gated
     slice burst per lane, fully vectorized over the lane axis.
+
+    ``cond_relink`` wraps the chain-relink scatter in a ``lax.cond`` on
+    "any chained stage completed this superstep" (mesh backend; each
+    device's predicate is a scalar, so the branch is real and chain-free
+    supersteps skip the gather entirely).
+
+    ``defer_relink`` skips the in-step relink altogether: the caller is
+    responsible for applying it after the step from the
+    ``stage_completions`` delta (sim backend — under vmap the per-rank
+    cond predicate is batched and would lower to a select that executes
+    the O(M)-element gather EVERY superstep; the sim driver instead
+    reduces the predicate over ranks outside the vmap, where the cond
+    stays a real branch).
 
     Returns (state, moved_any, outbox).
     """
@@ -420,7 +450,12 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     nsl = shared.n_slices[c]
     recv_avail = st.head_mirror[c] - st.tail[c]
     send_free = K - (st.head[c] - st.tail_mirror[c])
-    quota = P.burst_quota(B, nsl - sl, recv_avail, send_free,
+    # Per-lane burst width: the uniform cfg.burst_slices unless the
+    # bandwidth-skew model capped this lane's class (lane_caps <= B, so
+    # mailbox geometry is untouched; with the model off this is a [L]
+    # array of B and every value below matches the scalar-B math).
+    Bl = shared.lane_caps                                   # [L]
+    quota = P.burst_quota(Bl, nsl - sl, recv_avail, send_free,
                           needs_recv, needs_send)
     gate = valid & (prim != Prim.NULL) & (quota > 0)
     n = jnp.where(gate, quota, 0)                           # [L] burst size
@@ -428,7 +463,7 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     # burst, capped by the primitive step) minus the slices the credit
     # gate granted, floored at one so a stalled B = 1 superstep advances
     # spin by exactly 1 — bit-identical to the seed superstep counting.
-    want = jnp.minimum(jnp.int32(B), jnp.maximum(nsl - sl, 1))
+    want = jnp.minimum(Bl, jnp.maximum(nsl - sl, 1))
     denied = jnp.maximum(want - n, 1)                       # [L] denied
     # Queue-length-conditional stall weight: preempting a SOLO collective
     # (no other eligible collective queued on its lane) frees nothing, so
@@ -556,7 +591,12 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     # per launch rotate through the buffer instead of silently overwriting
     # the last CQE (host reconciliation counts completions exactly via the
     # cumulative `completed` matrix, sqcq.HostQueues.reconcile).
-    succ = shared.next_coll[c]                              # [L]
+    # Successors are PER RANK (local.chain_next): on a partial-membership
+    # chain a rank advances to its own next participating stage (skipping
+    # stages it is not a member of) and completes logically at its own
+    # tail.  For full-membership chains chain_next == next_coll row-wise
+    # and this is exactly the global-successor semantics.
+    succ = local.chain_next[c]                              # [L]
     succ_c = jnp.clip(succ, 0, C - 1)
     chain_adv = coll_done & (succ >= 0)                     # enqueue next
     logical_done = coll_done & (succ < 0)                   # tail or flat
@@ -575,10 +615,10 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     sc = jnp.where(chain_adv, succ_c, C)                    # drop-gated tgt
     succ_prio = jnp.where(shared.chain_prio_inherit[succ_c],
                           st.prio[c], 0)
-    # Intermediate successors run at their registered output region; a
-    # TAIL successor keeps the out_off pre-resolved at head fetch (the
-    # per-SQE override's logical endpoint).
-    sc_mid = jnp.where(chain_adv & (shared.next_coll[succ_c] >= 0),
+    # Intermediate successors run at their registered output region; the
+    # rank's TAIL successor keeps the out_off pre-resolved at head fetch
+    # (the per-SQE override's logical endpoint).
+    sc_mid = jnp.where(chain_adv & (local.chain_next[succ_c] >= 0),
                        succ_c, C)
     st = st._replace(
         tq_active=st.tq_active.at[cd].set(False, mode="drop")
@@ -608,15 +648,33 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     # heap_in from the predecessor's just-finalized heap_out region via
     # the registration-time composed stage maps (pads zero-filled).  The
     # gather/scatter pair is only TRACED when the registration actually
-    # contains chains (M > 0) — chain-free daemons pay nothing.
-    if shared.chain_src.shape[1] > 0:
-        src = shared.chain_src[c]                           # [L, M]
-        vals = jnp.where(src >= 0, st.heap_out[jnp.maximum(src, 0)],
-                         0).astype(st.heap_in.dtype)
-        dstg = jnp.where(chain_adv[:, None], shared.chain_dst[c],
-                         jnp.int32(1 << 30))
-        st = st._replace(
-            heap_in=st.heap_in.at[dstg].set(vals, mode="drop"))
+    # contains chains (M > 0) — chain-free daemons pay nothing.  The
+    # relink map of row c describes the GLOBAL edge c -> next_coll[c], so
+    # it fires only when this rank's successor IS that stage: a rank
+    # skipping intermediate stages (partial membership) has nothing to
+    # hand off — its skipped successor's input is produced elsewhere or
+    # never read (broadcast non-roots).
+    if shared.chain_src.shape[1] > 0 and not defer_relink:
+        relink_adv = chain_adv & (succ == shared.next_coll[c])
+        heap_out = st.heap_out
+
+        def _relink(heap_in):
+            src = shared.chain_src[c]                       # [L, M]
+            vals = jnp.where(src >= 0, heap_out[jnp.maximum(src, 0)],
+                             0).astype(heap_in.dtype)
+            dstg = jnp.where(relink_adv[:, None], shared.chain_dst[c],
+                             jnp.int32(1 << 30))
+            return heap_in.at[dstg].set(vals, mode="drop")
+
+        if cond_relink:
+            # Mesh backend: supersteps that complete no chained stage
+            # skip the relink gather/scatter entirely (a real branch on
+            # a device; under vmap this would degenerate to a select).
+            heap_in = jax.lax.cond(jnp.any(relink_adv), _relink,
+                                   lambda h: h, st.heap_in)
+        else:
+            heap_in = _relink(st.heap_in)
+        st = st._replace(heap_in=heap_in)
 
     outbox = Mailbox(
         fwd_count=n_send,
@@ -628,13 +686,32 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     return st, jnp.any(gate), outbox
 
 
+def chain_relink_fired(shared: SharedTables, local: LocalTables,
+                       prev_stage_completions: jnp.ndarray,
+                       stage_completions: jnp.ndarray) -> jnp.ndarray:
+    """[C] mask of chained stages whose hand-off relink must fire on this
+    rank this superstep, recovered from the ``stage_completions`` delta.
+
+    Matches the in-step ``relink_adv`` gating of :func:`lanes_step`: the
+    stage completed here this superstep AND this rank's chain successor is
+    the stage's GLOBAL next stage (a partial-membership rank that skips the
+    successor has nothing to hand off — its skipped successor's input is
+    produced elsewhere or never read)."""
+    return ((stage_completions > prev_stage_completions)
+            & (local.chain_next == shared.next_coll)
+            & (shared.next_coll >= 0))
+
+
 def rank_superstep(cfg: OcclConfig, shared: SharedTables, local: LocalTables,
-                   st: DaemonState, inbox: Mailbox
+                   st: DaemonState, inbox: Mailbox,
+                   cond_relink: bool = False, defer_relink: bool = False
                    ) -> tuple[DaemonState, Mailbox]:
     """One full superstep for one rank."""
     st = apply_inbox(cfg, st, inbox)
     st, fetched = fetch_sqe(cfg, st, shared, local)
-    st, moved_any, outbox = lanes_step(cfg, st, shared, local)
+    st, moved_any, outbox = lanes_step(cfg, st, shared, local,
+                                       cond_relink=cond_relink,
+                                       defer_relink=defer_relink)
 
     progress = moved_any | fetched
     st = st._replace(

@@ -49,6 +49,13 @@ class StaticTables:
     prog_chunk: np.ndarray    # [Rk, C, S] int32
 
     # per-lane ring permutations -----------------------------------------
+    lane_caps: np.ndarray     # [L] int32 — max slices a lane moves per
+                              #   superstep: burst_slices uniformly, unless
+                              #   the bandwidth-skew model
+                              #   (cfg.bandwidth_groups) classifies the
+                              #   lane's rings as island-crossing (inter)
+                              #   or island-local (intra) and caps each
+                              #   class (clamped to [1, burst_slices])
     fwd_src: np.ndarray       # [L, Rk] int32 — fwd msg arriving at rank r
                               #   was sent by fwd_src[l, r]
     rev_src: np.ndarray       # [L, Rk] int32 — reverse (credit) exchange
@@ -109,6 +116,17 @@ class StaticTables:
     chain_src: np.ndarray     # [C, M] i32 — absolute heap_out offsets, -1=0
     chain_dst: np.ndarray     # [C, M] i32 — absolute heap_in offsets
                               #   (out-of-range sentinel on unused rows)
+    # PER-RANK chain maps: composite stages may cover only a subset of the
+    # logical members (tree/hybrid inter stages run on the group leaders),
+    # so each rank walks its OWN successor chain — the next stage it
+    # participates in — and emits its logical CQE at its own last
+    # participating stage.  Full-membership chains (two_level/torus)
+    # reduce to the global next_coll/chain_tail row-for-row.
+    chain_next: np.ndarray    # [Rk, C] i32 — rank's next participating
+                              #   stage after c (-1: c is the rank's tail)
+    chain_tail_r: np.ndarray  # [Rk, C] i32 — rank's last participating
+                              #   stage of c's chain (self for flat colls
+                              #   and for non-members)
 
     max_steps: int
 
@@ -156,6 +174,7 @@ def build_tables(
         member=np.zeros((Rk, C), bool),
         prog_kind=np.full((Rk, C, S), int(Prim.NULL), np.int32),
         prog_chunk=np.zeros((Rk, C, S), np.int32),
+        lane_caps=np.full(L, cfg.burst_slices, np.int32),
         fwd_src=np.tile(np.arange(Rk, dtype=np.int32), (L, 1)),
         rev_src=np.tile(np.arange(Rk, dtype=np.int32), (L, 1)),
         fwd_perm_pairs=[[] for _ in range(L)],
@@ -177,10 +196,13 @@ def build_tables(
         chain_mask=np.eye(C, dtype=bool),
         chain_src=np.zeros((C, 0), np.int32),
         chain_dst=np.zeros((C, 0), np.int32),
+        chain_next=np.full((Rk, C), -1, np.int32),
+        chain_tail_r=np.tile(np.arange(C, dtype=np.int32), (Rk, 1)),
         max_steps=S,
     )
 
     for comm in comms:
+        t.lane_caps[comm.lane] = _lane_cap(cfg, comm)
         fwd = comm.fwd_perm(Rk)   # perm[src] = dst
         rev = comm.rev_perm(Rk)
         for src in range(Rk):
@@ -244,7 +266,25 @@ def build_tables(
                 t.prog_kind[rank, c, step] = int(prim)
                 t.prog_chunk[rank, c, step] = chunk
     _build_chain_tables(t, specs)
+    _build_rank_chain_maps(t, specs)
     return t
+
+
+def _lane_cap(cfg: OcclConfig, comm) -> int:
+    """Per-superstep slice cap of a communicator's lane under the
+    bandwidth-skew model: inter (any ring hop crosses an island boundary)
+    vs intra class caps, clamped to [1, burst_slices]; the uniform burst
+    when the model is off or the class cap is 0.  Mirrored for cost
+    prediction by costmodel._lane_cap_for."""
+    B = cfg.burst_slices
+    if cfg.bandwidth_groups <= 1:
+        return B
+    isl = cfg.n_ranks // cfg.bandwidth_groups
+    inter = any(
+        ring[i] // isl != ring[(i + 1) % len(ring)] // isl
+        for ring in comm.rings() for i in range(len(ring)))
+    cap = cfg.inter_burst_cap if inter else cfg.intra_burst_cap
+    return max(1, min(B, cap)) if cap > 0 else B
 
 
 def _build_chain_tables(t: StaticTables, specs: list) -> None:
@@ -299,6 +339,40 @@ def _build_chain_tables(t: StaticTables, specs: list) -> None:
         t.chain_src[c, :span] = src
         t.chain_dst[c, :span] = t.base_in_off[succ] + np.arange(
             span, dtype=np.int32)
+
+
+def _build_rank_chain_maps(t: StaticTables, specs: list) -> None:
+    """Per-rank successor/tail maps for partial-membership chains.
+
+    A stage of a composite plan may cover only a subset of the logical
+    members (tree broadcast's leader ring, hybrid's inter all-reduce), so
+    the global ``next_coll`` chain is specialized per rank:
+    ``chain_next[r, c]`` is the first stage AFTER c (following next_coll)
+    that rank r participates in, and ``chain_tail_r[r, c]`` is r's last
+    participating stage of c's whole chain — where r's logical CQE fires
+    and where its per-SQE out_off override resolves.  For chains whose
+    every stage covers every member both maps equal the global
+    next_coll / chain_tail rows, and flat collectives keep the defaults
+    (-1 / self), so the scheduler's chain-free semantics are unchanged.
+    """
+    by_id = {s.coll_id: s for s in specs}
+    Rk = t.member.shape[0]
+    for s in specs:
+        c = s.coll_id
+        chain = _chain_members(by_id, c)
+        if len(chain) == 1:
+            continue
+        for rank in range(Rk):
+            if not t.member[rank, c]:
+                continue
+            nxt = -1
+            for cand in chain[chain.index(c) + 1:]:
+                if t.member[rank, cand]:
+                    nxt = cand
+                    break
+            t.chain_next[rank, c] = nxt
+            mine = [a for a in chain if t.member[rank, a]]
+            t.chain_tail_r[rank, c] = mine[-1]
 
 
 def _chain_members(by_id: dict, c: int) -> list:

@@ -17,9 +17,10 @@ Covers the acceptance criteria of the composite tentpole:
 import numpy as np
 import pytest
 
-from repro.core import (CollKind, OcclConfig, OcclRuntime, OrderPolicy,
-                        default_hierarchy, plan_two_level, select_algo,
-                        run_static_order)
+from repro.core import (AUTO_CANDIDATES, PLAN_BUILDERS, CollKind, CostModel,
+                        OcclConfig, OcclRuntime, OrderPolicy, ReduceOp,
+                        build_plan, default_hierarchy, plan_features,
+                        plan_two_level, select_algo, run_static_order)
 
 
 def _runtime(R, max_colls=16, max_comms=4, slice_elems=8, conn_depth=6,
@@ -61,26 +62,54 @@ def test_plan_two_level_rejects_bad_grids():
         plan_two_level(CollKind.BROADCAST, range(8), (2, 4), 10)
 
 
-def test_select_algo_threshold():
-    sel = lambda n, **kw: select_algo("auto", CollKind.ALL_REDUCE, n, 16,
-                                      kw.get("hierarchy"), 1024)
-    assert sel(512) == "ring"                  # below the payload threshold
-    assert sel(4096) == "two_level"            # above it
-    assert sel(4096, hierarchy=(4, 4)) == "two_level"
-    # Degenerate grids and non-all-reduce kinds fall back to ring.
-    assert select_algo("auto", CollKind.ALL_REDUCE, 4096, 7, None,
-                       1024) == "ring"
-    assert select_algo("auto", CollKind.BROADCAST, 4096, 16, None,
-                       1024) == "ring"
+def test_plan_registry_contents():
+    """The algorithm zoo registers every (algo, kind) lowering and auto's
+    candidate lists stay consistent with it."""
+    assert ("two_level", CollKind.ALL_REDUCE) in PLAN_BUILDERS
+    assert ("torus", CollKind.ALL_REDUCE) in PLAN_BUILDERS
+    assert ("hybrid", CollKind.ALL_REDUCE) in PLAN_BUILDERS
+    assert ("tree", CollKind.BROADCAST) in PLAN_BUILDERS
+    assert ("tree", CollKind.REDUCE) in PLAN_BUILDERS
+    for kind, cands in AUTO_CANDIDATES.items():
+        assert cands[0] == "ring"
+        for a in cands[1:]:
+            assert (a, kind) in PLAN_BUILDERS
+
+
+def test_select_algo_cost_model():
     # Explicit algorithms pass through untouched.
-    assert select_algo("ring", CollKind.ALL_REDUCE, 1 << 20, 16, None,
-                       1024) == "ring"
-    assert select_algo("two_level", CollKind.ALL_REDUCE, 4, 16, None,
-                       1024) == "two_level"
+    assert select_algo("ring", CollKind.ALL_REDUCE, 1 << 20, 16) == "ring"
+    assert select_algo("torus", CollKind.ALL_REDUCE, 4, 16) == "torus"
+    # Degenerate grids (prime groups) and kinds with no composite
+    # candidate fall back to the flat ring without touching the model.
+    assert select_algo("auto", CollKind.ALL_REDUCE, 4096, 7) == "ring"
+    assert select_algo("auto", CollKind.ALL_GATHER, 4096, 16) == "ring"
+    # A per-stage-overhead-only model always keeps the flat ring: one
+    # stage beats any chain.
+    stagey = CostModel(alpha=0.0, beta=0.0, gamma=1.0)
+    assert select_algo("auto", CollKind.ALL_REDUCE, 1 << 20, 16,
+                       model=stagey) == "ring"
+    assert select_algo("auto", CollKind.BROADCAST, 1 << 20, 16,
+                       model=stagey) == "ring"
+    # A latency-only model under inter-island bandwidth skew must drop
+    # the flat ring at large payloads (its single lane crosses islands,
+    # so EVERY superstep pays the inter cap) and must agree with the
+    # model's own feature argmin.
+    cfg = OcclConfig(n_ranks=16, burst_slices=8, conn_depth=24,
+                     bandwidth_groups=4, inter_burst_cap=2,
+                     max_comms=8, max_colls=8)
+    lat = CostModel(alpha=1.0, beta=0.0, gamma=0.0)
+    pick = select_algo("auto", CollKind.ALL_REDUCE, 1 << 16, 16,
+                       cfg=cfg, model=lat)
+    assert pick != "ring"
+    feats = {a: plan_features(cfg, CollKind.ALL_REDUCE, 1 << 16, 16,
+                              (4, 4), a)
+             for a in AUTO_CANDIDATES[CollKind.ALL_REDUCE]}
+    assert pick == min(feats, key=lambda a: lat.predict(feats[a]))
     # An explicitly passed grid that does not tile the group is a BUG,
     # not a hint: auto must raise, not silently downgrade to ring.
     with pytest.raises(ValueError, match="does not tile"):
-        select_algo("auto", CollKind.ALL_REDUCE, 4096, 16, (4, 5), 1024)
+        select_algo("auto", CollKind.ALL_REDUCE, 4096, 16, (4, 5))
 
 
 def test_logical_communicator_claims_no_lane():
@@ -180,6 +209,102 @@ def test_two_level_matches_numpy_reference(R, hier, n):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("algo", ["torus", "hybrid"])
+@pytest.mark.parametrize("R,hier", [(4, (2, 2)), (8, (2, 4)), (8, (4, 2))])
+@pytest.mark.parametrize("n", [8, 37, 100])
+def test_new_allreduce_algos_match_numpy_reference(algo, R, hier, n):
+    """Every new all-reduce plan is numerically equivalent to the flat
+    ring reference (numpy sum) across grids and ragged payloads."""
+    rt, world = _runtime(R, max_comms=6)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                      algo=algo, hierarchy=hier)
+    rng = np.random.RandomState(n + R)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    rt.submit_all(cid, data={r: xs[r] for r in range(R)})
+    rt.drive()
+    want = np.sum(xs, axis=0)
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("root", [0, 3, 7])
+@pytest.mark.parametrize("n", [8, 37])
+def test_tree_broadcast_matches_reference(root, n):
+    """Tree broadcast (leader ring -> intra rings) delivers the root's
+    payload to every rank, for roots in ANY grid position (the root's
+    group leads the leader stage; its intra position roots every intra
+    ring)."""
+    R, hier = 8, (2, 4)
+    rt, world = _runtime(R, max_comms=6)
+    cid = rt.register(CollKind.BROADCAST, world, n_elems=n, root=root,
+                      algo="tree", hierarchy=hier)
+    rng = np.random.RandomState(root + n)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    rt.submit_all(cid, data={r: xs[r] for r in range(R)})
+    rt.drive()
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid), xs[root],
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("root", [0, 3, 7])
+def test_tree_reduce_matches_reference(root):
+    """Tree reduce (intra reduce -> leader reduce) lands the full sum at
+    the root for any root position."""
+    R, hier, n = 8, (2, 4), 37
+    rt, world = _runtime(R, max_comms=6)
+    cid = rt.register(CollKind.REDUCE, world, n_elems=n, root=root,
+                      algo="tree", hierarchy=hier)
+    rng = np.random.RandomState(root)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    rt.submit_all(cid, data={r: xs[r] for r in range(R)})
+    rt.drive()
+    np.testing.assert_allclose(rt.read_output(root, cid),
+                               np.sum(xs, axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_partial_membership_completion_routing():
+    """Tree-reduce non-leaders participate ONLY in the intra stage: their
+    SQE enters at the head, their CQE fires at the head (their last
+    stage), and the per-rank completion counters land on each rank's own
+    tail — while leaders run the full chain.  Callbacks still surface
+    the logical id on every rank exactly once."""
+    R, hier, n = 8, (2, 4), 24
+    rt, world = _runtime(R, max_comms=6)
+    cid = rt.register(CollKind.REDUCE, world, n_elems=n, root=0,
+                      algo="tree", hierarchy=hier)
+    chain = rt._chain_of[cid]
+    head, tail = chain[0], chain[-1]
+    leaders = set(rt.specs[tail].comm.members)
+    assert 0 in leaders and len(leaders) == 2          # G = 2 leader ring
+    # Entry routing: intra stage includes everyone -> no entry remap;
+    # completion: non-leaders end at the head stage.
+    assert cid not in rt._entry_of
+    assert set(rt._rank_tail[cid]) == set(range(R)) - leaders
+    assert all(t == head for t in rt._rank_tail[cid].values())
+    fired = []
+    xs = [np.full(n, float(r + 1), np.float32) for r in range(R)]
+    rt.submit_all(cid, data={r: xs[r] for r in range(R)},
+                  callback=lambda rk, c: fired.append((rk, c)))
+    rt.drive()
+    assert sorted(fired) == [(r, cid) for r in range(R)]
+    np.testing.assert_allclose(rt.read_output(0, cid), np.sum(xs, axis=0),
+                               rtol=1e-5)
+    st = rt.stats()
+    comp = st["completed"]
+    for r in range(R):
+        own_tail = tail if r in leaders else head
+        assert comp[r, own_tail] == 1
+        assert comp[r, [c for c in chain if c != own_tail]].sum() == 0
+    # Per-stage counters: everyone ran the intra stage; only leaders ran
+    # the leader stage.
+    assert (st["stage_completions"][:, head] == 1).all()
+    for r in range(R):
+        assert st["stage_completions"][r, tail] == (1 if r in leaders
+                                                    else 0)
+
+
 def test_two_level_repeat_submissions_serialize():
     """A re-submitted chain head waits for the whole previous chain
     (chain-wide inflight), and both logical executions complete."""
@@ -234,17 +359,33 @@ def test_chain_advances_on_device_single_launch():
         np.testing.assert_allclose(rt.read_output(r, cid), want, rtol=1e-5)
 
 
-def test_auto_selection_registers_chain_above_threshold():
-    rt, world = _runtime(8, heap_elems=1 << 16, slice_elems=64)
-    small = rt.register(CollKind.ALL_REDUCE, world, n_elems=256,
+def test_auto_selection_registers_measured_winner():
+    """auto under the cost model: below the crossover the flat ring wins
+    (per-stage overhead), above it — under bandwidth skew — a chained
+    plan does; both registrations execute correctly side by side."""
+    rt, world = _runtime(8, heap_elems=1 << 16, max_comms=8,
+                         burst_slices=8, conn_depth=24,
+                         bandwidth_groups=2, inter_burst_cap=1)
+    model = CostModel.default()
+    rt._cost_model = model
+    small = rt.register(CollKind.ALL_REDUCE, world, n_elems=64,
                         algo="auto")
     big = rt.register(CollKind.ALL_REDUCE, world, n_elems=4096,
                       algo="auto")
-    assert small not in rt._chain_of           # flat ring below threshold
-    assert big in rt._chain_of                 # two-level above
+    assert small not in rt._chain_of           # flat ring at small n
+    assert big in rt._chain_of                 # chained plan at large n
+    assert rt.stats()["algos"][big] in ("two_level", "torus", "hybrid")
+    # Each pick IS the model's argmin over the candidates.
+    for cid, n in ((small, 64), (big, 4096)):
+        feats = {a: plan_features(rt.cfg, CollKind.ALL_REDUCE, n, 8,
+                                  default_hierarchy(8), a)
+                 for a in AUTO_CANDIDATES[CollKind.ALL_REDUCE]}
+        want = min(feats, key=lambda a: model.predict(feats[a]))
+        got = rt.stats()["algos"].get(cid, "ring")
+        assert got == want
     rng = np.random.RandomState(0)
     data = {c: [rng.randn(n).astype(np.float32) for _ in range(8)]
-            for c, n in [(small, 256), (big, 4096)]}
+            for c, n in [(small, 64), (big, 4096)]}
     for r in range(8):
         rt.submit(r, big, data=data[big][r])
         rt.submit(r, small, data=data[small][r])
@@ -332,6 +473,62 @@ def test_submit_all_forwards_per_rank_arguments():
                                want, rtol=1e-5)
     # ...and only rank 0's callback was registered.
     assert seen == [(0, cid)]
+
+
+def test_bandwidth_skew_lane_caps():
+    """The bandwidth-skew knob classifies derived lanes: intra rings stay
+    at the full burst, island-crossing rings get the inter cap; caps are
+    surfaced via stats() and the skewed run stays correct."""
+    R, hier, n = 8, (2, 4), 48
+    rt, world = _runtime(R, max_comms=6, burst_slices=8, conn_depth=24,
+                         bandwidth_groups=2, inter_burst_cap=2)
+    cid = rt.register(CollKind.ALL_REDUCE, world, n_elems=n,
+                      algo="two_level", hierarchy=hier)
+    xs = [np.full(n, r + 1.0, np.float32) for r in range(R)]
+    rt.submit_all(cid, data={r: xs[r] for r in range(R)})
+    rt.drive()
+    for r in range(R):
+        np.testing.assert_allclose(rt.read_output(r, cid),
+                                   np.sum(xs, axis=0), rtol=1e-5)
+    caps = rt.stats()["lane_caps"]
+    lanes = {rt.specs[c].comm.lane for c in rt._chain_of[cid]}
+    intra_lane = rt.specs[rt._chain_of[cid][0]].comm.lane
+    inter_lane = rt.specs[rt._chain_of[cid][1]].comm.lane
+    assert caps[0] == 2                  # flat world ring crosses islands
+    assert caps[intra_lane] == 8         # intra rings: groups of 4 =
+                                         # exactly one island each
+    assert caps[inter_lane] == 2         # owner rings span both islands
+    assert lanes == {intra_lane, inter_lane}
+
+
+def test_cond_chain_relink_traced_as_branch():
+    """cond_chain_relink wraps the relink scatter in a lax.cond when the
+    registration has chains; the escape hatch traces the unconditional
+    form (no cond primitive)."""
+    import jax
+
+    from repro.core.daemon import (_count_primitive, _load_mailbox,
+                                   local_tables, shared_tables)
+    from repro.core.scheduler import rank_superstep
+    from repro.core.state import init_state
+    from repro.core.tables import build_tables
+
+    rt, world = _runtime(8, max_comms=6)
+    rt.register(CollKind.ALL_REDUCE, world, n_elems=32,
+                algo="two_level", hierarchy=(2, 4))
+    t = build_tables(rt.cfg, rt.comms, rt.specs)
+    sh, lt_all = shared_tables(t), local_tables(t)
+    lt = jax.tree_util.tree_map(lambda a: a[0], lt_all)
+    st = init_state(rt.cfg, per_rank=False)
+    inbox = _load_mailbox(st)
+    counts = {}
+    for cond in (True, False):
+        jaxpr = jax.make_jaxpr(
+            lambda s, i: rank_superstep(rt.cfg, sh, lt, s, i,
+                                        cond_relink=cond))(st, inbox)
+        counts[cond] = _count_primitive(jaxpr.jaxpr, "cond")
+    assert counts[True] >= 1
+    assert counts[False] == 0
 
 
 def test_mixed_chained_and_flat_conflicting_orders_complete():
