@@ -261,6 +261,12 @@ RECORD_SECTIONS = {
     # record whose "algos" section lacks "auto" is a sweep that was never
     # calibrated, and validation fails it loudly.
     "algos": ("config", "sweep", "auto"),
+    # All-to-all: flat relay ring vs the two-level composite at R=16
+    # (supersteps gate), plus the adversarial a2a x all-reduce contention
+    # scenario.  "auto" is appended by benchmarks/calibrate.py after the
+    # fit, same contract as "algos".
+    "alltoall": ("config", "flat", "two_level", "superstep_ratio",
+                 "contention", "auto"),
 }
 
 
@@ -734,6 +740,162 @@ def run_algo_sweep(R=16, hierarchy=(4, 4), small_n=256, large_n=16384,
     doc["algos"] = record
     _write_record(out_path, doc)
     print(f"# wrote {out_path} (algos)")
+    return record
+
+
+def _a2a_once(algo: str, hierarchy, R: int, n: int, burst: int,
+              conn_depth: int, iters: int, bandwidth_groups: int = 0,
+              inter_burst_cap: int = 0) -> dict:
+    """Supersteps + wall time of ONE all-to-all lowering, reference-
+    checked (personalized exchange, not a reduction — ``_algo_once``'s
+    sum oracle does not apply).  Same record shape as ``_algo_once`` so
+    benchmarks/calibrate.py can rank the candidates with the fitted
+    model."""
+    from repro.core import plan_features
+
+    cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=3,
+                     slice_elems=BURST_SLICE_ELEMS, conn_depth=conn_depth,
+                     burst_slices=burst, heap_elems=1 << 18,
+                     superstep_budget=1 << 15,
+                     bandwidth_groups=bandwidth_groups,
+                     inter_burst_cap=inter_burst_cap)
+    rt = OcclRuntime(cfg)
+    world = (rt.communicator(list(range(R))) if algo == "ring"
+             else rt.logical_communicator(list(range(R))))
+    cid = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n, algo=algo,
+                      hierarchy=hierarchy)
+    rng = np.random.RandomState(0)
+    xs = [rng.randn(n).astype(np.float32) for _ in range(R)]
+    c = n // R
+    want0 = np.concatenate([xs[o][:c] for o in range(R)])
+
+    def once():
+        rt.submit_all(cid, data={r: xs[r] for r in range(R)})
+        rt.drive()
+
+    once()                                   # warmup: compile + converge
+    np.testing.assert_array_equal(rt.read_output(0, cid), want0)
+    s0 = rt.stats()
+    dt = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        dt = min(dt, time.perf_counter() - t0)
+    s1 = rt.stats()
+    steps = (int(s1["supersteps"].max()) - int(s0["supersteps"].max())) \
+        / iters
+    feats = plan_features(cfg, CollKind.ALL_TO_ALL, n, R, hierarchy, algo)
+    return {"latency_s": dt, "supersteps": steps,
+            "features": {"supersteps": feats["supersteps"],
+                         "bytes": feats["bytes"],
+                         "stages": feats["stages"]}}
+
+
+def _a2a_contention_once(R: int, n: int, burst: int, conn_depth: int,
+                         iters: int) -> dict:
+    """Adversarial a2a x all-reduce contention: a dispatch/combine-style
+    all-to-all pair interleaved with an all-reduce, submitted in
+    rank-dependent conflicting orders for which NO consistent static
+    schedule exists (the MoE training shape).  The record proves the
+    static baseline wedges and measures OCCL draining everything."""
+    from repro.core import run_static_order
+
+    orders = {r: list(np.random.RandomState(r).permutation(3))
+              for r in range(R)}
+    static = run_static_order(orders,
+                              {c: list(range(R)) for c in range(3)})
+    cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=1,
+                     slice_elems=BURST_SLICE_ELEMS, conn_depth=conn_depth,
+                     burst_slices=burst, heap_elems=1 << 18,
+                     superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    world = rt.communicator(list(range(R)))
+    ids = [rt.register(CollKind.ALL_TO_ALL, world, n_elems=n),
+           rt.register(CollKind.ALL_TO_ALL, world, n_elems=n),
+           rt.register(CollKind.ALL_REDUCE, world, n_elems=n)]
+    rng = np.random.RandomState(1)
+    xs = {c: [rng.randn(n).astype(np.float32) for _ in range(R)]
+          for c in range(3)}
+
+    def once():
+        for r in range(R):
+            for c in orders[r]:
+                rt.submit(r, ids[c], data=xs[c][r])
+        rt.drive()
+
+    once()
+    c_ = n // R
+    for cid, c in ((ids[0], 0), (ids[1], 1)):
+        np.testing.assert_array_equal(
+            rt.read_output(0, cid),
+            np.concatenate([xs[c][o][:c_] for o in range(R)]))
+    np.testing.assert_allclose(rt.read_output(0, ids[2]),
+                               np.sum(xs[2], axis=0), rtol=1e-4, atol=1e-4)
+    s0 = rt.stats()
+    dt = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        dt = min(dt, time.perf_counter() - t0)
+    s1 = rt.stats()
+    steps = (int(s1["supersteps"].max()) - int(s0["supersteps"].max())) \
+        / iters
+    return {"static_deadlocks": bool(static.deadlocked),
+            "static_cycle": list(static.cycle or []),
+            "latency_s": dt, "supersteps": steps,
+            "n_collectives": 3}
+
+
+def run_alltoall_bench(R=16, hierarchy=(4, 4), n=4096, burst=8,
+                       conn_depth=64, iters=3,
+                       out_path=BENCH_JSON) -> dict:
+    """All-to-all perf record (``alltoall`` section): the flat relay
+    ring vs the two-level composite at R=16 under the bandwidth-skew
+    lane model (the algo-sweep regime), plus the adversarial
+    a2a x all-reduce contention scenario.
+
+    The flat ring's program is O(R^2) — ``1 + (R-1)(R+2)/2`` steps, the
+    relay hops included — while the two-level chain runs two short
+    exchanges of ``1 + (N-1)(N+2)/2`` and ``1 + (G-1)(G+2)/2`` steps, so
+    at R=16/(4,4) the chain must land in strictly fewer supersteps (the
+    check_gates.py alltoall gate; 136 vs 20 program steps before
+    slicing).  benchmarks/calibrate.py appends the fitted cost model's
+    pick under ``auto`` — the gate asserts it lands on the measured
+    winner.
+    """
+    skew_kw = dict(bandwidth_groups=hierarchy[0], inter_burst_cap=2)
+    flat = _a2a_once("ring", None, R, n, burst, conn_depth, iters,
+                     **skew_kw)
+    two = _a2a_once("two_level", hierarchy, R, n, burst, conn_depth,
+                    iters, **skew_kw)
+    contention = _a2a_contention_once(8, 2048, burst, max(conn_depth, 32),
+                                      iters)
+    record = {
+        "config": {"n_ranks": R, "hierarchy": list(hierarchy),
+                   "n_elems": n, "slice_elems": BURST_SLICE_ELEMS,
+                   "burst_slices": burst, "conn_depth": conn_depth,
+                   "iters": iters, "backend": "sim", **skew_kw,
+                   "workload": "all-to-all, flat relay ring vs "
+                               "two-level chain + adversarial contention"},
+        "flat": flat,
+        "two_level": two,
+        "superstep_ratio": two["supersteps"] / max(flat["supersteps"], 1),
+        "contention": contention,
+    }
+    row("collectives/alltoall_flat_ring", flat["latency_s"] * 1e6,
+        f"supersteps={flat['supersteps']:.0f}")
+    row("collectives/alltoall_two_level", two["latency_s"] * 1e6,
+        f"supersteps={two['supersteps']:.0f};"
+        f"ratio_vs_flat={record['superstep_ratio']:.2f}")
+    row("collectives/alltoall_contention", contention["latency_s"] * 1e6,
+        f"supersteps={contention['supersteps']:.0f};"
+        f"static_deadlocks={contention['static_deadlocks']}")
+    doc = _read_record(out_path)
+    # Replace wholesale, dropping any stale auto pick (same re-fit
+    # forcing contract as the "algos" section).
+    doc["alltoall"] = record
+    _write_record(out_path, doc)
+    print(f"# wrote {out_path} (alltoall)")
     return record
 
 

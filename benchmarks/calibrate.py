@@ -10,9 +10,16 @@ for the sweep's own small/large configurations under ``algos.auto`` —
 so benchmarks/check_gates.py can assert "auto picks the measured
 winner" from the JSON record alone, without importing repro.
 
+BENCH_calibration.json is written ATOMICALLY (CostModel.save stages a
+tmp file and os.replace()s it into place) and then re-read and validated
+here: a truncated or key-incomplete calibration artifact fails the run
+loudly instead of silently degrading every future ``algo="auto"``
+registration to the default model.
+
 Usage: ``python benchmarks/calibrate.py`` (after ``run_algo_sweep``;
 ``benchmarks/run.py`` chains both).
 """
+import json
 import pathlib
 import sys
 
@@ -25,22 +32,68 @@ from bench_collectives import (BENCH_JSON, _read_record,  # noqa: E402
 
 KIND_OF = {"all_reduce": "ALL_REDUCE", "broadcast": "BROADCAST"}
 
+# Every fit sample must carry these; a sweep record missing any of them
+# is a partial/stale measurement and must not be fitted from.
+SAMPLE_KEYS = ("latency_s", "features")
+FEATURE_KEYS = ("supersteps", "bytes", "stages")
+# Required shape of the persisted calibration artifact, per backend.
+CALIBRATION_KEYS = ("alpha", "beta", "gamma")
+
 
 def collect_samples(algos_record: dict) -> list[dict]:
     """Flatten the sweep into fit() samples: one (features, wall) pair
-    per (kind, size, algorithm) measurement."""
-    samples = []
+    per (kind, size, algorithm) measurement.  Fails LOUDLY on records
+    missing required keys — a partial sweep silently dropping samples
+    would skew the fit without anyone noticing."""
+    samples, problems = [], []
     for label, sizes in algos_record["sweep"].items():
         for size_label, entry in sizes.items():
             for algo, rec in entry.items():
-                if not isinstance(rec, dict) or "features" not in rec:
+                if not isinstance(rec, dict):
+                    continue                   # scalar metadata (n_elems)
+                tag = f"{label}/{size_label}/{algo}"
+                missing = [k for k in SAMPLE_KEYS if k not in rec]
+                missing += [f"features.{k}" for k in FEATURE_KEYS
+                            if k not in rec.get("features", {})]
+                if missing:
+                    problems.append(f"{tag} lacks {missing}")
                     continue
                 samples.append({
                     **rec["features"],
                     "wall": rec["latency_s"],
-                    "tag": f"{label}/{size_label}/{algo}",
+                    "tag": tag,
                 })
+    if problems:
+        raise RuntimeError(
+            "algos sweep record is partial — rerun run_algo_sweep "
+            "(python benchmarks/run.py): " + "; ".join(problems))
     return samples
+
+
+def validate_calibration(path) -> dict:
+    """Re-read the just-written BENCH_calibration.json and verify every
+    backend entry carries finite, non-negative (alpha, beta, gamma)."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        raise RuntimeError(
+            f"{path} unreadable after save ({e}) — calibration write "
+            "failed") from None
+    problems = []
+    backends = rec.get("backends")
+    if not backends:
+        problems.append("missing 'backends'")
+    for backend, fit_rec in (backends or {}).items():
+        for key in CALIBRATION_KEYS:
+            v = fit_rec.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                problems.append(f"backends.{backend}.{key} = {v!r} "
+                                "(want a non-negative number)")
+    if problems:
+        raise RuntimeError(
+            f"{path} failed validation: " + "; ".join(problems))
+    return rec
 
 
 def auto_picks(record: dict, model) -> dict:
@@ -78,6 +131,35 @@ def auto_picks(record: dict, model) -> dict:
     return picks
 
 
+def alltoall_auto_pick(alltoall_record: dict, model) -> dict:
+    """The fitted model's flat-vs-two-level pick for the all-to-all
+    bench configuration, next to the measured walls — the alltoall gate
+    of check_gates.py compares pick vs measured winner."""
+    from repro.core import CollKind, OcclConfig, select_algo
+
+    cfg_rec = alltoall_record["config"]
+    cfg = OcclConfig(
+        n_ranks=cfg_rec["n_ranks"], max_colls=8, max_comms=3,
+        slice_elems=cfg_rec["slice_elems"],
+        conn_depth=cfg_rec["conn_depth"],
+        burst_slices=cfg_rec["burst_slices"],
+        heap_elems=1 << 18, superstep_budget=1 << 15,
+        bandwidth_groups=cfg_rec["bandwidth_groups"],
+        inter_burst_cap=cfg_rec["inter_burst_cap"])
+    pick = select_algo("auto", CollKind.ALL_TO_ALL, cfg_rec["n_elems"],
+                       cfg_rec["n_ranks"],
+                       hierarchy=tuple(cfg_rec["hierarchy"]),
+                       cfg=cfg, model=model)
+    walls = {"ring": alltoall_record["flat"]["latency_s"],
+             "two_level": alltoall_record["two_level"]["latency_s"]}
+    return {
+        "pick": pick,
+        "pick_wall_s": walls.get(pick),
+        "best_algo": min(walls, key=walls.get),
+        "best_wall_s": min(walls.values()),
+    }
+
+
 def main(out_path=BENCH_JSON) -> dict:
     from repro.core import costmodel
 
@@ -94,6 +176,7 @@ def main(out_path=BENCH_JSON) -> dict:
         "n_samples": len(samples),
         "source_record": str(out_path.name),
     })
+    validate_calibration(path)
     row("collectives/calibration_alpha", model.alpha * 1e6, "us/superstep")
     row("collectives/calibration_beta", model.beta * 1e9, "ns/byte")
     row("collectives/calibration_gamma", model.gamma * 1e6, "us/stage")
@@ -104,6 +187,14 @@ def main(out_path=BENCH_JSON) -> dict:
                   "gamma": model.gamma, "source": model.source},
         "picks": picks,
     }
+    if "alltoall" in doc:
+        doc["alltoall"]["auto"] = alltoall_auto_pick(doc["alltoall"],
+                                                     model)
+        print(f"#   auto[alltoall] -> {doc['alltoall']['auto']['pick']} "
+              f"(measured best: {doc['alltoall']['auto']['best_algo']})")
+    else:
+        print("#   (no alltoall section yet — run_alltoall_bench "
+              "appends it; validate_record requires it for a full run)")
     _write_record(out_path, doc)
     print(f"# wrote {path} (calibration) + {out_path} (algos.auto)")
     for label, sizes in picks.items():

@@ -21,15 +21,26 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
   the bandwidth-skew lane model the two-level chain must also win on
   WALL-CLOCK (its bulk stages ride intra lanes at the full burst while
   the flat ring pays the inter cap every hop).
+* **alltoall** — the flat relay-ring all-to-all at R=16 pays its
+  O(R^2) program (136 steps, relay hops included) while the two-level
+  composite runs two short exchanges (20 steps at (4, 4)), so the chain
+  must complete in strictly FEWER supersteps; the calibrated model's
+  ``auto`` pick must land on the measured wall-clock winner (within the
+  same 1.15x near-tie tolerance as the algos gate); and the adversarial
+  a2a x all-reduce contention scenario must record a PROVEN static
+  deadlock that OCCL drained.
 * **algos** — the algorithm zoo at R=16 under bandwidth skew: at the
   large payload at least one NEW chained plan (torus/hybrid/two_level)
   must beat the flat ring on wall-clock, and the calibrated cost model's
   ``auto`` picks (benchmarks/calibrate.py) must land on the measured
-  winner's side of the crossover at BOTH payload sizes — small must stay
-  single-stage-cheap (flat ring family), large must go hierarchical, and
-  each pick's measured wall must be within 1.15x of the measured best
-  (the model may break near-ties either way; picking a genuinely slow
-  algorithm is the regression).
+  winner's side of the crossover at BOTH payload sizes — small stays
+  single-stage-cheap (flat ring family), large goes hierarchical —
+  enforced only when the measured winner itself sits in that family
+  (runner noise can hand the chain an outright small-payload win, and
+  following the measurement is not a regression), and each pick's
+  measured wall must be within 1.15x of the measured best (the model
+  may break near-ties either way; picking a genuinely slow algorithm
+  is the regression).
 
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
@@ -106,6 +117,35 @@ def check(doc: dict) -> list[str]:
             f"skew: {sk['two_level']['latency_s']*1e3:.1f}ms vs flat "
             f"{sk['flat']['latency_s']*1e3:.1f}ms (gate: strictly faster)")
 
+    at = doc["alltoall"]
+    a2a_flat = at["flat"]["supersteps"]
+    a2a_two = at["two_level"]["supersteps"]
+    print(f"alltoall supersteps at R={at['config']['n_ranks']}: "
+          f"flat {a2a_flat:.0f}, two_level {a2a_two:.0f} "
+          f"(ratio {at['superstep_ratio']:.2f})")
+    if not a2a_two < a2a_flat:
+        failures.append(
+            f"two-level all-to-all regressed: {a2a_two:.0f} supersteps "
+            f"vs flat relay ring's {a2a_flat:.0f} (gate: strictly fewer)")
+    ap = at["auto"]
+    print(f"auto[alltoall]: pick {ap['pick']} "
+          f"(measured best {ap['best_algo']})")
+    if (ap.get("pick_wall_s") is not None
+            and ap["pick_wall_s"] > 1.15 * ap["best_wall_s"]):
+        failures.append(
+            f"auto pick for alltoall ({ap['pick']}) measured "
+            f"{ap['pick_wall_s']*1e3:.1f}ms, >1.15x the best "
+            f"({ap['best_algo']} {ap['best_wall_s']*1e3:.1f}ms)")
+    cont = at["contention"]
+    print(f"alltoall contention: static_deadlocks="
+          f"{cont['static_deadlocks']}, "
+          f"supersteps {cont['supersteps']:.0f}")
+    if not cont["static_deadlocks"]:
+        failures.append(
+            "adversarial a2a x all-reduce orders no longer wedge the "
+            "static baseline — the contention scenario stopped being "
+            "adversarial (check the order generation)")
+
     a = doc["algos"]
     large = a["sweep"]["all_reduce"]["large"]
     flat_wall = large["ring"]["latency_s"]
@@ -137,12 +177,18 @@ def check(doc: dict) -> list[str]:
             if label == "all_reduce":
                 family = (AR_SMALL_FAMILY if size_label == "small"
                           else AR_LARGE_FAMILY)
-                if p["pick"] not in family:
+                # Enforce the family only when the MEASUREMENT agrees
+                # with it: on a noisy runner the chain can win outright
+                # even at the small payload (dispatch overhead dwarfs
+                # the per-stage term), and a model that follows the
+                # measured winner is correct, not regressed — the wall
+                # tolerance below still catches measurably slow picks.
+                if p["pick"] not in family and p["best_algo"] in family:
                     failures.append(
                         f"auto pick for {label}/{size_label} is "
                         f"{p['pick']!r} — outside the expected "
-                        f"{sorted(family)} family for that side of the "
-                        "crossover")
+                        f"{sorted(family)} family even though the "
+                        f"measured winner ({p['best_algo']}) is in it")
             if (p.get("pick_wall_s") is not None
                     and p["pick_wall_s"] > 1.15 * p["best_wall_s"]):
                 failures.append(
@@ -160,7 +206,8 @@ def main(argv: list[str]) -> int:
     path = (pathlib.Path(argv[1]) if len(argv) > 1
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
-        required=("staging", "contention", "mesh", "hierarchy", "algos"),
+        required=("staging", "contention", "mesh", "hierarchy", "algos",
+                  "alltoall"),
         out_path=path)
     failures = check(doc)
     for f in failures:

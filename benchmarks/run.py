@@ -52,6 +52,11 @@ def main(quick: bool = False) -> None:
         # iters=3: the pick-vs-best wall tolerance is 1.15x, within
         # single-shot dispatch noise at the small payload.
         bench_collectives.run_algo_sweep(iters=3)
+        # All-to-all: flat relay ring vs two-level chain at R=16, plus
+        # the adversarial a2a x all-reduce contention scenario — the
+        # alltoall supersteps gate compares structural counts, so the
+        # full-size point stays in --quick too.
+        bench_collectives.run_alltoall_bench(iters=3)
         import calibrate
         calibrate.main()
         # Fail LOUDLY on a stale/partial record: every section the gates
@@ -73,11 +78,13 @@ def main(quick: bool = False) -> None:
     bench_collectives.run_mesh_bench()
     bench_collectives.run_hierarchy_bench()
     bench_collectives.run_algo_sweep()
+    bench_collectives.run_alltoall_bench()
     import calibrate
     calibrate.main()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)
+    bench_deadlock.run_a2a_chained(iters=2)
     import bench_gang
     bench_gang.run()
     import bench_training

@@ -8,8 +8,8 @@ and stickiness-driven emergent gang-scheduling.  See DESIGN.md.
 from .algos import (AUTO_CANDIDATES, PLAN_BUILDERS, CompositePlan,
                     SubCollective, build_plan, default_hierarchy,
                     plan_hybrid, plan_torus, plan_tree_broadcast,
-                    plan_tree_reduce, plan_two_level, register_plan,
-                    select_algo)
+                    plan_tree_reduce, plan_two_level,
+                    plan_two_level_alltoall, register_plan, select_algo)
 from .config import OcclConfig, OrderPolicy, ReduceOp
 from .costmodel import CostModel, fit, plan_features
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
@@ -24,7 +24,7 @@ __all__ = [
     "run_static_order", "consistent_order_exists",
     "CompositePlan", "SubCollective", "default_hierarchy",
     "plan_two_level", "plan_torus", "plan_hybrid",
-    "plan_tree_broadcast", "plan_tree_reduce",
+    "plan_tree_broadcast", "plan_tree_reduce", "plan_two_level_alltoall",
     "PLAN_BUILDERS", "AUTO_CANDIDATES", "register_plan", "build_plan",
     "select_algo", "CostModel", "plan_features", "fit",
 ]

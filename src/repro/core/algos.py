@@ -80,6 +80,8 @@ import dataclasses
 import math
 from typing import Callable, Optional, Sequence
 
+import numpy as np
+
 from .primitives import CollKind, Prim
 
 # ---------------------------------------------------------------------------
@@ -164,6 +166,48 @@ def _ring_reduce(m: int, R: int, root: int) -> list:
     return prog
 
 
+@register_algo("ring", CollKind.ALL_TO_ALL)
+def _ring_all_to_all(m: int, R: int, root: int) -> list:
+    # Personalized exchange over the ring, ABSOLUTE (member-indexed)
+    # chunks: input chunk d is the payload FOR member d, output chunk o
+    # is the payload FROM member o.  Phase s in 1..R-1 walks every
+    # (origin -> origin + s) pair s hops down the ring: the origin SENDs
+    # its input chunk for member (m + s); each intermediate forwards the
+    # in-flight chunk with the heap-inert RECV_SEND; the destination's
+    # final RECV lands it in output chunk (m - s) — the chunk operand of
+    # a step indexes whichever buffer side the primitive touches (SEND:
+    # input, RECV: output, RECV_SEND: neither — the id is kept at the
+    # forwarded chunk's destination purely for trace readability).
+    # FIFO-safe: within phase s, rank m pushes wire chunks destined to
+    # (m+s), (m+s-1), ..., (m+1) in that order, which is exactly the
+    # order its successor's relay/RECV steps consume them.
+    prog = [(Prim.COPY, m)]
+    for s in range(1, R):
+        prog.append((Prim.SEND, (m + s) % R))
+        for t in range(1, s):
+            prog.append((Prim.RECV_SEND, (m + s - t) % R))
+        prog.append((Prim.RECV, (m - s) % R))
+    return prog
+
+
+@register_algo("ring", CollKind.ALL_TO_ALL_RAGGED)
+def _ring_all_to_all_ragged(m: int, R: int, root: int) -> list:
+    # Capacity-dropped variant with DISTANCE-indexed chunks: input chunk
+    # s holds the (<= chunk capacity) live payload for member (m + s),
+    # output chunk s the payload from member (m - s).  Distance keying
+    # makes the program AND the ragged stage maps rank-independent —
+    # every rank's chunk s carries chunk_sizes[s] live elements, so one
+    # per-collective stage map (tables.py) serves all ranks, which a
+    # destination- or origin-indexed ragged layout cannot do.
+    prog = [(Prim.COPY, 0)]
+    for s in range(1, R):
+        prog.append((Prim.SEND, s))
+        for t in range(1, s):
+            prog.append((Prim.RECV_SEND, s))
+        prog.append((Prim.RECV, s))
+    return prog
+
+
 def build_ring_program(
     kind: CollKind, member_idx: int, group_size: int, root_idx: int = 0,
     algo: str = "ring",
@@ -176,9 +220,12 @@ def build_ring_program(
         return [(Prim.COPY, 0)]
     try:
         builder = ALGO_BUILDERS[(algo, CollKind(kind))]
-    except KeyError:  # pragma: no cover
-        raise ValueError(f"no registered builder for algo={algo!r}, "
-                         f"kind={CollKind(kind)!r}")
+    except (KeyError, ValueError):
+        known = sorted({f"({a}, {CollKind(k).name})"
+                        for a, k in ALGO_BUILDERS})
+        raise ValueError(
+            f"no registered program builder for algo={algo!r}, "
+            f"kind={kind!r}; registered: {known}") from None
     return builder(member_idx, group_size, root_idx)
 
 
@@ -197,6 +244,12 @@ class SubCollective:
     ring_size: int
     n_elems: int            # logical element count of this stage
     root: int = 0
+    # Stage-input permutation (CollectiveSpec.in_perm): position of each
+    # chain-logical element j inside THIS stage's input layout.  The
+    # chain relink composes it with the predecessor's output map, which
+    # is how the two-level a2a gets its inter-stage granule transposes
+    # for free (no shuffle stage, no extra heap traffic).
+    in_perm: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -336,6 +389,71 @@ def plan_hybrid(kind: CollKind, members: Sequence[int], hierarchy: tuple,
         ))
 
 
+def plan_two_level_alltoall(kind: CollKind, members: Sequence[int],
+                            hierarchy: tuple, n_elems: int,
+                            root: int = 0) -> CompositePlan:
+    """Hierarchical all-to-all over a ``G x N`` rank grid: an intra-group
+    exchange that gathers, per rank, everything its group-column peers
+    hold for the OTHER groups, then an inter-group exchange across the
+    grid columns that delivers it — ISSUE's gather -> leader exchange ->
+    scatter collapsed into two full-membership stages (every rank is its
+    own leader for its slice, so no scatter stage and no G-fold leader
+    bottleneck; supersteps drop from the flat ring's ``1 + (R-1)(R+2)/2``
+    to the two stages' ``a2a_len(N) + a2a_len(G)``).
+
+    Correctness hinges on the two ``in_perm`` granule transposes: with
+    per-pair granule size ``c = n / R`` (n must divide; ``algo="auto"``
+    silently drops this plan otherwise, explicit registration raises),
+    writing a destination as ``(g', j1)`` and the rank as ``(g, i)``:
+
+      * stage A (intra, one N-ring per group, ring index ``i``) must
+        exchange on the DESTINATION COLUMN ``j1``, so its in_perm maps
+        the user granule ``d = g'·N + j1`` to stage position
+        ``j1·G + g'`` — after the exchange, rank (g, i) holds, for every
+        origin column j1 of its own group, the payloads of rank (g, j1)
+        for all of column i's ranks, granule order ``o1·G + g'``.
+      * stage B (inter, one G-ring per grid column, ring index ``g``)
+        exchanges on the destination GROUP, so its in_perm transposes
+        ``o1·G + g'`` to stage position ``g'·N + o1``.
+
+    The final output granule ``o2·N + o1`` of rank (g, i) is then the
+    payload from global rank ``o2·N + o1`` — the exact absolute
+    origin-major layout the flat ring produces, which is what lets
+    ``algo="auto"`` swap the two freely and the bench compare them on
+    identical submits."""
+    if kind != CollKind.ALL_TO_ALL:
+        raise ValueError(
+            f"two_level all-to-all lowering is defined for ALL_TO_ALL "
+            f"only, got {CollKind(kind)!r} (the ragged variant is "
+            f"flat-ring only: per-distance sizes do not survive the "
+            f"granule transposes)")
+    G, N = hierarchy
+    groups = _grid(members, hierarchy)
+    R = G * N
+    if n_elems % R != 0:
+        raise ValueError(
+            f"two_level all-to-all needs n_elems divisible by the group "
+            f"size for exact granule transposes (n_elems={n_elems}, "
+            f"R={R}); use algo='ring' for ragged totals")
+    c = n_elems // R
+    intra = tuple(r for grp in groups for r in grp)          # row-major
+    inter = tuple(groups[g][i] for i in range(N) for g in range(G))
+    j = np.arange(n_elems, dtype=np.int64)
+    u, d = j % c, j // c
+    gq, j1 = divmod(d, N)
+    perm_a = (j1 * G + gq) * c + u
+    o1, gq2 = divmod(j // c, G)
+    perm_b = (gq2 * N + o1) * c + (j % c)
+    return CompositePlan(
+        kind=kind, n_elems=n_elems, hierarchy=(G, N),
+        stages=(
+            SubCollective(CollKind.ALL_TO_ALL, intra, N, n_elems,
+                          in_perm=tuple(map(int, perm_a))),
+            SubCollective(CollKind.ALL_TO_ALL, inter, G, n_elems,
+                          in_perm=tuple(map(int, perm_b))),
+        ))
+
+
 def plan_tree_broadcast(kind: CollKind, members: Sequence[int],
                         hierarchy: tuple, n_elems: int, root: int = 0
                         ) -> CompositePlan:
@@ -399,6 +517,9 @@ PLAN_BUILDERS: dict = {
     ("tree", CollKind.REDUCE):
         lambda members, hier, n, root=0: plan_tree_reduce(
             CollKind.REDUCE, members, hier, n, root),
+    ("two_level", CollKind.ALL_TO_ALL):
+        lambda members, hier, n, root=0: plan_two_level_alltoall(
+            CollKind.ALL_TO_ALL, members, hier, n),
 }
 
 
@@ -421,6 +542,8 @@ AUTO_CANDIDATES: dict = {
     CollKind.REDUCE: ("ring", "tree"),
     CollKind.ALL_GATHER: ("ring",),
     CollKind.REDUCE_SCATTER: ("ring",),
+    CollKind.ALL_TO_ALL: ("ring", "two_level"),
+    CollKind.ALL_TO_ALL_RAGGED: ("ring",),
 }
 
 
@@ -470,8 +593,15 @@ def select_algo(algo: str, kind: CollKind, n_elems: int, group_size: int,
                 f"{group_size}-member communicator (G * N != {group_size})")
     else:
         G, N = default_hierarchy(group_size)
+    try:
+        pool = AUTO_CANDIDATES[CollKind(kind)]
+    except (KeyError, ValueError):
+        known = sorted(CollKind(k).name for k in AUTO_CANDIDATES)
+        raise ValueError(
+            f"algo='auto' has no candidate set for collective kind "
+            f"{kind!r}; registered kinds: {known}") from None
     candidates = [
-        a for a in AUTO_CANDIDATES[CollKind(kind)]
+        a for a in pool
         if a == "ring" or (G > 1 and N > 1
                            and (a, CollKind(kind)) in PLAN_BUILDERS)
     ]
@@ -481,9 +611,16 @@ def select_algo(algo: str, kind: CollKind, n_elems: int, group_size: int,
 
     if model is None:
         model = CostModel.load()
-    costs = {
-        a: model.predict(plan_features(cfg, kind, n_elems, group_size,
-                                       (G, N), a))
-        for a in candidates
-    }
-    return min(candidates, key=lambda a: costs[a])
+    costs = {}
+    for a in candidates:
+        try:
+            costs[a] = model.predict(
+                plan_features(cfg, kind, n_elems, group_size, (G, N), a))
+        except ValueError:
+            # Plan not constructible for this payload/grid (e.g. the
+            # two-level a2a's exact-divisibility requirement): drop the
+            # candidate rather than fail selection — the flat ring is
+            # always constructible.
+            continue
+    return min((a for a in candidates if a in costs),
+               key=lambda a: costs[a])

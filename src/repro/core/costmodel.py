@@ -25,6 +25,14 @@ features any CompositePlan exposes at registration time:
   extra program dispatch) that dominate small payloads; γ is what makes
   ``auto`` keep the flat ring below the measured crossover.
 
+Both terms are a2a-aware for free: ``program_len`` of the ring
+all-to-all counts its ``1 + (R-1)(R+2)/2`` steps INCLUDING the
+RECV_SEND relay hops, so the flat ring is charged the O(R²) forwarding
+it really does, while the hierarchical ``two_level`` a2a pays only its
+two short intra/inter exchanges — which is exactly the structure that
+lets ``auto`` rank flat vs hierarchical a2a without any kind-specific
+feature code.
+
 (α, β, γ) are CALIBRATED PER BACKEND from the measured BENCH history:
 ``benchmarks/calibrate.py`` fits a non-negative least squares over the
 ``algos`` sweep samples of BENCH_collectives.json (each sample records

@@ -33,6 +33,12 @@ class Prim(enum.IntEnum):
     RECV_REDUCE_SEND = 6
     RECV_REDUCE_COPY = 7
     RECV_REDUCE_COPY_SEND = 8
+    # Pure relay: receive a slice burst and forward it WITHOUT touching
+    # the output heap.  All-to-all is the first collective that needs it:
+    # a ring hop carrying a chunk addressed to a rank further down the
+    # ring must not deposit it locally (RECV_COPY_SEND would overwrite an
+    # output chunk that belongs to a different origin).
+    RECV_SEND = 9
 
 
 # Action-fusion flag table: prim -> (recv, send, reduce, copy, reads_input).
@@ -47,6 +53,7 @@ _FLAGS = {
     Prim.RECV_REDUCE_SEND: (1, 1, 1, 0, 1),
     Prim.RECV_REDUCE_COPY: (1, 0, 1, 1, 1),
     Prim.RECV_REDUCE_COPY_SEND: (1, 1, 1, 1, 1),
+    Prim.RECV_SEND: (1, 1, 0, 0, 0),
 }
 
 # Dense lookup arrays indexed by Prim value (used inside jitted code).
@@ -63,6 +70,17 @@ class CollKind(enum.IntEnum):
     REDUCE_SCATTER = 2
     BROADCAST = 3
     REDUCE = 4
+    # Personalized exchange: member m's input chunk d is the payload FOR
+    # member d; its output chunk o is the payload FROM member o.  The
+    # first kind whose send AND recv buffers are both per-peer chunked
+    # with *different* chunk indices live at each program step.
+    ALL_TO_ALL = 5
+    # Capacity-dropped variant: per-DISTANCE valid sizes (chunk s of the
+    # padded buffer carries ``chunk_sizes[s]`` live elements for member
+    # (m+s) mod R on the way in, from member (m-s) mod R on the way
+    # out).  Distance keying keeps the stage maps rank-independent, so
+    # one per-collective map serves every rank (see tables.py).
+    ALL_TO_ALL_RAGGED = 6
 
 
 def build_program(
@@ -81,28 +99,60 @@ def build_program(
     return build_ring_program(kind, member_idx, group_size, root_idx)
 
 
-def program_len(kind: CollKind, group_size: int) -> int:
-    if group_size == 1:
-        return 1
-    return {
-        CollKind.ALL_REDUCE: 2 * group_size - 1,
-        CollKind.ALL_GATHER: group_size,
-        CollKind.REDUCE_SCATTER: group_size,
-        CollKind.BROADCAST: group_size,
-        CollKind.REDUCE: group_size,
-    }[kind]
+# Ring all-to-all: step 0 is the local COPY, then phase s in 1..R-1 moves
+# every (origin -> origin+s) pair s hops down the ring: one SEND, s-1
+# relay forwards (RECV_SEND), one final RECV — sum_{s=1}^{R-1} (s+1)
+# steps after the COPY.
+def _ring_a2a_len(group_size: int) -> int:
+    return 1 + (group_size - 1) * (group_size + 2) // 2
 
+
+# Per-kind registries.  Kinds are extensible (the a2a family was added
+# after the original five), so lookups go through :func:`_registered`
+# which raises a ValueError naming the kind and the registered set
+# instead of a bare KeyError.
+_PROGRAM_LEN: dict[CollKind, "callable"] = {
+    CollKind.ALL_REDUCE: lambda R: 2 * R - 1,
+    CollKind.ALL_GATHER: lambda R: R,
+    CollKind.REDUCE_SCATTER: lambda R: R,
+    CollKind.BROADCAST: lambda R: R,
+    CollKind.REDUCE: lambda R: R,
+    CollKind.ALL_TO_ALL: _ring_a2a_len,
+    CollKind.ALL_TO_ALL_RAGGED: _ring_a2a_len,
+}
 
 # I/O indexing: whether the collective's send/recv *buffer* is indexed by the
 # chunk id (True) or holds a single chunk addressed by slice only (False).
+_IO_CHUNKED: dict[CollKind, tuple[bool, bool]] = {
+    CollKind.ALL_REDUCE: (True, True),
+    CollKind.ALL_GATHER: (False, True),   # in: own chunk; out: all chunks
+    CollKind.REDUCE_SCATTER: (True, False),
+    CollKind.BROADCAST: (True, True),
+    CollKind.REDUCE: (True, True),
+    CollKind.ALL_TO_ALL: (True, True),    # per-destination in, per-origin out
+    CollKind.ALL_TO_ALL_RAGGED: (True, True),
+}
+
+
+def _registered(kind, table: dict, what: str):
+    """Registry lookup with a loud, named error for unknown kinds."""
+    try:
+        return table[CollKind(kind)]
+    except (KeyError, ValueError):
+        known = sorted(CollKind(k).name for k in table)
+        raise ValueError(
+            f"{what} has no entry for collective kind {kind!r}; "
+            f"registered kinds: {known}") from None
+
+
+def program_len(kind: CollKind, group_size: int) -> int:
+    if group_size == 1:
+        return 1
+    return _registered(kind, _PROGRAM_LEN, "program_len")(group_size)
+
+
 def io_chunked(kind: CollKind) -> tuple[bool, bool]:
-    return {
-        CollKind.ALL_REDUCE: (True, True),
-        CollKind.ALL_GATHER: (False, True),   # in: own chunk; out: all chunks
-        CollKind.REDUCE_SCATTER: (True, False),
-        CollKind.BROADCAST: (True, True),
-        CollKind.REDUCE: (True, True),
-    }[kind]
+    return _registered(kind, _IO_CHUNKED, "io_chunked")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +243,15 @@ class CollectiveSpec:
     next_coll: int = -1           # successor collective id (-1: tail/flat)
     chain_stage: int = 0          # 0 = head/standalone, 1.. = later stages
     inherit_prio: bool = True     # successor inherits the live priority
+    # Logical-input permutation: stage-local logical position of each
+    # caller-logical element j (empty = identity).  Applied to the stage
+    # INPUT map only (tables._build_stage_maps); composite a2a plans use
+    # it to fold the inter-stage granule transpose into the existing
+    # chain relink instead of adding a shuffle stage.
+    in_perm: tuple = ()
+    # ALL_TO_ALL_RAGGED only: per-distance live element counts, one per
+    # ring member, each <= ceil(n_elems / group_size).  Empty = dense.
+    chunk_sizes: tuple = ()
 
     @property
     def group_size(self) -> int:

@@ -173,7 +173,8 @@ class OcclRuntime:
                  op: ReduceOp = ReduceOp.SUM, root: int = 0,
                  algo: Optional[str] = None,
                  hierarchy: Optional[tuple] = None,
-                 inherit_prio: bool = True) -> int:
+                 inherit_prio: bool = True,
+                 chunk_sizes: Optional[Sequence[int]] = None) -> int:
         """Register a collective; returns its unique id (paper Sec. 3.1.1).
 
         ``algo`` selects the lowering (default ``cfg.algo``): ``"ring"``
@@ -191,15 +192,33 @@ class OcclRuntime:
         fires ONCE when the whole chain completes on the callback's rank.
         ``inherit_prio`` lets device-enqueued successor stages inherit the
         submission's live priority (the chain competes as one unit).
+
+        ``chunk_sizes`` (ALL_TO_ALL_RAGGED only) gives the per-DISTANCE
+        live element counts of the capacity-dropped exchange: member m's
+        chunk s carries ``chunk_sizes[s]`` elements for member (m+s) mod
+        R; the rest of each chunk's capacity is padding staged as zeros
+        and never read back.  Logical I/O sizes become
+        ``sum(chunk_sizes)`` on both sides.
         """
         if self._tables is not None:
             raise RegistrationClosed("register collectives before first launch")
+        if chunk_sizes is not None and CollKind(kind) is not \
+                CollKind.ALL_TO_ALL_RAGGED:
+            raise ValueError(
+                f"chunk_sizes is only meaningful for ALL_TO_ALL_RAGGED, "
+                f"got kind={CollKind(kind)!r}")
         algo = select_algo(self.cfg.algo if algo is None else algo,
                            kind, n_elems, len(comm.members),
                            hierarchy=hierarchy, cfg=self.cfg,
                            model=self._cost_model)
         if algo == "ring":
-            return self._register_ring(kind, comm, n_elems, op, root)
+            return self._register_ring(kind, comm, n_elems, op, root,
+                                       chunk_sizes=chunk_sizes or ())
+        if chunk_sizes is not None:
+            raise ValueError(
+                f"algo={algo!r} cannot lower a ragged all-to-all: "
+                "per-distance sizes do not survive the composite granule "
+                "transposes — register ALL_TO_ALL_RAGGED with algo='ring'")
         return self._register_composite(algo, kind, comm, n_elems, op,
                                         root, hierarchy, inherit_prio)
 
@@ -207,7 +226,9 @@ class OcclRuntime:
                        n_elems: int, op: ReduceOp = ReduceOp.SUM,
                        root: int = 0, next_coll: int = -1,
                        chain_stage: int = 0,
-                       inherit_prio: bool = True) -> int:
+                       inherit_prio: bool = True,
+                       in_perm: Sequence[int] = (),
+                       chunk_sizes: Sequence[int] = ()) -> int:
         cid = len(self.specs)
         assert cid < self.cfg.max_colls, "raise cfg.max_colls"
         if comm.lane < 0:
@@ -219,14 +240,41 @@ class OcclRuntime:
             n_elems, comm.size, self.cfg.slice_elems, self.cfg.conn_depth)
         chunk = rounds * ns * self.cfg.slice_elems
         padded = comm.size * chunk
+        if (CollKind(kind) is CollKind.ALL_TO_ALL
+                and n_elems % comm.size != 0):
+            # A personalized exchange needs one equal granule per pair:
+            # with a ragged tail granule the input clips by DESTINATION
+            # and the output by ORIGIN, so the two layouts cannot carry
+            # the same elements (data would be silently truncated).
+            raise ValueError(
+                f"ALL_TO_ALL needs n_elems divisible by the ring size "
+                f"(n_elems={n_elems}, ring={comm.size}); register "
+                f"ALL_TO_ALL_RAGGED with per-distance chunk_sizes for "
+                f"uneven payloads")
         inc, outc = io_chunked(kind)
         in_off = self._alloc_in(padded if inc else chunk)
         out_off = self._alloc_out(padded if outc else chunk)
+        if chunk_sizes:
+            # Loud registration-time validation: the ragged capacities
+            # must tile the padded chunk layout exactly (one count per
+            # ring member, each within the chunk's logical capacity,
+            # at least one live element overall) — tables.py re-asserts,
+            # but a user-facing misregistration should name the rule.
+            cl = -(-n_elems // comm.size)
+            sizes = tuple(int(z) for z in chunk_sizes)
+            if (len(sizes) != comm.size
+                    or any(z < 0 or z > cl for z in sizes)
+                    or sum(sizes) < 1):
+                raise ValueError(
+                    f"chunk_sizes must be {comm.size} per-distance counts "
+                    f"in [0, {cl}] (chunk capacity for n_elems={n_elems}) "
+                    f"with at least one live element, got {sizes}")
         spec = CollectiveSpec(
             coll_id=cid, kind=kind, comm=comm, n_elems=n_elems, op=int(op),
             root=root, in_off=in_off, out_off=out_off, n_slices=ns,
             n_rounds=rounds, next_coll=next_coll, chain_stage=chain_stage,
-            inherit_prio=inherit_prio)
+            inherit_prio=inherit_prio, in_perm=tuple(in_perm),
+            chunk_sizes=tuple(int(z) for z in chunk_sizes))
         self.specs.append(spec)
         return cid
 
@@ -263,7 +311,8 @@ class OcclRuntime:
             self._register_ring(
                 stage.kind, sub, stage.n_elems, op=op, root=stage.root,
                 next_coll=(head + k + 1 if k + 1 < n_stages else -1),
-                chain_stage=k, inherit_prio=inherit_prio)
+                chain_stage=k, inherit_prio=inherit_prio,
+                in_perm=stage.in_perm)
         tail = head + n_stages - 1
         self._tail_of[head] = tail
         self._chain_of[head] = list(range(head, tail + 1))

@@ -262,6 +262,10 @@ def build_tables(
             m = s.comm.member_index(rank)
             t.member[rank, c] = True
             prog = build_program(kind, m, s.group_size, s.root)
+            assert len(prog) == int(t.n_steps[c]), (
+                f"collective {c}: {kind.name} builder emitted "
+                f"{len(prog)} steps for member {m}, program_len says "
+                f"{int(t.n_steps[c])}")
             for step, (prim, chunk) in enumerate(prog):
                 t.prog_kind[rank, c, step] = int(prim)
                 t.prog_chunk[rank, c, step] = chunk
@@ -399,7 +403,25 @@ def _build_stage_maps(t: StaticTables, c: int, s: CollectiveSpec,
     heap offset ``(j // chunk_log) * chunk_pad + j % chunk_log``; every
     offset of the padded span NOT covered by the map is a pad position
     the staging engine zero-fills on write (so stale heap data can never
-    leak into the padded slices the daemon circulates)."""
+    leak into the padded slices the daemon circulates).
+
+    Two CollectiveSpec refinements generalize the maps for the a2a
+    family without touching the staging engine (maps carry ALL layout
+    logic downstream):
+
+    * ``chunk_sizes`` (ALL_TO_ALL_RAGGED) — per-distance live element
+      counts.  Chunk q keeps its full padded capacity on the heap/wire
+      (the daemon's slicing is static), but only its first
+      ``chunk_sizes[q]`` positions are mapped: the capacity-dropped rest
+      are pads the engine zero-fills on write and never reads back, so
+      both logical sizes become ``sum(chunk_sizes)``.
+    * ``in_perm`` — a logical-input permutation composed into the INPUT
+      map only: caller-logical element j stages to the heap position of
+      stage-local element ``in_perm[j]``.  Composite a2a plans use it to
+      fold the inter-stage granule transpose into the existing chain
+      relink (which composes stage_out_map[pred] with stage_in_map[succ]
+      over logical j, so a permuted successor input IS the transpose).
+    """
     cp = s.n_rounds * s.n_slices * slice_elems        # padded chunk extent
     cl = -(-s.n_elems // s.group_size)                # ceil: logical chunk
     in_log = s.n_elems if inc else cl
@@ -411,10 +433,31 @@ def _build_stage_maps(t: StaticTables, c: int, s: CollectiveSpec,
         j = np.arange(n_logical, dtype=np.int32)
         return (j // cl) * cp + (j % cl)
 
-    in_map = (chunked_map(in_log) if inc
-              else np.arange(in_log, dtype=np.int32))
-    out_map = (chunked_map(out_log) if outc
-               else np.arange(out_log, dtype=np.int32))
+    if s.chunk_sizes:
+        assert inc and outc, "ragged sizes require a both-sides-chunked kind"
+        sizes = np.asarray(s.chunk_sizes, np.int64)
+        assert len(sizes) == s.group_size and (sizes >= 0).all() and (
+            sizes <= cl).all(), (
+            f"collective {c}: chunk_sizes must be {s.group_size} counts "
+            f"in [0, {cl}], got {s.chunk_sizes}")
+        ragged = np.concatenate([
+            q * cp + np.arange(sizes[q], dtype=np.int32)
+            for q in range(s.group_size)]).astype(np.int32)
+        in_log = out_log = int(sizes.sum())
+        in_map = out_map = ragged
+    else:
+        in_map = (chunked_map(in_log) if inc
+                  else np.arange(in_log, dtype=np.int32))
+        out_map = (chunked_map(out_log) if outc
+                   else np.arange(out_log, dtype=np.int32))
+
+    if s.in_perm:
+        perm = np.asarray(s.in_perm, np.int64)
+        assert perm.shape == (in_log,) and np.array_equal(
+            np.sort(perm), np.arange(in_log)), (
+            f"collective {c}: in_perm must be a permutation of "
+            f"range({in_log})")
+        in_map = in_map[perm]
 
     t.chunk_pad[c] = cp
     t.chunk_log[c] = cl

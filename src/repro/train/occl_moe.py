@@ -1,0 +1,222 @@
+"""Expert-parallel MoE dispatch/combine routed through OCCL all-to-all.
+
+The expert-parallel layout shards the routed experts across ranks
+(rank d owns the ``E/R`` contiguous experts ``d*E/R .. (d+1)*E/R - 1``)
+while tokens stay data-parallel.  Each MoE layer then needs TWO
+personalized exchanges per step — dispatch (token slots travel to their
+experts' owners) and combine (expert outputs travel back) — and those
+are exactly the chained, differently-ordered all-to-alls that wedge a
+statically-sequenced executor when two layers (or dispatch and combine
+of adjacent microbatches) interleave across ranks.  Routing them through
+OCCL makes the pair order-free: ranks submit in ANY order and the daemon
+resolves the schedule (paper Sec. 3; tests/test_alltoall.py holds the
+adversarial chained-order case).
+
+Layout contract (what makes a PLAIN :class:`CollKind.ALL_TO_ALL` fit):
+every (source rank, expert) pair gets the same ``cap`` token slots, so
+the per-destination granule is a fixed ``E/R * cap * D`` elements and
+the wire payload is fully dense — dropped slots travel as zeros, which
+the bias-free SwiGLU experts map back to zeros, so padding never leaks
+into the combine.  The dispatch math itself is the sort-based capacity
+dispatch of :mod:`repro.models.moe`, restricted to the rank-local token
+set.
+
+:func:`ep_forward_ref` runs the IDENTICAL per-rank stages with direct
+numpy indexing as the transport, so ``OcclMoE.forward`` must match it
+bit for bit in float32 (the all-to-all moves bits, no arithmetic);
+``ep_forward_ref`` in turn matches ``moe_forward_dense_ref`` to
+float tolerance whenever capacity admits no drops.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CollKind, OcclConfig, OcclRuntime
+
+
+def _capacity(tokens_per_rank: int, top_k: int, n_experts: int,
+              capacity_factor: float) -> int:
+    """Uniform per-(source rank, expert) slot count — the moe.py formula
+    applied to the rank-local token count."""
+    cap = int(np.ceil(tokens_per_rank * top_k / n_experts * capacity_factor))
+    return max(4, -(-cap // 4) * 4)
+
+
+# ---------------------------------------------------------------------------
+# the three per-rank stages (shared verbatim by OCCL path and reference)
+# ---------------------------------------------------------------------------
+
+def _dispatch_local(cfg, params, x, cap: int):
+    """Sort-based capacity dispatch of one rank's tokens: returns the
+    destination-major dispatch buffer ``[E, cap, D]`` (expert-major IS
+    destination-rank-major under the contiguous expert sharding; invalid
+    slots zeroed) plus the (tok_idx, weight) slot metadata the combine
+    needs back at this rank."""
+    E, k = cfg.n_experts, cfg.top_k
+    Tl = x.shape[0]
+    xt = x.astype(jnp.float32)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)
+    order = jnp.argsort(flat_e)                 # stable
+    sorted_e = flat_e[order]
+    sorted_tok = order // k
+    sorted_w = topv.reshape(-1)[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    slot = starts[:, None] + jnp.arange(cap)[None, :]
+    slot_c = jnp.clip(slot, 0, Tl * k - 1)
+    valid = (sorted_e[slot_c] == jnp.arange(E)[:, None]) & (slot < Tl * k)
+    tok_idx = jnp.where(valid, sorted_tok[slot_c], 0)      # [E, cap]
+    w = jnp.where(valid, sorted_w[slot_c], 0.0)            # [E, cap]
+    xe = jnp.where(valid[..., None], xt[tok_idx], 0.0)     # [E, cap, D]
+    return np.asarray(xe, np.float32).reshape(-1), tok_idx, w
+
+
+def _expert_ffn(params, rank: int, n_ranks: int, recv, epr: int, cap: int,
+                d_model: int) -> np.ndarray:
+    """This rank's expert shard over the received origin-major dispatch
+    buffer; returns the origin-major combine payload (granule o = the
+    outputs of origin o's slots, headed back to o)."""
+    xe = jnp.asarray(recv, jnp.float32).reshape(n_ranks, epr, cap, d_model)
+    xe = xe.transpose(1, 0, 2, 3).reshape(epr, n_ranks * cap, d_model)
+    sl = slice(rank * epr, (rank + 1) * epr)
+    wg = params["wg"][sl].astype(jnp.float32)
+    wu = params["wu"][sl].astype(jnp.float32)
+    wd = params["wd"][sl].astype(jnp.float32)
+    h = jnp.einsum("ecd,edf->ecf", xe, wg)
+    u = jnp.einsum("ecd,edf->ecf", xe, wu)
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd)
+    ye = ye.reshape(epr, n_ranks, cap, d_model).transpose(1, 0, 2, 3)
+    return np.asarray(ye, np.float32).reshape(-1)
+
+
+def _combine_local(params, x, recv, tok_idx, w) -> jnp.ndarray:
+    """Weighted scatter-add of the returned expert outputs onto the local
+    tokens (+ the replicated shared-expert path).  ``recv`` arrives
+    expert-owner-major = expert-major, i.e. aligned with ``tok_idx``."""
+    Tl, D = x.shape
+    ye = jnp.asarray(recv, jnp.float32).reshape(-1, D)
+    y = jnp.zeros((Tl, D), jnp.float32)
+    y = y.at[tok_idx.reshape(-1)].add(ye * w.reshape(-1)[:, None])
+    if "shared_wg" in params:
+        xt = x.astype(jnp.float32)
+        hs = jax.nn.silu(xt @ params["shared_wg"].astype(jnp.float32)) * (
+            xt @ params["shared_wu"].astype(jnp.float32))
+        y = y + hs @ params["shared_wd"].astype(jnp.float32)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+def a2a_exchange_ref(payloads: Sequence[np.ndarray]) -> list:
+    """Direct-indexing personalized exchange — the transport oracle the
+    OCCL path must match bit for bit."""
+    R = len(payloads)
+    c = payloads[0].size // R
+    return [np.concatenate([np.asarray(payloads[o][m * c:(m + 1) * c])
+                            for o in range(R)]) for m in range(R)]
+
+
+def ep_forward_ref(cfg, params, xs: Sequence, cap: Optional[int] = None):
+    """Expert-parallel reference: the same three per-rank stages with
+    numpy indexing as the transport.  Returns one [T_l, D] output per
+    rank."""
+    R = len(xs)
+    epr = cfg.n_experts // R
+    cap = cap or _capacity(xs[0].shape[0], cfg.top_k, cfg.n_experts,
+                           cfg.capacity_factor)
+    disp, meta = [], []
+    for r in range(R):
+        xe, tok_idx, wts = _dispatch_local(cfg, params, xs[r], cap)
+        disp.append(xe)
+        meta.append((tok_idx, wts))
+    recv = a2a_exchange_ref(disp)
+    comb = [_expert_ffn(params, d, R, recv[d], epr, cap, cfg.d_model)
+            for d in range(R)]
+    back = a2a_exchange_ref(comb)
+    return [_combine_local(params, xs[r], back[r], *meta[r])
+            for r in range(R)]
+
+
+class OcclMoE:
+    """MoE dispatch + combine over two registered OCCL ALL_TO_ALLs.
+
+    The runtime is self-sized from the layer shape (the OcclGradSync
+    idiom): one communicator, two collectives (dispatch, combine), heap
+    scaled to the ``E * cap * D`` payload.  ``hierarchy=(G, N)`` routes
+    both exchanges through the composite two-level all-to-all (intra-
+    group exchange -> inter-group exchange over the G x N rank grid)
+    instead of the flat relay ring; ``algo="auto"`` lets the fitted cost
+    model pick.
+    """
+
+    def __init__(self, cfg, n_ranks: int, tokens_per_rank: int,
+                 cap: Optional[int] = None, algo: str = "ring",
+                 hierarchy: Optional[tuple] = None, slice_elems: int = 128):
+        E, D = cfg.n_experts, cfg.d_model
+        assert E % n_ranks == 0, (
+            f"expert-parallel layout needs n_experts % n_ranks == 0 "
+            f"(E={E}, R={n_ranks})")
+        self.cfg = cfg
+        self.R = n_ranks
+        self.epr = E // n_ranks
+        self.cap = cap or _capacity(tokens_per_rank, cfg.top_k, E,
+                                    cfg.capacity_factor)
+        n = E * self.cap * D
+        self.n_elems = n
+        composite = hierarchy is not None or algo == "auto"
+        self.occl = OcclRuntime(OcclConfig(
+            n_ranks=n_ranks,
+            max_colls=8,
+            max_comms=4 if composite else 1,
+            slice_elems=slice_elems,
+            conn_depth=8,
+            heap_elems=max(1 << 14, 10 * n) * (2 if composite else 1),
+            superstep_budget=1 << 16,
+        ))
+        comm = self.occl.communicator(list(range(n_ranks)))
+        self.disp_id = self.occl.register(
+            CollKind.ALL_TO_ALL, comm, n_elems=n, algo=algo,
+            hierarchy=hierarchy)
+        self.comb_id = self.occl.register(
+            CollKind.ALL_TO_ALL, comm, n_elems=n, algo=algo,
+            hierarchy=hierarchy)
+
+    def forward(self, params, xs: Sequence) -> list:
+        """xs: one [T_l, D] local token matrix per rank -> one [T_l, D]
+        output per rank, bit-comparable to :func:`ep_forward_ref`.
+
+        Payloads go through staged submits (one batched heap flush per
+        exchange); submission order across ranks is free — the runtime
+        is deadlock-free by construction."""
+        assert len(xs) == self.R
+        meta = []
+        for r in range(self.R):
+            xe, tok_idx, wts = _dispatch_local(self.cfg, params, xs[r],
+                                               self.cap)
+            meta.append((tok_idx, wts))
+            self.occl.submit(r, self.disp_id, data=xe)
+        self.occl.drive()
+        recv = self.occl.read_outputs_bulk(
+            [(r, self.disp_id) for r in range(self.R)])
+        for d in range(self.R):
+            self.occl.submit(d, self.comb_id, data=_expert_ffn(
+                params, d, self.R, recv[(d, self.disp_id)], self.epr,
+                self.cap, self.cfg.d_model))
+        self.occl.drive()
+        back = self.occl.read_outputs_bulk(
+            [(r, self.comb_id) for r in range(self.R)])
+        return [_combine_local(params, xs[r], back[(r, self.comb_id)],
+                               *meta[r]) for r in range(self.R)]
+
+    def stats(self):
+        return self.occl.stats()

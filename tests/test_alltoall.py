@@ -1,0 +1,261 @@
+"""ALL_TO_ALL as a first-class collective kind, end to end.
+
+Covers the tentpole acceptance criteria:
+* the flat relay-ring all-to-all matches the direct-indexing reference
+  for every (R, n) shape, and the ragged variant for capacity-dropped
+  per-distance sizes (zeros included);
+* the composite two-level all-to-all (intra-group exchange -> inter-
+  group exchange with the granule-transpose input permutations) lands
+  bit-identically to the flat ring for every grid;
+* ``algo="auto"`` resolves over {ring, two_level} and drops the
+  two-level candidate when the payload is not exactly divisible;
+* registration validates the a2a contracts loudly (divisibility,
+  ragged size vectors, kind-registry lookups — the ValueError-naming
+  satellite);
+* chained conflicting a2a submission orders wedge a statically-
+  sequenced executor but complete under OCCL (the paper's deadlock
+  scenario, instantiated on the new kind).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime,
+                        plan_two_level_alltoall, run_static_order,
+                        select_algo)
+from repro.core.algos import build_ring_program
+from repro.core.primitives import Prim, io_chunked, program_len
+
+
+def _runtime(R, max_colls=8, max_comms=4, slice_elems=8, conn_depth=8,
+             heap_elems=1 << 16, **kw):
+    cfg = OcclConfig(n_ranks=R, max_colls=max_colls, max_comms=max_comms,
+                     slice_elems=slice_elems, conn_depth=conn_depth,
+                     heap_elems=heap_elems, superstep_budget=1 << 15, **kw)
+    rt = OcclRuntime(cfg)
+    return rt, rt.communicator(list(range(R)))
+
+
+def _inputs(R, n, seed=0):
+    """Per-rank payloads whose values encode (origin, position)."""
+    rng = np.random.RandomState(seed)
+    return [np.asarray(o * 1000 + rng.randn(n), np.float32)
+            for o in range(R)]
+
+
+def _a2a_ref(ins, R):
+    """Personalized exchange: out[m] = concat over origins o of o's
+    granule destined for m (origin-major output, granule c = n/R)."""
+    c = ins[0].size // R
+    return [np.concatenate([ins[o][m * c:(m + 1) * c] for o in range(R)])
+            for m in range(R)]
+
+
+# ---------------------------------------------------------------------------
+# program structure
+# ---------------------------------------------------------------------------
+
+def test_program_len_counts_relay_hops():
+    # 1 local copy + per phase s: 1 send + (s-1) relays + 1 recv.
+    for R in range(2, 10):
+        want = 1 + sum(1 + (s - 1) + 1 for s in range(1, R))
+        assert program_len(CollKind.ALL_TO_ALL, R) == want
+        assert program_len(CollKind.ALL_TO_ALL_RAGGED, R) == want
+    assert program_len(CollKind.ALL_TO_ALL, 1) == 1
+    assert io_chunked(CollKind.ALL_TO_ALL) == (True, True)
+    assert io_chunked(CollKind.ALL_TO_ALL_RAGGED) == (True, True)
+
+
+def test_ragged_program_is_rank_independent():
+    """The distance-keyed program must be identical across members —
+    the contract that lets every member share one stage map."""
+    R = 5
+    progs = [build_ring_program(CollKind.ALL_TO_ALL_RAGGED, m, R)
+             for m in range(R)]
+    assert all(p == progs[0] for p in progs)
+    assert progs[0][0] == (Prim.COPY, 0)
+
+
+def test_unregistered_kind_lookups_name_the_registry():
+    with pytest.raises(ValueError, match="registered kinds"):
+        program_len(99, 4)
+    with pytest.raises(ValueError, match="registered kinds"):
+        io_chunked(99)
+    with pytest.raises(ValueError, match="ALL_TO_ALL"):
+        build_ring_program(CollKind.ALL_TO_ALL, 0, 4, algo="nope")
+
+
+# ---------------------------------------------------------------------------
+# flat ring vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,n", [(2, 8), (3, 12), (4, 16), (4, 32),
+                                 (5, 20), (8, 64)])
+def test_flat_ring_matches_reference(R, n):
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n)
+    xs = _inputs(R, n)
+    for r in range(R):
+        rt.submit(r, cid, data=xs[r])
+    rt.drive()
+    want = _a2a_ref(xs, R)
+    for m in range(R):
+        np.testing.assert_array_equal(rt.read_output(m, cid), want[m])
+
+
+@pytest.mark.parametrize("R,sizes", [(3, (1, 0, 2)), (4, (3, 8, 0, 5)),
+                                     (4, (2, 2, 2, 2)), (5, (4, 0, 0, 1, 3))])
+def test_ragged_matches_reference(R, sizes):
+    """Distance-keyed ragged exchange: rank m's distance-s segment is
+    origin (m - s) % R's distance-s segment, capacity drops and all."""
+    n = R * max(sizes)
+    rt, world = _runtime(R)
+    cid = rt.register(CollKind.ALL_TO_ALL_RAGGED, world, n_elems=n,
+                      chunk_sizes=sizes)
+    seg = lambda o, s: np.asarray(o * 1000 + s * 10 + np.arange(sizes[s]),
+                                  np.float32)
+    for r in range(R):
+        rt.submit(r, cid, data=np.concatenate(
+            [seg(r, s) for s in range(R)]))
+    rt.drive()
+    for m in range(R):
+        want = np.concatenate([seg((m - s) % R, s) for s in range(R)])
+        np.testing.assert_array_equal(rt.read_output(m, cid), want)
+
+
+# ---------------------------------------------------------------------------
+# composite two-level plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,hier,n", [(4, (2, 2), 16), (8, (2, 4), 32),
+                                      (8, (4, 2), 64), (9, (3, 3), 36)])
+def test_two_level_matches_flat(R, hier, n):
+    rt, world = _runtime(R, max_colls=12, heap_elems=1 << 17)
+    flat = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n)
+    two = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n,
+                      algo="two_level", hierarchy=hier)
+    xs = _inputs(R, n)
+    for r in range(R):
+        rt.submit(r, flat, data=xs[r])
+        rt.submit(r, two, data=xs[r])
+    rt.drive()
+    want = _a2a_ref(xs, R)
+    for m in range(R):
+        np.testing.assert_array_equal(rt.read_output(m, flat), want[m])
+        # Identical OUTPUT LAYOUT is part of the plan contract: callers
+        # may swap algorithms without re-deriving granule offsets.
+        np.testing.assert_array_equal(rt.read_output(m, two), want[m])
+
+
+def test_two_level_plan_validates():
+    with pytest.raises(ValueError, match="divisible"):
+        plan_two_level_alltoall(CollKind.ALL_TO_ALL, range(4), (2, 2), 10)
+    with pytest.raises(ValueError, match="RAGGED"):
+        plan_two_level_alltoall(CollKind.ALL_TO_ALL_RAGGED, range(4),
+                                (2, 2), 16)
+    with pytest.raises(ValueError, match="does not tile"):
+        plan_two_level_alltoall(CollKind.ALL_TO_ALL, range(8), (3, 2), 24)
+
+
+def test_auto_resolves_and_runs():
+    # Exact divisibility: both candidates rankable; selection resolves.
+    got = select_algo("auto", CollKind.ALL_TO_ALL, 64, 8)
+    assert got in ("ring", "two_level")
+    # Indivisible payload: the two-level candidate is unconstructible
+    # and must be DROPPED, not crash selection.
+    assert select_algo("auto", CollKind.ALL_TO_ALL, 60, 8) == "ring"
+    assert select_algo("auto", CollKind.ALL_TO_ALL_RAGGED, 64, 8) == "ring"
+
+    rt, world = _runtime(8, max_colls=12, heap_elems=1 << 17)
+    cid = rt.register(CollKind.ALL_TO_ALL, world, n_elems=64, algo="auto")
+    xs = _inputs(8, 64)
+    for r in range(8):
+        rt.submit(r, cid, data=xs[r])
+    rt.drive()
+    want = _a2a_ref(xs, 8)
+    for m in range(8):
+        np.testing.assert_array_equal(rt.read_output(m, cid), want[m])
+
+
+# ---------------------------------------------------------------------------
+# registration validation
+# ---------------------------------------------------------------------------
+
+def test_registration_validates_contracts():
+    rt, world = _runtime(4)
+    with pytest.raises(ValueError, match="divisible"):
+        rt.register(CollKind.ALL_TO_ALL, world, n_elems=10)
+    with pytest.raises(ValueError, match="ALL_TO_ALL_RAGGED"):
+        rt.register(CollKind.ALL_REDUCE, world, n_elems=8,
+                    chunk_sizes=(2, 2, 2, 2))
+    with pytest.raises(ValueError, match="chunk_sizes"):
+        rt.register(CollKind.ALL_TO_ALL_RAGGED, world, n_elems=8,
+                    chunk_sizes=(2, 2))          # wrong length
+    with pytest.raises(ValueError):
+        rt.register(CollKind.ALL_TO_ALL_RAGGED, world, n_elems=8,
+                    chunk_sizes=(9, 0, 0, 0))    # beyond capacity
+    with pytest.raises(ValueError):
+        rt.register(CollKind.ALL_TO_ALL_RAGGED, world, n_elems=8,
+                    chunk_sizes=(0, 0, 0, 0))    # nothing live
+    with pytest.raises(ValueError, match="composite"):
+        rt.register(CollKind.ALL_TO_ALL_RAGGED, world, n_elems=8,
+                    chunk_sizes=(2, 1, 1, 2), algo="two_level",
+                    hierarchy=(2, 2))
+
+
+# ---------------------------------------------------------------------------
+# deadlock scenario on the new kind
+# ---------------------------------------------------------------------------
+
+def test_chained_conflicting_a2a_orders_complete():
+    """Two all-to-alls submitted in opposite orders by even/odd ranks:
+    the single-FIFO-queue static executor provably wedges on a wait-for
+    cycle, while OCCL drains both with correct personalized payloads."""
+    R, n = 4, 16
+    orders = {r: [0, 1] if r % 2 == 0 else [1, 0] for r in range(R)}
+    static = run_static_order(orders, {c: list(range(R)) for c in (0, 1)})
+    assert static.deadlocked and static.cycle
+
+    rt, world = _runtime(R)
+    ids = [rt.register(CollKind.ALL_TO_ALL, world, n_elems=n)
+           for _ in range(2)]
+    xs = {c: _inputs(R, n, seed=c) for c in (0, 1)}
+    for r in range(R):
+        for c in orders[r]:
+            rt.submit(r, ids[c], data=xs[c][r])
+    rt.drive()
+    for c in (0, 1):
+        want = _a2a_ref(xs[c], R)
+        for m in range(R):
+            np.testing.assert_array_equal(rt.read_output(m, ids[c]),
+                                          want[m])
+
+
+def test_chained_a2a_across_algorithms_and_allreduce():
+    """The MoE shape: a dispatch/combine a2a PAIR interleaved with an
+    all-reduce, submitted in rank-dependent conflicting orders (no
+    consistent static schedule exists), one a2a flat and one two-level —
+    all complete and all land reference-exact."""
+    R, n = 8, 32
+    orders = {r: list(np.random.RandomState(r).permutation(3))
+              for r in range(R)}
+    static = run_static_order(orders, {c: list(range(R)) for c in range(3)})
+    assert static.deadlocked
+
+    rt, world = _runtime(R, max_colls=16, heap_elems=1 << 17)
+    disp = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n)
+    comb = rt.register(CollKind.ALL_TO_ALL, world, n_elems=n,
+                       algo="two_level", hierarchy=(2, 4))
+    ar = rt.register(CollKind.ALL_REDUCE, world, n_elems=n)
+    ids = [disp, comb, ar]
+    xs = {c: _inputs(R, n, seed=10 + c) for c in range(3)}
+    for r in range(R):
+        for c in orders[r]:
+            rt.submit(r, ids[c], data=xs[c][r])
+    rt.drive()
+    for c, cid in ((0, disp), (1, comb)):
+        want = _a2a_ref(xs[c], R)
+        for m in range(R):
+            np.testing.assert_array_equal(rt.read_output(m, cid), want[m])
+    want = np.sum(xs[2], axis=0)
+    for m in range(R):
+        np.testing.assert_allclose(rt.read_output(m, ar), want, rtol=1e-5)

@@ -15,7 +15,11 @@ mutually consistent along the ring:
   scheduling);
 * **flow conservation** — every chunk reaches its destination with
   exactly the right contribution set (all ranks for reductions, the
-  originator for gathers/broadcast).
+  originator for gathers/broadcast, and for the all-to-all kinds the
+  right ORIGIN GRANULE per destination — the personalized-exchange
+  property a bare origin-set check cannot see);
+* **ragged capacity drops** — ALL_TO_ALL_RAGGED end-to-end through the
+  runtime for arbitrary per-distance keep fractions, zeros included.
 
 Skipped when hypothesis is absent (tier-1 containers);
 ``pip install -r requirements-dev.txt`` restores the sweep.
@@ -34,8 +38,23 @@ from repro.core.primitives import (_FLAGS, CollKind, Prim, build_program)
 
 def _simulate(kind: CollKind, R: int, root: int):
     """Dataflow-execute the R per-rank programs over unbounded FIFO
-    connectors, tracking each output chunk's contribution set (the set of
-    ranks whose INPUT was combined into it)."""
+    connectors, tracking each output chunk's contribution set: the set of
+    ``(origin_rank, granule)`` atoms combined into it, where ``granule``
+    is the chunk operand at the step that READ the origin's input.  Atoms
+    (not bare ranks) are what make the all-to-all checkable — a
+    personalized exchange and an all-gather have identical origin SETS
+    per output chunk and differ only in WHICH granule each origin
+    contributed.
+
+    Wire-id policy: for every kind except the flat ALL_TO_ALL the FIFO
+    hands each receiver exactly the chunk id its program names
+    (``wk == k``), relays included.  The flat all-to-all names
+    DESTINATION granules on the wire (SEND and the inert RECV_SEND relay
+    operands both carry the destination id) but ORIGIN granules at the
+    terminal RECV, so there the check is semantic instead: only chunks
+    destined for this very rank are terminally received (``wk == m``)
+    and the payload is exactly the named origin's granule for this
+    destination."""
     progs = [build_program(kind, m, R, root) for m in range(R)]
     pc = [0] * R
     fifo = [collections.deque() for _ in range(R)]  # edge m -> (m+1) % R
@@ -53,14 +72,24 @@ def _simulate(kind: CollKind, R: int, root: int):
                 val: set = set()
                 if recv:
                     wk, wv = fifo[src].popleft()
-                    # Flow matching: the FIFO hands this rank exactly the
-                    # chunk its program expects next.
-                    assert wk == k, (
-                        f"{kind.name} R={R} root={root}: rank {m} step "
-                        f"{pc[m]} expects chunk {k}, wire has {wk}")
+                    if kind == CollKind.ALL_TO_ALL and not send:
+                        assert wk == m, (
+                            f"{kind.name} R={R}: rank {m} terminally "
+                            f"receives a chunk destined for {wk}")
+                        assert wv == frozenset({(k, wk)}), (
+                            f"{kind.name} R={R}: rank {m} RECV {k} "
+                            f"carries {wv}, wants origin {k}'s granule "
+                            f"for {wk}")
+                    else:
+                        # Flow matching: the FIFO hands this rank exactly
+                        # the chunk its program expects next.
+                        assert wk == k, (
+                            f"{kind.name} R={R} root={root}: rank {m} "
+                            f"step {pc[m]} expects chunk {k}, wire has "
+                            f"{wk}")
                     val |= wv
                 if reads:
-                    val.add(m)
+                    val.add((m, k))
                 if copy:
                     out[m][k] = frozenset(val)
                 if send:
@@ -80,30 +109,91 @@ def test_flow_conservation(data):
     R = data.draw(st.integers(1, 9), label="group_size")
     root = data.draw(st.integers(0, R - 1), label="root")
     out = _simulate(kind, R, root)
-    everyone = frozenset(range(R))
+
+    def every(k):
+        return frozenset((r, k) for r in range(R))
 
     if R == 1:
         # Degenerate single-member group: local copy of the own input.
-        assert out[0] == {0: frozenset({0})}
+        assert out[0] == {0: frozenset({(0, 0)})}
         return
     if kind == CollKind.ALL_REDUCE:
         for m in range(R):
-            assert out[m] == {k: everyone for k in range(R)}
+            assert out[m] == {k: every(k) for k in range(R)}
     elif kind == CollKind.ALL_GATHER:
         for m in range(R):
-            assert out[m] == {k: frozenset({k}) for k in range(R)}
+            assert out[m] == {k: frozenset({(k, k)}) for k in range(R)}
     elif kind == CollKind.REDUCE_SCATTER:
         for m in range(R):
             # Rank m finalizes exactly its own chunk, fully reduced.
-            assert out[m] == {m: everyone}
+            assert out[m] == {m: every(m)}
     elif kind == CollKind.BROADCAST:
         for m in range(R):
-            assert out[m] == {k: frozenset({root}) for k in range(R)}
+            assert out[m] == {k: frozenset({(root, k)}) for k in range(R)}
     elif kind == CollKind.REDUCE:
-        assert out[root] == {k: everyone for k in range(R)}
+        assert out[root] == {k: every(k) for k in range(R)}
         for m in range(R):
             if m != root:
                 assert out[m] == {}   # non-roots copy nothing
+    elif kind == CollKind.ALL_TO_ALL:
+        # Personalized exchange, absolute granules: output granule o at
+        # rank m is EXACTLY origin o's input granule destined for m —
+        # same origin set as all-gather, different granule per origin,
+        # which is precisely what the (origin, granule) atoms resolve.
+        for m in range(R):
+            assert out[m] == {o: frozenset({(o, m)}) for o in range(R)}
+    else:
+        assert kind == CollKind.ALL_TO_ALL_RAGGED
+        # Distance-keyed granules: rank m's distance-s granule comes
+        # from origin (m - s) % R, which names it by the SAME distance s
+        # (the rank-independent program contract the shared per-
+        # collective stage maps rely on).
+        for m in range(R):
+            assert out[m] == {s: frozenset({((m - s) % R, s)})
+                              for s in range(R)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_alltoall_ragged_capacity_drops_end_to_end(data):
+    """ALL_TO_ALL_RAGGED through the real runtime for arbitrary
+    per-distance capacity-drop fractions: each distance s keeps
+    ``sizes[s]`` of ``cap`` elements (any fraction from keep-all to
+    drop-all).  Rank m's distance-s output segment must be element-
+    identical to origin ``(m - s) % R``'s distance-s input segment, and
+    dropped capacity must never resurface in any output."""
+    import numpy as np
+
+    from repro.core import CollKind as K, OcclConfig, OcclRuntime
+
+    R = data.draw(st.integers(2, 4), label="ranks")
+    cap = data.draw(st.integers(1, 4), label="capacity")
+    sizes = [data.draw(st.integers(0, cap), label=f"size{s}")
+             for s in range(R)]
+    if sum(sizes) == 0:
+        sizes[0] = 1            # registration requires >= 1 live element
+
+    cfg = OcclConfig(n_ranks=R, max_colls=1, max_comms=1, slice_elems=4,
+                     conn_depth=4, heap_elems=1 << 12)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    cid = rt.register(K.ALL_TO_ALL_RAGGED, comm, n_elems=R * cap,
+                      chunk_sizes=tuple(sizes))
+
+    # Element values encode (origin, distance, index) so any misrouted or
+    # resurfaced element is unambiguously identifiable.
+    def seg(origin, s):
+        return origin * 10000 + s * 100 + np.arange(sizes[s])
+
+    for m in range(R):
+        x = np.concatenate([seg(m, s) for s in range(R)]).astype(np.float32)
+        rt.write_input(m, cid, x)
+        rt.submit(m, cid)
+    rt.drive()
+    for m in range(R):
+        want = np.concatenate([seg((m - s) % R, s)
+                               for s in range(R)]).astype(np.float32)
+        np.testing.assert_array_equal(rt.read_output(m, cid), want)
 
 
 # ---------------------------------------------------------------------------

@@ -28,11 +28,34 @@ def _cfg(**kw):
     return OcclConfig(**base)
 
 
+def _ragged_sizes(n, R):
+    """Per-distance live counts with real capacity drops at odd n."""
+    cl = -(-n // R)
+    return tuple(max(0, cl - 2 * d) for d in range(R))
+
+
+def _register(rt, kind, comm, n, **kw):
+    """Kind-aware registration: the a2a family has contracts the original
+    five kinds don't (exactly-divisible totals; the ragged variant takes
+    explicit per-distance live sizes)."""
+    R = len(comm.members)
+    if kind == CollKind.ALL_TO_ALL:
+        return rt.register(kind, comm, n_elems=n - n % R, **kw)
+    if kind == CollKind.ALL_TO_ALL_RAGGED:
+        return rt.register(kind, comm, n_elems=n,
+                           chunk_sizes=_ragged_sizes(n, R), **kw)
+    return rt.register(kind, comm, n_elems=n, **kw)
+
+
 def _inputs(kind, n, R, seed=0):
     rng = np.random.RandomState(seed)
     chunk = -(-n // R)
     if kind == CollKind.ALL_GATHER:
         return [rng.randn(chunk).astype(np.float32) for _ in range(R)]
+    if kind == CollKind.ALL_TO_ALL:
+        n = n - n % R
+    elif kind == CollKind.ALL_TO_ALL_RAGGED:
+        n = sum(_ragged_sizes(n, R))
     return [rng.randn(n).astype(np.float32) for _ in range(R)]
 
 
@@ -58,7 +81,7 @@ def test_bulk_write_matches_scalar_on_polluted_heap(kind):
     for _ in range(2):
         rt = OcclRuntime(_cfg())
         comm = rt.communicator(list(range(R)))
-        cid = rt.register(kind, comm, n_elems=n)
+        cid = _register(rt, kind, comm, n)
         _pollute(rt)
         rts.append((rt, cid))
 
@@ -95,7 +118,7 @@ def test_bulk_roundtrip_equals_scalar_roundtrip(kind):
     rt_s = OcclRuntime(_cfg())
     rt_b = OcclRuntime(_cfg())
     comms = [rt.communicator(list(range(R))) for rt in (rt_s, rt_b)]
-    cids = [rt.register(kind, comm, n_elems=n)
+    cids = [_register(rt, kind, comm, n)
             for rt, comm in zip((rt_s, rt_b), comms)]
 
     for step in range(3):

@@ -21,13 +21,41 @@ from repro.core import CollKind, OcclConfig, OcclRuntime
 KINDS = list(CollKind)
 
 
+def _ragged_sizes(n, R):
+    """Per-distance live counts with real capacity drops at odd n."""
+    cl = -(-n // R)
+    return tuple(max(0, cl - 2 * d) for d in range(R))
+
+
+def _norm_coll(kind, n, R):
+    """(n_elems, chunk_sizes, logical payload size) honoring the a2a
+    registration contracts (exactly-divisible totals; explicit ragged
+    per-distance sizes) for an arbitrary drawn n."""
+    if kind == CollKind.ALL_TO_ALL:
+        ne = max(R, n - n % R)
+        return ne, None, ne
+    if kind == CollKind.ALL_TO_ALL_RAGGED:
+        sizes = _ragged_sizes(n, R)
+        return n, sizes, sum(sizes)
+    return n, None, n
+
+
+def _payload_n(kind, n, R):
+    if kind == CollKind.ALL_GATHER:
+        return -(-n // R)
+    return _norm_coll(kind, n, R)[2]
+
+
 def _mk_runtime(R, colls):
     cfg = OcclConfig(n_ranks=R, max_colls=max(2, len(colls)), max_comms=1,
                      slice_elems=8, conn_depth=4, heap_elems=1 << 14)
     rt = OcclRuntime(cfg)
     comm = rt.communicator(list(range(R)))
-    ids = [rt.register(kind, comm, n_elems=n, root=root)
-           for kind, n, root in colls]
+    ids = []
+    for kind, n, root in colls:
+        ne, cs, _ = _norm_coll(kind, n, R)
+        ids.append(rt.register(kind, comm, n_elems=ne, root=root,
+                               chunk_sizes=cs))
     return rt, ids
 
 
@@ -52,9 +80,8 @@ def test_bulk_path_equals_scalar_path(data):
     for _ in range(steps):                 # reused heap across steps
         writes = {}
         for (kind, n, root), cs, cb in zip(colls, ids_s, ids_b):
-            chunk = -(-n // R)
-            xs = [rng.randn(chunk if kind == CollKind.ALL_GATHER else n)
-                  .astype(np.float32) for _ in range(R)]
+            pn = _payload_n(kind, n, R)
+            xs = [rng.randn(pn).astype(np.float32) for _ in range(R)]
             for r in range(R):
                 d = xs[root] if kind == CollKind.BROADCAST else xs[r]
                 rt_s.write_input(r, cs, d)
@@ -89,9 +116,8 @@ def test_staged_submit_equals_explicit_write(data):
     seed = data.draw(st.integers(0, 1000), label="seed")
 
     rng = np.random.RandomState(seed)
-    chunk = -(-n // R)
-    xs = [rng.randn(chunk if kind == CollKind.ALL_GATHER else n)
-          .astype(np.float32) for _ in range(R)]
+    xs = [rng.randn(_payload_n(kind, n, R)).astype(np.float32)
+          for _ in range(R)]
 
     outs = []
     for staged in (True, False):
