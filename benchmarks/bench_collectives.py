@@ -267,6 +267,11 @@ RECORD_SECTIONS = {
     # fit, same contract as "algos".
     "alltoall": ("config", "flat", "two_level", "superstep_ratio",
                  "contention", "auto"),
+    # End-to-end training overlap (the tick contract): dense grad-sync
+    # and MoE step records, written by bench_training.run_training_bench
+    # — barrier vs overlapped exposed-superstep counts and the modeled
+    # tokens/sec the check_gates.py overlap gates compare.
+    "training": ("config", "dense", "moe"),
 }
 
 

@@ -42,6 +42,16 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
   may break near-ties either way; picking a genuinely slow algorithm
   is the regression).
 
+* **training** — the tick-contract overlap record
+  (bench_training.run_training_bench): the overlapped dense grad-sync
+  step must beat the barrier-mode step on modeled step time under the
+  bandwidth-skew lane model — equivalently, it must EXPOSE strictly
+  fewer supersteps (hidden supersteps ride behind backward compute);
+  and the MoE stream-sharded path must put strictly fewer supersteps on
+  the per-layer critical path than the full-barrier forward.  Exposed
+  counts are structural (deterministic per config), so these gates are
+  noise-immune.
+
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
 that motivated this script.
@@ -197,6 +207,35 @@ def check(doc: dict) -> list[str]:
                     f">1.15x the best ({p['best_algo']} "
                     f"{p['best_wall_s']*1e3:.1f}ms) — the calibrated "
                     "model is selecting a measurably slow algorithm")
+
+    tr = doc["training"]
+    for label, unit in (("dense", "grad-sync"), ("moe", "MoE")):
+        rec = tr[label]
+        bar, ovl = rec["barrier"], rec["overlap"]
+        print(f"training {label}: exposed supersteps barrier "
+              f"{bar['exposed_supersteps']}, overlap "
+              f"{ovl['exposed_supersteps']} (hidden "
+              f"{ovl['hidden_supersteps']}); modeled tokens/s "
+              f"{bar['tokens_per_s_modeled']:.1f} -> "
+              f"{ovl['tokens_per_s_modeled']:.1f} "
+              f"({rec['modeled_speedup']:.2f}x)")
+        if not ovl["exposed_supersteps"] < bar["exposed_supersteps"]:
+            failures.append(
+                f"{unit} overlap no longer shortens the critical path: "
+                f"{ovl['exposed_supersteps']} exposed supersteps vs "
+                f"barrier-mode {bar['exposed_supersteps']} (gate: "
+                "strictly fewer)")
+        if not (ovl["tokens_per_s_modeled"]
+                > bar["tokens_per_s_modeled"]):
+            failures.append(
+                f"{unit} overlapped step is not faster than barrier "
+                f"mode under the lane model: "
+                f"{ovl['tokens_per_s_modeled']:.1f} vs "
+                f"{bar['tokens_per_s_modeled']:.1f} modeled tokens/s")
+    if not tr["moe"].get("bitwise_vs_barrier", False):
+        failures.append(
+            "MoE overlapped forward diverged from the barrier forward "
+            "(transport must be bit-exact — a routing bug, not numerics)")
     return failures
 
 
@@ -207,7 +246,7 @@ def main(argv: list[str]) -> int:
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
         required=("staging", "contention", "mesh", "hierarchy", "algos",
-                  "alltoall"),
+                  "alltoall", "training"),
         out_path=path)
     failures = check(doc)
     for f in failures:

@@ -7,8 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows (common.row).
 
 ``--quick`` runs a CI-sized smoke (small sizes, 1 iter) that still
 rewrites BENCH_collectives.json — the burst sweep, the adversarial
-contention sweep, the staging record and the mesh fast-path record — so
-the perf record stays reproducible from a cold checkout.  Both modes end
+contention sweep, the staging record, the mesh fast-path record and the
+training overlap record — so the perf record stays reproducible from a
+cold checkout.  Both modes end
 with ``bench_collectives.validate_record()``: a stale or partial record
 (e.g. a missing ``contention`` section) fails the run loudly instead of
 silently passing; section writers replace the file atomically, so a
@@ -59,6 +60,13 @@ def main(quick: bool = False) -> None:
         bench_collectives.run_alltoall_bench(iters=3)
         import calibrate
         calibrate.main()
+        # Training overlap record (tick contract): the dense grad-sync
+        # and MoE barrier-vs-overlap points are REQUIRED sections — the
+        # exposed-superstep gates compare structural counts, so the
+        # full-size workload stays in --quick (iters only trims the
+        # wall-clock side channel).
+        import bench_training
+        bench_training.run_training_bench(iters=1)
         # Fail LOUDLY on a stale/partial record: every section the gates
         # consume must have been (re)written by THIS run — a missing
         # ``contention`` key in a stale BENCH_collectives.json used to
@@ -81,13 +89,14 @@ def main(quick: bool = False) -> None:
     bench_collectives.run_alltoall_bench()
     import calibrate
     calibrate.main()
+    import bench_training
+    bench_training.run_training_bench()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)
     bench_deadlock.run_a2a_chained(iters=2)
     import bench_gang
     bench_gang.run()
-    import bench_training
     bench_training.run()
     # roofline table (from cached dry-run artifacts, if present)
     import roofline

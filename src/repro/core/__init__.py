@@ -12,6 +12,9 @@ from .algos import (AUTO_CANDIDATES, PLAN_BUILDERS, CompositePlan,
                     plan_two_level_alltoall, register_plan, select_algo)
 from .config import OcclConfig, OrderPolicy, ReduceOp
 from .costmodel import CostModel, fit, plan_features
+from .daemon import (TickFlags, build_mesh_tick, build_shardmap_tick,
+                     build_sim_tick, launch_prologue)
+from .device_api import DeviceApi, decode_state, encode_state, encoded_zeros
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
 from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
 from .staging import StagingEngine
@@ -21,6 +24,9 @@ __all__ = [
     "OcclConfig", "OrderPolicy", "ReduceOp",
     "CollKind", "CollectiveSpec", "Communicator", "Prim",
     "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning", "StagingEngine",
+    "TickFlags", "launch_prologue", "build_sim_tick", "build_mesh_tick",
+    "build_shardmap_tick", "DeviceApi", "encode_state", "decode_state",
+    "encoded_zeros",
     "run_static_order", "consistent_order_exists",
     "CompositePlan", "SubCollective", "default_hierarchy",
     "plan_two_level", "plan_torus", "plan_hybrid",

@@ -34,9 +34,11 @@ lets ``auto`` rank flat vs hierarchical a2a without any kind-specific
 feature code.
 
 (α, β, γ) are CALIBRATED PER BACKEND from the measured BENCH history:
-``benchmarks/calibrate.py`` fits a non-negative least squares over the
-``algos`` sweep samples of BENCH_collectives.json (each sample records
-these features next to its measured wall-clock) and persists the fit to
+``benchmarks/calibrate.py`` fits a rank-aware non-negative least squares
+over the ``algos`` sweep samples of BENCH_collectives.json (each sample
+records these features next to its measured wall-clock; support sets
+that invert a measured same-config ordering lose to ones that preserve
+it — see :func:`fit`) and persists the fit to
 ``BENCH_calibration.json`` beside it; :meth:`CostModel.load` is what
 registration-time ``select_algo("auto")`` consults.  With no calibration
 file the conservative :meth:`CostModel.default` is used (α = 1 superstep
@@ -204,17 +206,42 @@ def plan_features(cfg, kind: CollKind, n_elems: int, group_size: int,
 # fitting (benchmarks/calibrate.py drives this)
 # ---------------------------------------------------------------------------
 
+def _rank_violations(pred: np.ndarray, y: np.ndarray,
+                     groups: Sequence[Sequence[int]]) -> int:
+    """Ordered pairs within a group whose measured order the prediction
+    gets wrong (sample i measurably faster than j, predicted >= j)."""
+    viol = 0
+    for idx in groups:
+        for a in idx:
+            for b in idx:
+                if y[a] < y[b] and pred[a] >= pred[b]:
+                    viol += 1
+    return viol
+
+
 def fit(samples: Sequence[dict]) -> CostModel:
-    """Non-negative least squares of measured wall-clock on the three
-    features, weighted by 1/wall (each sample contributes its RELATIVE
-    error, so microsecond-scale and second-scale samples count equally).
+    """Rank-aware non-negative least squares of measured wall-clock on
+    the three features, weighted by 1/wall (each sample contributes its
+    RELATIVE error, so microsecond-scale and second-scale samples count
+    equally).
 
     ``samples``: dicts with ``supersteps``, ``bytes``, ``stages`` and the
-    measured ``wall`` (seconds).  Non-negativity matters: a negative
-    fitted coefficient (possible with few, collinear samples) would let
-    auto rank a plan BETTER for moving more bytes.  With only three
-    regressors the exact active-set search over the 8 sign patterns is
-    cheap and deterministic.
+    measured ``wall`` (seconds); an optional ``tag``
+    (``"<kind>/<size>/<algo>"``) groups samples that competed on the SAME
+    payload/topology.  Non-negativity matters: a negative fitted
+    coefficient (possible with few, collinear samples) would let auto
+    rank a plan BETTER for moving more bytes.  With only three regressors
+    the exact active-set search over the 8 sign patterns is cheap and
+    deterministic.
+
+    Candidate support sets are ranked by (pairwise ranking violations
+    within each tag group, THEN weighted squared error).  The model's
+    only job is selection — picking the measured winner per config —
+    and with few collinear samples the globally error-minimal plane can
+    invert a close small-payload ordering that a slightly-worse-error
+    support set preserves.  Minimizing rank violations first keeps the
+    calibrated ``auto`` on the measured winner; the error term breaks
+    ties among equally-consistent fits.
     """
     pts = [s for s in samples if s.get("wall", 0) > 0]
     if len(pts) < 3:
@@ -224,9 +251,17 @@ def fit(samples: Sequence[dict]) -> CostModel:
     X = np.array([[s["supersteps"], s["bytes"], s["stages"]]
                   for s in pts], float)
     y = np.array([s["wall"] for s in pts], float)
+    # Samples sharing a "<kind>/<size>" tag prefix competed on one
+    # config; untagged samples form no pairs (ranking-neutral).
+    by_cfg: dict = {}
+    for i, s in enumerate(pts):
+        tag = s.get("tag")
+        if tag:
+            by_cfg.setdefault(tag.rsplit("/", 1)[0], []).append(i)
+    groups = [idx for idx in by_cfg.values() if len(idx) > 1]
     w = 1.0 / y
     Xw, yw = X * w[:, None], y * w
-    best, best_err = None, np.inf
+    best, best_key = None, (np.inf, np.inf)
     for mask in range(1, 8):                     # non-empty support sets
         cols = [j for j in range(3) if mask & (1 << j)]
         coef, *_ = np.linalg.lstsq(Xw[:, cols], yw, rcond=None)
@@ -235,8 +270,9 @@ def fit(samples: Sequence[dict]) -> CostModel:
         full = np.zeros(3)
         full[cols] = coef
         err = float(((Xw @ full - yw) ** 2).sum())
-        if err < best_err:
-            best, best_err = full, err
+        key = (_rank_violations(X @ full, y, groups), err)
+        if key < best_key:
+            best, best_key = full, key
     assert best is not None, "all-zero fit is always feasible"
     return CostModel(alpha=float(best[0]), beta=float(best[1]),
                      gamma=float(best[2]), source=f"fit[{len(pts)}]")

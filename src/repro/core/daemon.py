@@ -26,11 +26,41 @@ and active task-queue arrivals are rebased onto the fresh launch clock
 (scheduler.rebase_arrivals).  The superstep budget bounds ``launch_steps``
 — a PER-LAUNCH quantity — so the quit/relaunch cycle can repeat forever;
 the cumulative ``supersteps`` epoch clock is observability-only.
+
+The tick contract (compute-communication overlap)
+-------------------------------------------------
+``tick(state, k)`` is the unit of daemon progress: a PURE, jit-composable
+function advancing up to ``k`` supersteps of the exact loop body above and
+returning ``(state, TickFlags)``.  It is callable from *inside* a traced
+training step — the mailbox fields of :class:`DaemonState` persist
+in-flight wire messages across tick boundaries, so suspending after any
+superstep and resuming later is exactly the voluntary-quit/relaunch cycle
+the paper already requires, at a finer grain.  The contract:
+
+* **Purity.**  ``tick`` closes over static tables only; all dynamic state
+  threads through the ``DaemonState`` argument.  No host callbacks, no
+  side effects — safe under ``jit``, ``lax.while_loop`` and ``custom_vjp``
+  backward passes.
+* **Batching invariance.**  ``tick(st, a)`` then ``tick(st, b)`` is
+  bit-identical to ``tick(st, a + b)`` (the mailbox load/store round trip
+  at the boundary is the identity), so a host ``drive()`` launch and any
+  in-step tick batching produce the SAME superstep/preemption trajectory.
+* **drive() is a thin wrapper.**  A daemon launch IS
+  ``launch_prologue`` + ``tick(superstep_budget + 1)``; the host loop
+  only packs SQEs and reconciles CQEs around it.  ``drive()`` remains the
+  right entry point for host-driven workloads (registration-time payload
+  staging, callbacks, DeadlockTimeout patience); in-step submission uses
+  :mod:`repro.core.device_api`.
+* **Accounting.**  Each tick stamps its supersteps into
+  ``overlap_steps`` or ``barrier_steps`` by its static ``barrier`` flag —
+  barrier ticks are supersteps the step is *blocked* on (drive()/drain),
+  overlap ticks hide behind compute — and ``overlap + barrier ==
+  supersteps`` always.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -202,6 +232,45 @@ def _drained(st: DaemonState) -> jnp.ndarray:
             & ~jnp.any(st.inflight))
 
 
+class TickFlags(NamedTuple):
+    """Progress report of one ``tick(state, k)`` call.
+
+    ``steps`` is how many supersteps actually ran (< k when the launch
+    went not-live first); ``live`` is the fabric-wide continue flag after
+    the tick (False: drained, voluntary quit, or budget — re-run
+    ``launch_prologue`` before ticking again); ``drained`` is True when
+    every rank's submitted work is complete."""
+
+    steps: jnp.ndarray    # [] i32
+    live: jnp.ndarray     # [] bool
+    drained: jnp.ndarray  # [] bool
+
+
+def launch_prologue(st: DaemonState) -> DaemonState:
+    """Pure launch prologue (both backends; shape-generic over the leading
+    rank axis): fresh launch clock + epoch tick + bounded queue-age rebase
+    (see module docstring).  Does NOT touch SQ/CQ cursors — those belong
+    to the submission boundary (sqcq.HostQueues.pack_sq host-side,
+    device_api.device_prologue in-trace)."""
+    st = st._replace(
+        global_live=jnp.ones_like(st.global_live),
+        no_prog=jnp.zeros_like(st.no_prog),
+        launch_steps=jnp.zeros_like(st.launch_steps),
+        epoch=st.epoch + 1,
+    )
+    return rebase_arrivals(st)
+
+
+def _tick_accounting(st: DaemonState, steps: jnp.ndarray,
+                     barrier: bool) -> DaemonState:
+    """Stamp one tick's supersteps into the barrier/overlap split."""
+    if barrier:
+        return st._replace(tick_calls=st.tick_calls + 1,
+                           barrier_steps=st.barrier_steps + steps)
+    return st._replace(tick_calls=st.tick_calls + 1,
+                       overlap_steps=st.overlap_steps + steps)
+
+
 def _relink_edges(t: StaticTables) -> tuple:
     """Static per-edge relink descriptors for the sim daemon.
 
@@ -247,94 +316,141 @@ def _relink_edges(t: StaticTables) -> tuple:
 _SIM_JIT_CACHE: dict = {}
 
 
-def _sim_daemon_jit(cfg: OcclConfig, edges: tuple = ()) -> Callable:
-    key = (cfg, edges)
-    if key in _SIM_JIT_CACHE:
-        return _SIM_JIT_CACHE[key]
+def _edge_plan(edges: tuple) -> list:
+    """Unpack the static relink-edge descriptors (trace-time constants)."""
+    plan = []
+    for c, dst_lo, span, desc in edges:
+        if desc[0] == "slice":
+            plan.append((c, dst_lo, span, desc[1], desc[2], None))
+        else:
+            idx = np.frombuffer(desc[1], dtype=np.int32).copy()
+            plan.append((c, dst_lo, span, None, None,
+                         (jnp.asarray(np.maximum(idx, 0)),
+                          jnp.asarray(idx >= 0))))
+    return plan
+
+
+def _sim_body_fn(cfg: OcclConfig, edges: tuple) -> Callable:
+    """ONE sim superstep: vmapped scheduler + deferred relink + fabric
+    exchange + liveness consensus.  Shared verbatim by ``tick`` and the
+    host daemon — the single definition is what makes tick-mode
+    trajectories bit-identical to drive()-mode."""
+    edge_plan = _edge_plan(edges)
 
     def vstep(sh, lt, st, inbox):
         return jax.vmap(
             functools.partial(rank_superstep, cfg, sh, defer_relink=True),
             in_axes=(0, 0, 0), out_axes=(0, 0))(lt, st, inbox)
 
-    def cond(carry):
-        st = carry[0]
-        return st.global_live[0]
+    def body(sh, lt, fwd_src, rev_src, st, inbox):
+        prev_sc = st.stage_completions
+        st, outbox = vstep(sh, lt, st, inbox)
+        # Deferred chain relink, applied in-body from purely STATIC
+        # slices: under the per-rank vmap a cond predicate is batched
+        # (lowers to a select paying the O(M) hand-off gather every
+        # superstep), and a scalar-predicate cond touching the heap
+        # in this hot body costs a full heap copy per superstep (XLA
+        # loses carry aliasing at the loop back-edge).  Instead each
+        # chain edge rewrites the successor's contiguous input span
+        # with a static-slice + ``where``-select keyed on "did this
+        # rank complete the predecessor this superstep" — a few KB of
+        # vectorized traffic per superstep, no scatter, no cond.
+        if edge_plan:
+            fired = jax.vmap(chain_relink_fired,
+                             in_axes=(None, 0, 0, 0))(
+                sh, lt, prev_sc, st.stage_completions)
+            heap_in, heap_out = st.heap_in, st.heap_out
+            for c, dst_lo, span, src_lo, n, gather in edge_plan:
+                if gather is None:
+                    vals = heap_out[:, src_lo:src_lo + n]
+                    if n < span:            # zero-filled pad tail
+                        vals = jnp.concatenate(
+                            [vals, jnp.zeros((vals.shape[0],
+                                              span - n), vals.dtype)],
+                            axis=1)
+                else:
+                    idx, live = gather
+                    vals = jnp.where(live[None, :],
+                                     heap_out[:, idx], 0)
+                cur = heap_in[:, dst_lo:dst_lo + span]
+                new = jnp.where(fired[:, c][:, None],
+                                vals.astype(cur.dtype), cur)
+                heap_in = heap_in.at[:, dst_lo:dst_lo + span].set(new)
+            st = st._replace(heap_in=heap_in)
+        inbox = _sim_exchange(fwd_src, rev_src, outbox)
+        all_drained = jnp.all(jax.vmap(_drained)(st))
+        quit_now = jnp.min(st.no_prog) >= cfg.quit_threshold
+        over_budget = st.launch_steps[0] >= cfg.superstep_budget
+        live = ~(all_drained | quit_now | over_budget)
+        st = st._replace(
+            global_live=jnp.broadcast_to(live, st.global_live.shape))
+        return st, inbox
 
-    # Unpack the static edge descriptors once (trace-time constants).
-    edge_plan = []
-    for c, dst_lo, span, desc in edges:
-        if desc[0] == "slice":
-            edge_plan.append((c, dst_lo, span, desc[1], desc[2], None))
-        else:
-            idx = np.frombuffer(desc[1], dtype=np.int32).copy()
-            edge_plan.append((c, dst_lo, span, None, None,
-                              (jnp.asarray(np.maximum(idx, 0)),
-                               jnp.asarray(idx >= 0))))
+    return body
+
+
+def _sim_tick_fn(cfg: OcclConfig, edges: tuple, barrier: bool) -> Callable:
+    """tick(sh, lt, fwd_src, rev_src, st, k) -> (st, TickFlags), sim."""
+    superstep = _sim_body_fn(cfg, edges)
+
+    def tick(sh, lt, fwd_src, rev_src, st, k):
+        def cond(carry):
+            st, _, i = carry
+            return st.global_live[0] & (i < k)
+
+        def body(carry):
+            st, inbox, i = carry
+            st, inbox = superstep(sh, lt, fwd_src, rev_src, st, inbox)
+            return st, inbox, i + jnp.int32(1)
+
+        st, inbox, i = jax.lax.while_loop(
+            cond, body, (st, _load_mailbox(st), jnp.int32(0)))
+        st = _tick_accounting(_store_mailbox(st, inbox), i, barrier)
+        flags = TickFlags(steps=i, live=st.global_live[0],
+                          drained=jnp.all(jax.vmap(_drained)(st)))
+        return st, flags
+
+    return tick
+
+
+def _sim_daemon_jit(cfg: OcclConfig, edges: tuple = ()) -> Callable:
+    key = (cfg, edges)
+    if key in _SIM_JIT_CACHE:
+        return _SIM_JIT_CACHE[key]
+
+    tick = _sim_tick_fn(cfg, edges, barrier=True)
 
     @jax.jit
     def daemon(sh: SharedTables, lt: LocalTables, fwd_src, rev_src,
                st: DaemonState) -> DaemonState:
-        def body(carry):
-            st, inbox = carry
-            prev_sc = st.stage_completions
-            st, outbox = vstep(sh, lt, st, inbox)
-            # Deferred chain relink, applied in-body from purely STATIC
-            # slices: under the per-rank vmap a cond predicate is batched
-            # (lowers to a select paying the O(M) hand-off gather every
-            # superstep), and a scalar-predicate cond touching the heap
-            # in this hot body costs a full heap copy per superstep (XLA
-            # loses carry aliasing at the loop back-edge).  Instead each
-            # chain edge rewrites the successor's contiguous input span
-            # with a static-slice + ``where``-select keyed on "did this
-            # rank complete the predecessor this superstep" — a few KB of
-            # vectorized traffic per superstep, no scatter, no cond.
-            if edge_plan:
-                fired = jax.vmap(chain_relink_fired,
-                                 in_axes=(None, 0, 0, 0))(
-                    sh, lt, prev_sc, st.stage_completions)
-                heap_in, heap_out = st.heap_in, st.heap_out
-                for c, dst_lo, span, src_lo, n, gather in edge_plan:
-                    if gather is None:
-                        vals = heap_out[:, src_lo:src_lo + n]
-                        if n < span:            # zero-filled pad tail
-                            vals = jnp.concatenate(
-                                [vals, jnp.zeros((vals.shape[0],
-                                                  span - n), vals.dtype)],
-                                axis=1)
-                    else:
-                        idx, live = gather
-                        vals = jnp.where(live[None, :],
-                                         heap_out[:, idx], 0)
-                    cur = heap_in[:, dst_lo:dst_lo + span]
-                    new = jnp.where(fired[:, c][:, None],
-                                    vals.astype(cur.dtype), cur)
-                    heap_in = heap_in.at[:, dst_lo:dst_lo + span].set(new)
-                st = st._replace(heap_in=heap_in)
-            inbox = _sim_exchange(fwd_src, rev_src, outbox)
-            all_drained = jnp.all(jax.vmap(_drained)(st))
-            quit_now = jnp.min(st.no_prog) >= cfg.quit_threshold
-            over_budget = st.launch_steps[0] >= cfg.superstep_budget
-            live = ~(all_drained | quit_now | over_budget)
-            st = st._replace(
-                global_live=jnp.broadcast_to(live, st.global_live.shape))
-            return st, inbox
+        # A launch IS prologue + one barrier tick.  k = budget + 1 never
+        # binds — the in-body budget check flips ``global_live`` first —
+        # so the trajectory is bit-identical to the pre-tick unbounded
+        # while loop.
+        st, _ = tick(sh, lt, fwd_src, rev_src, launch_prologue(st),
+                     jnp.int32(cfg.superstep_budget + 1))
+        return st
 
-        # Launch prologue: fresh launch clock + epoch tick + bounded
-        # queue-age rebase (see module docstring).
-        st = st._replace(
-            global_live=jnp.ones_like(st.global_live),
-            no_prog=jnp.zeros_like(st.no_prog),
-            launch_steps=jnp.zeros_like(st.launch_steps),
-            epoch=st.epoch + 1,
-        )
-        st = rebase_arrivals(st)
-        inbox = _load_mailbox(st)
-        st, inbox = jax.lax.while_loop(cond, body, (st, inbox))
-        return _store_mailbox(st, inbox)
-
-    _SIM_JIT_CACHE[cfg] = daemon
+    _SIM_JIT_CACHE[key] = daemon
     return daemon
+
+
+def build_sim_tick(cfg: OcclConfig, t: StaticTables,
+                   barrier: bool = False) -> Callable:
+    """Traceable ``tick(state, k) -> (state, TickFlags)``, sim backend
+    (state leaves carry the leading [R] rank axis).
+
+    NOT jitted: compose it inside a jitted training step (see
+    :mod:`repro.core.device_api`) or wrap in ``jax.jit`` for host use.
+    ``barrier`` is a STATIC accounting tag — True means the caller is
+    blocked on this tick (drive()/drain), False means the tick is hidden
+    behind compute; it does not change scheduling."""
+    sh = shared_tables(t)
+    lt = local_tables(t)
+    fwd_src = jnp.asarray(t.fwd_src)
+    rev_src = jnp.asarray(t.rev_src)
+    fn = _sim_tick_fn(cfg, _relink_edges(t), barrier)
+    return lambda st, k: fn(sh, lt, fwd_src, rev_src, st, k)
 
 
 def _load_mailbox(st: DaemonState) -> Mailbox:
@@ -443,14 +559,19 @@ def count_exchange_ppermutes(cfg: OcclConfig, n_comms: int = 1) -> int:
     return _count_primitive(closed.jaxpr, "ppermute")
 
 
-def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
-                      rank_of_device: np.ndarray | None = None) -> Callable:
-    """Per-device daemon body for use inside ``shard_map``.
+def build_mesh_tick(cfg: OcclConfig, t: StaticTables, axis_name: str,
+                    rank_of_device: np.ndarray | None = None,
+                    barrier: bool = False) -> Callable:
+    """Per-device ``tick(state, k) -> (state, TickFlags)`` for use inside
+    ``shard_map``.
 
     ``rank_of_device`` maps the device's linear index along ``axis_name`` to
     its OCCL rank (identity by default).  The returned callable takes and
     returns the per-device DaemonState (no leading rank axis); static
-    tables are indexed by the device's rank via ``lax.axis_index``.
+    tables are indexed by the device's rank via ``lax.axis_index``.  The
+    flags are replicated across devices by construction: ``live`` is the
+    fabric consensus computed inside the body, ``steps`` follows the
+    uniform loop cond, and ``drained`` is an explicit all_gather.
     """
     sh = shared_tables(t)
     lt_all = local_tables(t)  # leading rank axis; gathered per device
@@ -458,17 +579,17 @@ def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
         rank_of_device = np.arange(cfg.n_ranks)
     rod = jnp.asarray(rank_of_device, jnp.int32)
 
-    def daemon(st: DaemonState) -> DaemonState:
+    def tick(st: DaemonState, k) -> tuple[DaemonState, TickFlags]:
         dev = jax.lax.axis_index(axis_name)
         rank = rod[dev]
         lt = jax.tree_util.tree_map(lambda a: a[rank], lt_all)
 
         def cond(carry):
-            st, _ = carry
-            return st.global_live
+            st, _, i = carry
+            return st.global_live & (i < k)
 
         def body(carry):
-            st, inbox = carry
+            st, inbox, i = carry
             st, outbox = rank_superstep(cfg, sh, lt, st, inbox,
                                         cond_relink=cfg.cond_chain_relink)
             inbox = _mesh_exchange(t, outbox, axis_name)
@@ -481,17 +602,52 @@ def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
                                    axis_name))
             over = st.launch_steps >= cfg.superstep_budget
             st = st._replace(global_live=~(drained | stuck | over))
-            return st, inbox
+            return st, inbox, i + jnp.int32(1)
 
-        # Launch prologue (per-device): same clock reset as the sim backend.
-        st = st._replace(
-            global_live=jnp.ones_like(st.global_live),
-            no_prog=jnp.zeros_like(st.no_prog),
-            launch_steps=jnp.zeros_like(st.launch_steps),
-            epoch=st.epoch + 1,
-        )
-        st = rebase_arrivals(st)
-        st, inbox = jax.lax.while_loop(cond, body, (st, _load_mailbox(st)))
-        return _store_mailbox(st, inbox)
+        st, inbox, i = jax.lax.while_loop(
+            cond, body, (st, _load_mailbox(st), jnp.int32(0)))
+        st = _tick_accounting(_store_mailbox(st, inbox), i, barrier)
+        flags = TickFlags(
+            steps=i, live=st.global_live,
+            drained=jnp.all(jax.lax.all_gather(_drained(st), axis_name)))
+        return st, flags
+
+    return tick
+
+
+def build_mesh_daemon(cfg: OcclConfig, t: StaticTables, axis_name: str,
+                      rank_of_device: np.ndarray | None = None) -> Callable:
+    """Per-device daemon body for use inside ``shard_map``: a launch is
+    ``launch_prologue`` + one barrier tick (k = budget + 1 never binds —
+    the in-body budget check flips ``global_live`` first)."""
+    tick = build_mesh_tick(cfg, t, axis_name, rank_of_device, barrier=True)
+
+    def daemon(st: DaemonState) -> DaemonState:
+        st, _ = tick(launch_prologue(st),
+                     jnp.int32(cfg.superstep_budget + 1))
+        return st
 
     return daemon
+
+
+def build_shardmap_tick(cfg: OcclConfig, t: StaticTables, mesh,
+                        axis_name: str = "rank",
+                        rank_of_device: np.ndarray | None = None,
+                        barrier: bool = False) -> Callable:
+    """Traceable ``tick(state, k) -> (state, TickFlags)`` over a real
+    device mesh: state leaves are [R, ...] sharded along ``axis_name``,
+    ``k`` and the returned flags are replicated.  NOT jitted — compose it
+    inside a jitted step or wrap in ``jax.jit`` for host use."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh_tick = build_mesh_tick(cfg, t, axis_name, rank_of_device,
+                                barrier=barrier)
+
+    def per_dev(st_slice: DaemonState, k):
+        st1 = jax.tree_util.tree_map(lambda a: a[0], st_slice)
+        st1, flags = mesh_tick(st1, k)
+        return jax.tree_util.tree_map(lambda a: a[None], st1), flags
+
+    return shard_map(per_dev, mesh=mesh, in_specs=(P(axis_name), P()),
+                     out_specs=(P(axis_name), P()), check_rep=False)

@@ -1,0 +1,247 @@
+"""In-trace submission and progress: the device-side OCCL API.
+
+The host API (:class:`~repro.core.runtime.OcclRuntime`) submits SQEs from
+Python and drives the daemon between jitted programs.  This module is the
+same contract INSIDE a traced step: pure functions over
+:class:`~repro.core.state.DaemonState` that write payloads into the heap,
+append SQEs, advance the daemon by bounded ticks
+(:func:`~repro.core.daemon.build_sim_tick`) and gather results — all
+traceable under ``jit``/``lax.while_loop``/``custom_vjp``, which is what
+lets gradient buckets be submitted mid-backward and MoE expert compute
+start while the dispatch all-to-all tail is still in flight.
+
+Conventions (sim backend; state leaves carry the leading [R] rank axis):
+
+* :meth:`DeviceApi.step_prologue` opens a step: it resets the SQ/CQ
+  cursors (the in-trace analogue of ``HostQueues.pack_sq``) and runs the
+  daemon launch prologue.  Call it ONCE per step — mid-step relaunches
+  after a voluntary quit reuse ``launch_prologue`` only (resetting
+  ``sq_read`` would re-fetch already-consumed SQEs).
+* :meth:`DeviceApi.submit` writes the padded heap span (pads zero-filled)
+  and appends an SQE at ``sq_size`` — so per-step submissions per rank
+  must fit ``cfg.sq_len`` (size the config accordingly; overflow drops
+  the SQE and poisons nothing).
+* :meth:`DeviceApi.tick` auto-relaunches (prologue) when the fabric went
+  not-live with work still pending — the in-trace analogue of drive()'s
+  event-driven restart.
+* ``custom_vjp`` boundaries cannot carry integer/bool pytrees as
+  cotangents (they get ``float0`` tangents); :func:`encode_state` /
+  :func:`decode_state` bitcast the whole state to/from an all-``float32``
+  pytree LOSSLESSLY so a DaemonState can ride a gradient token.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .daemon import (
+    TickFlags,
+    _drained,
+    build_sim_tick,
+    launch_prologue,
+)
+from .state import DaemonState
+
+
+# ---------------------------------------------------------------------------
+# Lossless state <-> float32 encoding (custom_vjp token threading)
+# ---------------------------------------------------------------------------
+def encode_state(st: DaemonState) -> DaemonState:
+    """Bitcast every leaf to ``float32`` (losslessly; same pytree shape).
+
+    i32 and bool (via i32) leaves are bit-pattern casts; 16-bit float
+    heaps widen exactly.  The result is a valid cotangent pytree for a
+    ``custom_vjp`` whose primal output is a same-structure float token.
+    """
+    def enc(a):
+        if a.dtype == jnp.bool_:
+            return jax.lax.bitcast_convert_type(
+                a.astype(jnp.int32), jnp.float32)
+        if a.dtype == jnp.int32:
+            return jax.lax.bitcast_convert_type(a, jnp.float32)
+        if a.dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+            return a.astype(jnp.float32)          # exact widening
+        assert a.dtype == jnp.float32, a.dtype
+        return a
+
+    return jax.tree_util.tree_map(enc, st)
+
+
+def decode_state(enc, like: DaemonState) -> DaemonState:
+    """Inverse of :func:`encode_state`; ``like`` supplies target dtypes."""
+    def dec(a, ref):
+        if ref.dtype == jnp.bool_:
+            return jax.lax.bitcast_convert_type(
+                a, jnp.int32).astype(jnp.bool_)
+        if ref.dtype == jnp.int32:
+            return jax.lax.bitcast_convert_type(a, jnp.int32)
+        if ref.dtype != jnp.float32:
+            return a.astype(ref.dtype)            # exact narrowing back
+        return a
+
+    return jax.tree_util.tree_map(dec, enc, like)
+
+
+def encoded_zeros(like: DaemonState) -> DaemonState:
+    """An all-zero encoded token with the structure encode_state returns
+    (the primal token a custom_vjp forward emits)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), like)
+
+
+class DeviceApi:
+    """Pure in-trace submission/tick/read API over a built sim runtime.
+
+    Construct it AFTER registration closed (first launch or an explicit
+    ``runtime.state`` touch); it snapshots the runtime's static tables,
+    chain routing and heap layout.  All methods are pure state -> state
+    functions safe inside ``jit``; none touch the runtime.  After the
+    step completes on device, hand the final state back to the host with
+    ``runtime.adopt_state(st)`` so host-side reconciliation stays
+    consistent.
+    """
+
+    def __init__(self, rt):
+        rt._ensure_built()
+        if rt.mesh is not None:
+            raise NotImplementedError(
+                "DeviceApi targets the sim backend ([R, ...] state on one "
+                "device); mesh-backend in-step ticks go through "
+                "runtime.tick_fn() + shard_map composition")
+        self.cfg = rt.cfg
+        self._t = rt._tables
+        self._specs = list(rt.specs)
+        self._entry_of = {h: dict(m) for h, m in rt._entry_of.items()}
+        self._rank_tail = {h: dict(m) for h, m in rt._rank_tail.items()}
+        self._tail_of = dict(rt._tail_of)
+        self._tick = build_sim_tick(self.cfg, self._t, barrier=False)
+        self._tick_barrier = build_sim_tick(self.cfg, self._t, barrier=True)
+
+    # -- routing helpers ---------------------------------------------------
+    def _out_cid(self, coll_id: int) -> int:
+        return self._tail_of.get(coll_id, coll_id)
+
+    def out_elems(self, coll_id: int) -> int:
+        return int(self._t.out_log[self._out_cid(coll_id)])
+
+    def in_elems(self, coll_id: int) -> int:
+        return int(self._t.in_log[coll_id])
+
+    # -- step boundary -----------------------------------------------------
+    def step_prologue(self, st: DaemonState) -> DaemonState:
+        """Open a step: clear the SQ/CQ (every cursor and entry — the
+        in-trace ``pack_sq``) and run the daemon launch prologue.  ONCE
+        per step; see module docstring."""
+        st = st._replace(
+            sq_coll=jnp.full_like(st.sq_coll, -1),
+            sq_prio=jnp.zeros_like(st.sq_prio),
+            sq_in=jnp.full_like(st.sq_in, -1),
+            sq_out=jnp.full_like(st.sq_out, -1),
+            sq_size=jnp.zeros_like(st.sq_size),
+            sq_read=jnp.zeros_like(st.sq_read),
+            cq_coll=jnp.full_like(st.cq_coll, -1),
+            cq_count=jnp.zeros_like(st.cq_count),
+        )
+        return launch_prologue(st)
+
+    # -- submission --------------------------------------------------------
+    def submit(self, st: DaemonState, rank: int, coll_id: int,
+               data: jnp.ndarray, prio: int = 0) -> DaemonState:
+        """Stage ``data`` ([in_log[coll_id]], traced) into rank's padded
+        input span and append one SQE (registered buffer offsets; chain
+        submissions are routed to the rank's entry stage exactly like the
+        host path).  ``rank``/``coll_id``/``prio`` are static ints."""
+        t, spec = self._t, self._specs[coll_id]
+        span = int(t.in_span[coll_id])
+        vals = jnp.zeros((span,), st.heap_in.dtype)
+        vals = vals.at[jnp.asarray(t.stage_in_map[coll_id])].set(
+            data.astype(st.heap_in.dtype))
+        lo = spec.in_off
+        st = st._replace(
+            heap_in=st.heap_in.at[rank, lo:lo + span].set(vals))
+        entry = self._entry_of.get(coll_id, {}).get(rank, coll_id)
+        idx = st.sq_size[rank]
+        ok = idx < self.cfg.sq_len
+        slot = jnp.minimum(idx, self.cfg.sq_len - 1)
+        put = lambda a, v: a.at[rank, slot].set(jnp.where(ok, v, a[rank, slot]))
+        return st._replace(
+            sq_coll=put(st.sq_coll, entry),
+            sq_prio=put(st.sq_prio, prio),
+            sq_in=put(st.sq_in, -1),
+            sq_out=put(st.sq_out, -1),
+            sq_size=st.sq_size.at[rank].add(ok.astype(jnp.int32)),
+        )
+
+    def submit_all(self, st: DaemonState, coll_id: int, data: jnp.ndarray,
+                   prio: int = 0) -> DaemonState:
+        """``data`` is [R, in_log[coll_id]]; one submit per member rank."""
+        members = self._specs[coll_id].comm.members
+        for r in members:
+            st = self.submit(st, r, coll_id, data[r], prio=prio)
+        return st
+
+    # -- results -----------------------------------------------------------
+    def read(self, st: DaemonState, rank: int, coll_id: int) -> jnp.ndarray:
+        """Gather rank's logical output ([out_log], traced, heap dtype);
+        composite ids read their chain tail's region."""
+        tcid = self._out_cid(coll_id)
+        lo = self._specs[tcid].out_off
+        return st.heap_out[rank, lo + jnp.asarray(self._t.stage_out_map[tcid])]
+
+    def read_all(self, st: DaemonState, coll_id: int) -> jnp.ndarray:
+        tcid = self._out_cid(coll_id)
+        lo = self._specs[tcid].out_off
+        idx = lo + jnp.asarray(self._t.stage_out_map[tcid])
+        return st.heap_out[:, idx]
+
+    def completed(self, st: DaemonState, coll_id: int) -> jnp.ndarray:
+        """[R] cumulative logical completions of ``coll_id`` (its chain
+        tail) — the gating signal for already-arrived-granule compute."""
+        return st.completed[:, self._out_cid(coll_id)]
+
+    # -- progress ----------------------------------------------------------
+    def _relaunch_if_stalled(self, st: DaemonState) -> DaemonState:
+        """Mid-step event-driven restart: when the fabric went not-live
+        (drain/quit/budget) but work is pending, run the launch prologue
+        — and ONLY the prologue; SQ cursors must survive."""
+        need = ~st.global_live[0] & ~jnp.all(jax.vmap(_drained)(st))
+        return jax.lax.cond(need, launch_prologue, lambda s: s, st)
+
+    def tick(self, st: DaemonState, k,
+             barrier: bool = False) -> tuple[DaemonState, TickFlags]:
+        """Advance up to ``k`` supersteps (auto-relaunching first if the
+        previous tick ended the launch with work still pending).
+        ``barrier`` is the static accounting tag: True when the caller
+        blocks on this tick, False when it hides behind compute."""
+        st = self._relaunch_if_stalled(st)
+        fn = self._tick_barrier if barrier else self._tick
+        return fn(st, k)
+
+    def tick_until(self, st: DaemonState, done_fn: Callable, chunk: int = 8,
+                   max_iters: int = 1024,
+                   barrier: bool = False) -> DaemonState:
+        """Tick in ``chunk``-superstep slices until ``done_fn(state)`` (a
+        traced [] bool) holds or ``max_iters`` slices elapse (bounded so a
+        missing peer submission cannot hang the jitted step)."""
+        def cond(carry):
+            st, it = carry
+            return ~done_fn(st) & (it < max_iters)
+
+        def body(carry):
+            st, it = carry
+            st, _ = self.tick(st, jnp.int32(chunk), barrier=barrier)
+            return st, it + jnp.int32(1)
+
+        st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+        return st
+
+    def drain(self, st: DaemonState, chunk: int = 16,
+              max_iters: int = 1024) -> DaemonState:
+        """Barrier-tick until every rank's submitted work completed — the
+        step's only EXPOSED communication when overlap worked."""
+        return self.tick_until(
+            st, lambda s: jnp.all(jax.vmap(_drained)(s)),
+            chunk=chunk, max_iters=max_iters, barrier=True)

@@ -39,7 +39,8 @@ import numpy as np
 
 from .algos import build_plan, default_hierarchy, select_algo
 from .config import OcclConfig, ReduceOp
-from .daemon import build_sim_daemon
+from .daemon import (build_shardmap_tick, build_sim_daemon, build_sim_tick,
+                     launch_prologue)
 from .primitives import (
     CollKind,
     CollectiveSpec,
@@ -123,6 +124,9 @@ class OcclRuntime:
         self._tables: Optional[StaticTables] = None
         self._staging: Optional[StagingEngine] = None
         self._daemon = None
+        self._tick_fns: dict = {}       # barrier flag -> jitted tick
+        self._prologue_jit = None
+        self._device_api = None
         self._state: Optional[DaemonState] = None
         self.queues = HostQueues(cfg)
         self.launches = 0
@@ -400,6 +404,45 @@ class OcclRuntime:
         return self._state
 
     # ------------------------------------------------------------------
+    # tick surface (compute-communication overlap; daemon.py docstring)
+    # ------------------------------------------------------------------
+    def tick_fn(self, barrier: bool = True) -> Callable:
+        """The backend's jitted ``tick(state, k) -> (state, TickFlags)``
+        over the full [R, ...] state (sharded on the mesh backend).
+        ``barrier`` is the static accounting tag (see daemon.TickFlags).
+        Host-driven tick launches (``launch_once(tick_k=...)``) use the
+        barrier variant; in-step overlap composes the raw builders via
+        :meth:`device_api` instead."""
+        self._ensure_built()
+        fn = self._tick_fns.get(bool(barrier))
+        if fn is None:
+            if self.mesh is None:
+                raw = build_sim_tick(self.cfg, self._tables, barrier=barrier)
+            else:
+                raw = build_shardmap_tick(self.cfg, self._tables, self.mesh,
+                                          self.mesh_axis, barrier=barrier)
+            fn = jax.jit(raw)
+            self._tick_fns[bool(barrier)] = fn
+        return fn
+
+    def device_api(self):
+        """The in-trace submission/tick/read API bound to this runtime's
+        registrations (sim backend; core/device_api.py)."""
+        if self._device_api is None:
+            from .device_api import DeviceApi
+            self._device_api = DeviceApi(self)
+        return self._device_api
+
+    def adopt_state(self, st: DaemonState) -> None:
+        """Install a state produced by in-trace ticks (device_api) as the
+        runtime's current state, syncing the host completion snapshot so
+        a later ``reconcile`` does not re-fire device-side completions."""
+        self._ensure_built()
+        self._state = jax.block_until_ready(st)
+        self.queues._completed_seen = np.asarray(
+            st.completed, dtype=np.int64).copy()
+
+    # ------------------------------------------------------------------
     # data movement (send/recv buffers live in the per-rank heap)
     # ------------------------------------------------------------------
     def _spec(self, coll_id: int) -> CollectiveSpec:
@@ -607,13 +650,30 @@ class OcclRuntime:
             self._state = self._staging.write(self._state, staged,
                                               owned=True)
 
-    def launch_once(self) -> int:
-        """One daemon launch; returns #CQEs drained (may be 0)."""
+    def launch_once(self, tick_k: Optional[int] = None) -> int:
+        """One daemon launch; returns #CQEs drained (may be 0).
+
+        ``tick_k`` switches to the host-driven TICK path: the launch is
+        the jitted prologue plus repeated ``tick(tick_k)`` calls until the
+        fabric goes not-live.  Batching invariance (daemon.py docstring)
+        makes the trajectory bit-identical to the one-shot daemon for any
+        ``tick_k >= 1`` — the tick/drive equivalence tests exercise this.
+        """
         self._ensure_built()
         self._flush_staged()
         prev_slices = int(np.asarray(self._state.slices_moved).sum())
         st = self.queues.pack_sq(self._state)
-        st = self._daemon(st)
+        if tick_k is None:
+            st = self._daemon(st)
+        else:
+            if self._prologue_jit is None:
+                self._prologue_jit = jax.jit(launch_prologue)
+            tick = self.tick_fn(barrier=True)
+            st = self._prologue_jit(st)
+            while True:
+                st, flags = tick(st, jnp.int32(tick_k))
+                if not bool(jax.device_get(flags.live)):
+                    break
         st = jax.block_until_ready(st)
         self.launches += 1
         self._state = st
@@ -627,17 +687,20 @@ class OcclRuntime:
         })
         return fired
 
-    def drive(self, max_launches: int = 64) -> None:
+    def drive(self, max_launches: int = 64,
+              tick_k: Optional[int] = None) -> None:
         """Event-driven daemon restarting: run while #CQE < #SQE (Sec. 3.1.3).
 
         ``max_launches`` bounds CONSECUTIVE launches without progress (no
         completions reconciled and no slices moved), not total launches: a
         workload whose span exceeds ``superstep_budget`` legitimately needs
         many launches, and each one that advances work resets the patience.
+        ``tick_k`` routes every launch through the host-driven tick path
+        (see :meth:`launch_once`).
         """
         idle = 0
         while self.queues.outstanding() != 0:
-            self.launch_once()
+            self.launch_once(tick_k=tick_k)
             rec = self.launch_history[-1]
             if rec["completions"] == 0 and rec["slices_moved"] == 0:
                 idle += 1
@@ -683,6 +746,20 @@ class OcclRuntime:
             "epoch": np.asarray(st.epoch),                # device launch
                                                           # counter
             "slices_moved": np.asarray(st.slices_moved),
+            # Tick/overlap observability (state.py): tick invocations and
+            # the barrier/overlap split of the superstep clock — overlap
+            # supersteps ran hidden behind step compute, barrier
+            # supersteps are exposed (drive()/drain); their sum equals
+            # ``supersteps`` because every superstep runs inside some
+            # tick.  ``rtc_latency[r, c] / rtc_events[r, c]`` is the mean
+            # ready-to-complete latency of collective c on rank r
+            # (supersteps from queue entry to completion); rtc_events
+            # reconciles with stage_completions.
+            "tick_calls": np.asarray(st.tick_calls),            # [R]
+            "overlap_supersteps": np.asarray(st.overlap_steps),  # [R]
+            "barrier_supersteps": np.asarray(st.barrier_steps),  # [R]
+            "rtc_latency": np.asarray(st.rtc_latency),          # [R, C]
+            "rtc_events": np.asarray(st.rtc_events),            # [R, C]
             "cq_count": np.asarray(st.cq_count),          # [R] — may exceed
                                                           # cq_len (ring CQ)
             "burst_slices": self.cfg.burst_slices,

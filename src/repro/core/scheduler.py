@@ -365,6 +365,11 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         boost=st.boost.at[c].set(jnp.where(ok, 0, st.boost[c])),
         qlen_at_fetch=st.qlen_at_fetch.at[c].set(
             jnp.where(ok, qlen, st.qlen_at_fetch[c])),
+        # Ready-to-complete clock: stamp queue entry on the cumulative
+        # supersteps clock (monotonic across launches, so a collective
+        # carried over a relaunch keeps accruing latency).
+        fetch_step=st.fetch_step.at[c].set(
+            jnp.where(ok, st.supersteps, st.fetch_step[c])),
         sq_read=st.sq_read + one,
     )
     return st, ok
@@ -627,6 +632,16 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         completed=st.completed.at[c].add(done_i),
         stage_completions=st.stage_completions.at[c].add(
             coll_done.astype(jnp.int32)),
+        # Ready-to-complete latency on the cumulative supersteps clock:
+        # each completing stage accrues (now - queue-entry stamp); the
+        # event counter reconciles against stage_completions (every
+        # completion is latency-accounted exactly once).  Device-enqueued
+        # chain successors are stamped at THIS superstep — their wait
+        # starts when the predecessor hands off, not at host submit.
+        rtc_latency=st.rtc_latency.at[cd].add(
+            st.supersteps - st.fetch_step[c], mode="drop"),
+        rtc_events=st.rtc_events.at[cd].add(1, mode="drop"),
+        fetch_step=st.fetch_step.at[sc].set(st.supersteps, mode="drop"),
         arrival=st.arrival.at[sc].set(
             cfg.max_colls + st.launch_steps + 1, mode="drop"),
         prio=st.prio.at[sc].set(succ_prio, mode="drop"),

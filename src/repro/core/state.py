@@ -113,6 +113,28 @@ class DaemonState(NamedTuple):
     slices_moved: jnp.ndarray  # [] i32 — work counter (bandwidth accounting)
     global_live: jnp.ndarray   # [] bool — fabric-wide continue flag
 
+    # --- tick/overlap observability (compute-communication overlap) ------
+    # ``tick()`` is the unit of daemon progress since the tickable-daemon
+    # refactor: drive()'s launches and in-step overlap ticks both run the
+    # same loop, tagged by a static barrier/overlap bit.  The invariant
+    # ``overlap_steps + barrier_steps == supersteps`` holds because EVERY
+    # superstep executes inside some tick.  Ready-to-complete latency is
+    # measured on the cumulative ``supersteps`` clock: ``fetch_step[c]``
+    # stamps when c entered the task queue (SQE fetch or device-enqueued
+    # chain successor) and completion accumulates the delta into
+    # ``rtc_latency``; ``rtc_events`` counts the completions accounted
+    # (== stage_completions, asserted by tier-1 tests).
+    fetch_step: jnp.ndarray    # [C] i32 — supersteps stamp at queue entry
+    rtc_latency: jnp.ndarray   # [C] i32 — cumulative ready-to-complete
+                               #   supersteps (sum over completions)
+    rtc_events: jnp.ndarray    # [C] i32 — completions the latency counter
+                               #   accounted (reconciles stage_completions)
+    tick_calls: jnp.ndarray    # [] i32 — tick() invocations
+    overlap_steps: jnp.ndarray # [] i32 — supersteps run by overlap ticks
+                               #   (interleaved with compute in a step)
+    barrier_steps: jnp.ndarray # [] i32 — supersteps run by barrier ticks
+                               #   (drive()/drain: compute is blocked)
+
 
 def init_state(cfg: OcclConfig, per_rank: bool = True,
                sharding=None) -> DaemonState:
@@ -162,6 +184,8 @@ def init_state(cfg: OcclConfig, per_rank: bool = True,
         made_prog_prev=z((), jnp.bool_, False),
         slices_moved=z(()),
         global_live=z((), jnp.bool_, True),
+        fetch_step=z((C,)), rtc_latency=z((C,)), rtc_events=z((C,)),
+        tick_calls=z(()), overlap_steps=z(()), barrier_steps=z(()),
     )
     if per_rank:
         s = s._replace(

@@ -50,12 +50,9 @@ def _capacity(tokens_per_rank: int, top_k: int, n_experts: int,
 # the three per-rank stages (shared verbatim by OCCL path and reference)
 # ---------------------------------------------------------------------------
 
-def _dispatch_local(cfg, params, x, cap: int):
-    """Sort-based capacity dispatch of one rank's tokens: returns the
-    destination-major dispatch buffer ``[E, cap, D]`` (expert-major IS
-    destination-rank-major under the contiguous expert sharding; invalid
-    slots zeroed) plus the (tok_idx, weight) slot metadata the combine
-    needs back at this rank."""
+def _dispatch_local_t(cfg, params, x, cap: int):
+    """Traced core of :func:`_dispatch_local`: returns the [E, cap, D]
+    dispatch buffer plus (tok_idx, weight) slot metadata, all jnp."""
     E, k = cfg.n_experts, cfg.top_k
     Tl = x.shape[0]
     xt = x.astype(jnp.float32)
@@ -76,6 +73,16 @@ def _dispatch_local(cfg, params, x, cap: int):
     tok_idx = jnp.where(valid, sorted_tok[slot_c], 0)      # [E, cap]
     w = jnp.where(valid, sorted_w[slot_c], 0.0)            # [E, cap]
     xe = jnp.where(valid[..., None], xt[tok_idx], 0.0)     # [E, cap, D]
+    return xe, tok_idx, w
+
+
+def _dispatch_local(cfg, params, x, cap: int):
+    """Sort-based capacity dispatch of one rank's tokens: returns the
+    destination-major dispatch buffer ``[E, cap, D]`` (expert-major IS
+    destination-rank-major under the contiguous expert sharding; invalid
+    slots zeroed) plus the (tok_idx, weight) slot metadata the combine
+    needs back at this rank."""
+    xe, tok_idx, w = _dispatch_local_t(cfg, params, x, cap)
     return np.asarray(xe, np.float32).reshape(-1), tok_idx, w
 
 
@@ -95,6 +102,25 @@ def _expert_ffn(params, rank: int, n_ranks: int, recv, epr: int, cap: int,
     ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd)
     ye = ye.reshape(epr, n_ranks, cap, d_model).transpose(1, 0, 2, 3)
     return np.asarray(ye, np.float32).reshape(-1)
+
+
+def _expert_ffn_batched(params, recv, n_ranks: int, epr: int, cap: int,
+                        d_model: int) -> jnp.ndarray:
+    """All owner ranks' expert shards in ONE batched einsum over the
+    received origin-major buffers ``recv`` [R, R * epr * cap * D] —
+    the traced analogue of vmapping :func:`_expert_ffn` over owners.
+    Returns the [R, n] origin-major combine payloads."""
+    R = n_ranks
+    xe = recv.astype(jnp.float32).reshape(R, R, epr, cap, d_model)
+    xe = xe.transpose(0, 2, 1, 3, 4).reshape(R, epr, R * cap, d_model)
+    wg = params["wg"].astype(jnp.float32).reshape(R, epr, d_model, -1)
+    wu = params["wu"].astype(jnp.float32).reshape(R, epr, d_model, -1)
+    wd = params["wd"].astype(jnp.float32).reshape(R, epr, -1, d_model)
+    h = jnp.einsum("recd,redf->recf", xe, wg)
+    u = jnp.einsum("recd,redf->recf", xe, wu)
+    ye = jnp.einsum("recf,refd->recd", jax.nn.silu(h) * u, wd)
+    ye = ye.reshape(R, epr, R, cap, d_model).transpose(0, 2, 1, 3, 4)
+    return ye.reshape(R, -1)
 
 
 def _combine_local(params, x, recv, tok_idx, w) -> jnp.ndarray:
@@ -161,7 +187,20 @@ class OcclMoE:
 
     def __init__(self, cfg, n_ranks: int, tokens_per_rank: int,
                  cap: Optional[int] = None, algo: str = "ring",
-                 hierarchy: Optional[tuple] = None, slice_elems: int = 128):
+                 hierarchy: Optional[tuple] = None, slice_elems: int = 128,
+                 n_streams: int = 1, overlap_ticks: int = 4):
+        """``n_streams=S`` additionally registers S stream-sharded
+        dispatch and S combine all-to-alls (the capacity axis split into
+        S independent exchanges of ``E * cap/S * D`` elements — each
+        shard is itself a legal personalized exchange because expert-
+        major stays destination-rank-major) for
+        :meth:`forward_overlapped`: expert FFN compute on shard s starts
+        while the dispatch tails of shards > s are still in flight, and
+        shard s's combine is submitted as its outputs finish rather than
+        behind a full-layer barrier.  Stream shards always ride the flat
+        ring (``algo`` applies to the barrier-path pair).
+        ``overlap_ticks`` is the overlap budget spent after each in-step
+        submission."""
         E, D = cfg.n_experts, cfg.d_model
         assert E % n_ranks == 0, (
             f"expert-parallel layout needs n_experts % n_ranks == 0 "
@@ -171,12 +210,17 @@ class OcclMoE:
         self.epr = E // n_ranks
         self.cap = cap or _capacity(tokens_per_rank, cfg.top_k, E,
                                     cfg.capacity_factor)
+        assert n_streams >= 1 and self.cap % n_streams == 0, (
+            f"n_streams={n_streams} must divide the capacity "
+            f"(cap={self.cap}; it is always a multiple of 4)")
+        self.n_streams = n_streams
+        self.overlap_ticks = overlap_ticks
         n = E * self.cap * D
         self.n_elems = n
         composite = hierarchy is not None or algo == "auto"
         self.occl = OcclRuntime(OcclConfig(
             n_ranks=n_ranks,
-            max_colls=8,
+            max_colls=max(8, 2 * (1 + n_streams) + (8 if composite else 0)),
             max_comms=4 if composite else 1,
             slice_elems=slice_elems,
             conn_depth=8,
@@ -190,6 +234,16 @@ class OcclMoE:
         self.comb_id = self.occl.register(
             CollKind.ALL_TO_ALL, comm, n_elems=n, algo=algo,
             hierarchy=hierarchy)
+        cap_s = self.cap // n_streams
+        self.disp_stream_ids = [
+            self.occl.register(CollKind.ALL_TO_ALL, comm,
+                               n_elems=E * cap_s * D, algo="ring")
+            for _ in range(n_streams)]
+        self.comb_stream_ids = [
+            self.occl.register(CollKind.ALL_TO_ALL, comm,
+                               n_elems=E * cap_s * D, algo="ring")
+            for _ in range(n_streams)]
+        self._overlap_jit = None
 
     def forward(self, params, xs: Sequence) -> list:
         """xs: one [T_l, D] local token matrix per rank -> one [T_l, D]
@@ -217,6 +271,74 @@ class OcclMoE:
             [(r, self.comb_id) for r in range(self.R)])
         return [_combine_local(params, xs[r], back[(r, self.comb_id)],
                                *meta[r]) for r in range(self.R)]
+
+    # ------------------------------------------------------------------
+    # overlapped path: stream-sharded dispatch/combine inside ONE jitted
+    # program (tick contract; core/daemon.py and core/device_api.py)
+    # ------------------------------------------------------------------
+    def _build_overlap_core(self):
+        api = self.occl.device_api()
+        cfg, R, S = self.cfg, self.R, self.n_streams
+        cap, epr, D = self.cap, self.epr, cfg.d_model
+        cap_s = cap // S
+        E = cfg.n_experts
+        disp_ids, comb_ids = self.disp_stream_ids, self.comb_stream_ids
+        k_over = self.overlap_ticks
+
+        def core(st, params, xs):          # xs: [R, T_l, D]
+            st = api.step_prologue(st)
+            base = [api.completed(st, c) for c in disp_ids]
+            xe, tok_idx, w = jax.vmap(
+                lambda x: _dispatch_local_t(cfg, params, x, cap))(xs)
+            # Submit every dispatch shard up front (rising stream
+            # priority), spending a bounded overlap tick after each —
+            # later shards' staging hides earlier shards' supersteps.
+            for s in range(S):
+                shard = xe[:, :, s * cap_s:(s + 1) * cap_s, :].reshape(R, -1)
+                st = api.submit_all(st, disp_ids[s], shard, prio=s)
+                st, _ = api.tick(st, jnp.int32(k_over), barrier=False)
+            for s in range(S):
+                # Exposed wait: only until THIS shard's granules arrived
+                # — the dispatch tails of shards > s keep flying while
+                # shard s's expert FFN runs below.
+                cid, tgt = disp_ids[s], base[s] + 1
+                st = api.tick_until(
+                    st, lambda t: jnp.all(api.completed(t, cid) >= tgt),
+                    chunk=8, barrier=True)
+                recv = api.read_all(st, disp_ids[s])
+                ys = _expert_ffn_batched(params, recv, R, epr, cap_s, D)
+                # Combine submitted per shard as its outputs finish (no
+                # full-layer barrier), then another hidden tick.
+                st = api.submit_all(st, comb_ids[s], ys, prio=S + s)
+                st, _ = api.tick(st, jnp.int32(k_over), barrier=False)
+            st = api.drain(st)
+            back = jnp.concatenate(
+                [api.read_all(st, comb_ids[s]).reshape(R, E, cap_s, D)
+                 for s in range(S)], axis=2)    # [R, E, cap, D]
+            y = jax.vmap(
+                lambda x, rv, ti, ww: _combine_local(
+                    params, x, rv.reshape(-1), ti, ww))(
+                xs, back, tok_idx, w)
+            return st, y
+
+        return jax.jit(core, donate_argnums=0)
+
+    def forward_overlapped(self, params, xs: Sequence) -> list:
+        """The overlap-mode :meth:`forward`: one jitted program doing
+        dispatch -> per-shard (wait, FFN, combine-submit) -> drain, with
+        daemon ticks interleaved so only the per-shard arrival waits and
+        the final drain are EXPOSED supersteps (``stats()``'s
+        barrier/overlap split measures it).  Matches
+        :func:`ep_forward_ref` numerically; with ``n_streams=1`` the
+        exchanges are the same full-capacity payloads bit for bit."""
+        assert len(xs) == self.R
+        if self._overlap_jit is None:
+            self._overlap_jit = self._build_overlap_core()
+        params_j = jax.tree_util.tree_map(jnp.asarray, dict(params))
+        xs_arr = jnp.stack([jnp.asarray(x) for x in xs])
+        st, y = self._overlap_jit(self.occl.state, params_j, xs_arr)
+        self.occl.adopt_state(st)
+        return [y[r] for r in range(self.R)]
 
     def stats(self):
         return self.occl.stats()

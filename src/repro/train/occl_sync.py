@@ -43,13 +43,23 @@ class OcclGradSync:
                  bucket_elems: int = 4096, slice_elems: int = 256,
                  priority_preempts: bool = False,
                  compress_wire: bool = False,
-                 hierarchy: tuple | None = None):
+                 hierarchy: tuple | None = None,
+                 burst_slices: int = 1,
+                 bandwidth_groups: int = 0,
+                 intra_burst_cap: int = 0,
+                 inter_burst_cap: int = 0):
         """``hierarchy=(G, N)`` routes every bucket through the composite
         two-level all-reduce (intra-group reduce-scatter -> inter-group
         all-reduce -> intra-group all-gather over the G x N rank grid,
         chained on device) instead of the flat ring — the node-aware
         topology of real fleets, where N is the intra-node (fast-domain)
-        size.  Requires G * N == n_ranks."""
+        size.  Requires G * N == n_ranks.
+
+        ``burst_slices``/``bandwidth_groups``/``intra_burst_cap``/
+        ``inter_burst_cap`` forward the bandwidth-skew lane model
+        (config.py) into the grad-sync runtime — the setting the overlap
+        perf gate measures under (skewed lanes need ``burst_slices > 1``
+        for the caps to differentiate intra/inter traffic)."""
         leaves = jax.tree_util.tree_leaves(grads_template)
         self.treedef = jax.tree_util.tree_structure(grads_template)
         self.shapes = [l.shape for l in leaves]
@@ -90,13 +100,21 @@ class OcclGradSync:
             max_colls=max(8, n_colls),
             max_comms=2 if hierarchy is not None else 1,
             slice_elems=slice_elems,
-            conn_depth=8,
+            conn_depth=max(8, 3 * burst_slices),
+            burst_slices=burst_slices,
             heap_elems=max(1 << 14, 4 * heap)
                        * (2 if hierarchy is not None else 1),
+            # In-step submission appends one SQE per bucket per rank into
+            # the device SQ (no host pack_sq between them) — the SQ must
+            # hold a whole step's buckets.
+            sq_len=max(64, len(buckets) + 4),
             order_policy=OrderPolicy.PRIORITY,
             priority_preempts=priority_preempts,
             superstep_budget=1 << 16,
             dtype="bfloat16" if compress_wire else "float32",
+            bandwidth_groups=bandwidth_groups,
+            intra_burst_cap=intra_burst_cap,
+            inter_burst_cap=inter_burst_cap,
         ))
         comm = (self.occl.communicator(list(range(n_ranks)))
                 if hierarchy is None
@@ -116,6 +134,24 @@ class OcclGradSync:
         if self.compress_wire:
             out = np.asarray(jnp.asarray(out, jnp.bfloat16))
         return out
+
+    # -- overlap-mode helpers (train/step.py custom_vjp boundaries) -------
+    def device_api(self):
+        """The runtime's in-trace submission/tick API (core/device_api.py)
+        bound to this sync's bucket registrations."""
+        return self.occl.device_api()
+
+    def unflatten(self, flats_by_bucket: Sequence) -> object:
+        """Rebuild one rank's gradient pytree from per-bucket flat traced
+        arrays (already averaged), in bucket-index order."""
+        leaves = [None] * len(self.shapes)
+        for b, flat in zip(self.buckets, flats_by_bucket):
+            off = 0
+            for i, n in zip(b.leaf_ids, b.sizes):
+                leaves[i] = flat[off:off + n].reshape(
+                    self.shapes[i]).astype(self.dtypes[i])
+                off += n
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
     def all_reduce(self, per_rank_grads: Sequence) -> list:
         """Average gradients across ranks via OCCL collectives.

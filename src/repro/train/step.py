@@ -7,6 +7,37 @@ Gradient synchronization is the OCCL integration point: with
 (the paper's "statically sequenced NCCL" baseline); ``grad_sync="occl"``
 routes bucketed gradients through the OCCL runtime between the backward
 and optimizer phases (host-driven, see train/occl_sync.py).
+
+Overlapped grad sync (the tick contract inside a training step)
+----------------------------------------------------------------
+``make_overlap_grads_step`` moves grad sync INSIDE the jitted step:
+``custom_vjp`` identity boundaries wrap each gradient bucket's parameter
+leaves, so their backward rules fire during the backward pass exactly
+when that bucket's gradient cotangents materialize — each boundary
+submits the bucket in-trace (core/device_api.py) and advances the daemon
+by a bounded OVERLAP ``tick(state, k)`` (core/daemon.py docstring), so
+all-reduce supersteps hide behind the remaining backward work instead of
+trailing it as a barrier.  Mechanics worth knowing:
+
+* The DaemonState rides the autodiff graph as a TOKEN: integer/bool
+  state leaves cannot be cotangents (``float0``), so the state is
+  bitcast losslessly to an all-float32 pytree (``encode_state``) and
+  seeded as the token output's cotangent; each boundary decodes,
+  submits+ticks, re-encodes.  The token THREADS the boundaries in
+  bucket-major order, pinning the backward submission sequence.
+* Everything stays pure: submission is a heap scatter + SQE append on
+  the state, progress is ``tick`` — the step remains one XLA program,
+  which is also where the measured win over host-driven drive() comes
+  from (no per-phase host round trips).
+* After the pullback, the step drains with BARRIER ticks (the only
+  exposed communication when overlap worked) and reads the reduced
+  buckets in-trace.  ``stats()`` splits the superstep clock into
+  overlap vs barrier supersteps to make that visible.
+* ``drive()`` remains the right entry point for host-driven workloads
+  (registration-time payload staging, callbacks, DeadlockTimeout
+  patience); the caller of an overlapped step must hand the final state
+  back via ``runtime.adopt_state`` to keep host reconciliation
+  consistent.
 """
 from __future__ import annotations
 
@@ -17,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core.device_api import decode_state, encode_state, encoded_zeros
 from ..models import build_model
 from ..optim.adamw import AdamWConfig, adamw_update
 from .state import TrainState
@@ -47,6 +79,105 @@ def make_grads_step(cfg: ArchConfig) -> Callable:
         return loss.astype(jnp.float32), grads
 
     return grads_step
+
+
+def make_overlap_grads_step(cfg: ArchConfig, sync,
+                            ticks_per_boundary: int = 4) -> Callable:
+    """Backward pass with IN-STEP bucketized grad sync (module docstring).
+
+    ``sync`` is an :class:`~repro.train.occl_sync.OcclGradSync`; the
+    returned function
+
+        ``step(st, per_rank_params, per_rank_batch)
+            -> (st, losses[R], grads_list)``
+
+    is pure and jit-able: ``st`` is the runtime's DaemonState, the grads
+    come back averaged (bit-comparable to ``sync.all_reduce``), and the
+    caller re-installs the final state with
+    ``sync.occl.adopt_state(st)``.  ``ticks_per_boundary`` is the
+    overlap budget spent after each bucket submission — supersteps that
+    hide behind the remaining backward work.
+    """
+    model = build_model(cfg)
+    api = sync.device_api()
+    R = sync.n_ranks
+    buckets = sync.buckets
+    tmpl = sync.occl.state
+
+    def _attach(rank: int, bidx: int):
+        """Identity on (token, bucket_leaves) whose bwd submits the
+        bucket's gradient and runs one overlap tick."""
+        cid = buckets[bidx].coll_id
+
+        @jax.custom_vjp
+        def attach(token, leaves):
+            return token, leaves
+
+        def fwd(token, leaves):
+            return (token, leaves), None
+
+        def bwd(_, ct):
+            dtoken, dleaves = ct
+            st = decode_state(dtoken, tmpl)
+            flat = jnp.concatenate(
+                [jnp.ravel(d).astype(jnp.float32) for d in dleaves])
+            st = api.submit(st, rank, cid, flat, prio=bidx)
+            st, _ = api.tick(st, jnp.int32(ticks_per_boundary),
+                             barrier=False)
+            return encode_state(st), dleaves
+
+        attach.defvjp(fwd, bwd)
+        return attach
+
+    def step(st, per_rank_params, per_rank_batch):
+        st = api.step_prologue(st)
+
+        def f(params_list, token):
+            flats, defs = [], []
+            for p in params_list:
+                leaves, d = jax.tree_util.tree_flatten(p)
+                flats.append(list(leaves))
+                defs.append(d)
+            # Token threading order pins the BACKWARD submission order
+            # (the jaxpr transposes in reverse trace order): wrapping
+            # bucket NB-1 .. 0 here makes backward submit bucket 0 —
+            # the last layers' gradients, first ready in backward —
+            # across all ranks, then bucket 1, etc., with overlap ticks
+            # between every submission.
+            for bidx in reversed(range(len(buckets))):
+                b = buckets[bidx]
+                for r in range(R):
+                    bl = tuple(flats[r][i] for i in b.leaf_ids)
+                    token, bl = _attach(r, bidx)(token, bl)
+                    for i, leaf in zip(b.leaf_ids, bl):
+                        flats[r][i] = leaf
+            losses = [
+                model.loss_fn(
+                    jax.tree_util.tree_unflatten(defs[r], flats[r]),
+                    per_rank_batch[r])
+                for r in range(R)
+            ]
+            total = sum(l.astype(jnp.float32) for l in losses)
+            return (total, token), jnp.stack(losses)
+
+        (_, _), pull, losses = jax.vjp(
+            f, list(per_rank_params), encoded_zeros(tmpl), has_aux=True)
+        # Seed: d(total)=1 makes the bucket cotangents real gradients;
+        # the token-output cotangent carries the REAL post-prologue state
+        # into the boundary chain.
+        _, dtoken = pull((jnp.float32(1.0), encode_state(st)))
+        st = decode_state(dtoken, tmpl)
+        st = api.drain(st)
+        grads = []
+        for r in range(R):
+            flats_r = [
+                api.read(st, r, b.coll_id).astype(jnp.float32) / R
+                for b in buckets
+            ]
+            grads.append(sync.unflatten(flats_r))
+        return st, losses, grads
+
+    return step
 
 
 def make_apply_step(cfg: ArchConfig,

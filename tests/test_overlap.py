@@ -1,0 +1,171 @@
+"""The tick contract (core/daemon.py): drive() and in-step ticks are the
+SAME machine.
+
+* ``drive()`` (one budget-bounded launch), ``drive(tick_k=1)`` (one
+  superstep per host call) and ``drive(tick_k=7)`` (batched ticks) must
+  produce BIT-IDENTICAL outputs and the IDENTICAL superstep/preempt
+  trajectory for every collective kind — including device-chained
+  composites and the ragged all-to-all.  The launch prologue + in-body
+  budget check make the host-chosen ``k`` unobservable.
+* The tick observability counters (state.py) must reconcile exactly:
+  ``overlap_supersteps + barrier_supersteps == supersteps`` (every
+  superstep runs inside some tick) and ``rtc_events`` matches
+  ``stage_completions`` (every completion was latency-stamped).
+* Deadlock freedom survives the move INSIDE a jitted step: conflicting
+  chained submission orders that provably wedge the static baseline
+  complete when driven entirely by in-step DeviceApi submits + bounded
+  ticks (no host drive() at all).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime, OrderPolicy,
+                        run_static_order)
+
+R = 4
+TRAJ_KEYS = ("supersteps", "preempts", "stage_completions", "completed",
+             "launch_steps", "stall_slices", "slices_moved")
+
+
+def _mixed_runtime():
+    """One runtime exercising EVERY collective kind plus a chained
+    two-level composite and a ragged a2a, submitted in conflicting
+    per-rank orders."""
+    cfg = OcclConfig(n_ranks=R, max_colls=12, max_comms=3, slice_elems=4,
+                     conn_depth=4, heap_elems=1 << 15,
+                     order_policy=OrderPolicy.FIFO,
+                     superstep_budget=1 << 14, quit_threshold=64)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    rng = np.random.RandomState(11)
+    specs = [
+        (CollKind.ALL_REDUCE, dict(n_elems=24)),
+        (CollKind.ALL_GATHER, dict(n_elems=16)),
+        (CollKind.REDUCE_SCATTER, dict(n_elems=16)),
+        (CollKind.BROADCAST, dict(n_elems=12, root=1)),
+        (CollKind.REDUCE, dict(n_elems=12, root=2)),
+        (CollKind.ALL_TO_ALL, dict(n_elems=16)),
+        (CollKind.ALL_TO_ALL_RAGGED, dict(n_elems=12,
+                                          chunk_sizes=(2, 1, 0, 3))),
+        (CollKind.ALL_REDUCE, dict(n_elems=20, algo="two_level",
+                                   hierarchy=(2, 2))),
+    ]
+    ids, kinds = [], []
+    for kind, kw in specs:
+        ids.append(rt.register(kind, comm, **kw))
+        kinds.append(kind)
+    for r in range(R):
+        order = list(np.roll(np.arange(len(ids)), r))  # pairwise-conflicting
+        for slot in order:
+            cid, kind = ids[slot], kinds[slot]
+            if kind == CollKind.ALL_GATHER:
+                data = rng.randn(specs[slot][1]["n_elems"] // R)
+            elif kind == CollKind.ALL_TO_ALL_RAGGED:
+                data = rng.randn(sum(specs[slot][1]["chunk_sizes"]))
+            elif kind == CollKind.BROADCAST:
+                if r != specs[slot][1]["root"]:
+                    rt.submit(r, cid)
+                    continue
+                data = rng.randn(specs[slot][1]["n_elems"])
+            else:
+                data = rng.randn(specs[slot][1]["n_elems"])
+            rt.submit(r, cid, data=data.astype(np.float32))
+    return rt, ids
+
+
+def _run_mode(tick_k):
+    rt, ids = _mixed_runtime()
+    rt.drive(max_launches=8, tick_k=tick_k)
+    outs = {(r, cid): np.asarray(rt.read_output(r, cid))
+            for cid in ids for r in range(R)}
+    st = rt.stats()
+    traj = {k: np.asarray(st[k]).copy() for k in TRAJ_KEYS}
+    return outs, traj, st
+
+
+@pytest.fixture(scope="module")
+def drive_baseline():
+    return _run_mode(None)
+
+
+@pytest.mark.parametrize("tick_k", [1, 7])
+def test_tick_mode_bit_identical_to_drive(drive_baseline, tick_k):
+    """Outputs AND trajectory: batching ticks must be unobservable."""
+    outs0, traj0, _ = drive_baseline
+    outs, traj, _ = _run_mode(tick_k)
+    assert outs.keys() == outs0.keys()
+    for key in outs0:
+        np.testing.assert_array_equal(outs[key], outs0[key], err_msg=str(key))
+    for k in TRAJ_KEYS:
+        np.testing.assert_array_equal(traj[k], traj0[k], err_msg=k)
+
+
+def test_counters_reconcile_with_stage_completions(drive_baseline):
+    """overlap + barrier == supersteps; rtc_events == stage_completions
+    (chain intermediates included); mean ready-to-complete latency is
+    finite and positive wherever something completed."""
+    _, _, st = drive_baseline
+    np.testing.assert_array_equal(
+        st["overlap_supersteps"] + st["barrier_supersteps"],
+        st["supersteps"])
+    np.testing.assert_array_equal(st["rtc_events"], st["stage_completions"])
+    assert int(st["tick_calls"].max()) >= 1
+    done = st["rtc_events"] > 0
+    assert np.all(st["rtc_latency"][done] > 0)
+    # drive() is all-barrier: nothing claimed to overlap host compute
+    assert int(st["overlap_supersteps"].max()) == 0
+
+
+def test_in_step_ticks_survive_conflicting_chained_orders():
+    """Two device-chained two-level all-reduces, submitted in opposite
+    per-rank orders ENTIRELY inside one jitted step (DeviceApi submits +
+    bounded overlap ticks, then a drain) — the static baseline provably
+    wedges on these orders; the tick-driven daemon completes them with
+    correct sums."""
+    orders = {0: [0, 1], 1: [1, 0], 2: [0, 1], 3: [1, 0]}
+    members = {0: list(range(R)), 1: list(range(R))}
+    static = run_static_order(orders, members)
+    assert static.deadlocked and static.cycle
+
+    cfg = OcclConfig(n_ranks=R, max_colls=8, max_comms=3, slice_elems=4,
+                     conn_depth=3, heap_elems=1 << 14,
+                     order_policy=OrderPolicy.FIFO,
+                     superstep_budget=1 << 14, quit_threshold=64)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(list(range(R)))
+    ids = [rt.register(CollKind.ALL_REDUCE, comm, n_elems=16,
+                       algo="two_level", hierarchy=(2, 2))
+           for _ in range(2)]
+    api = rt.device_api()
+    rng = np.random.RandomState(3)
+    xs = rng.randn(2, R, 16).astype(np.float32)
+
+    @jax.jit
+    def step(st, payloads):
+        st = api.step_prologue(st)
+        for r in range(R):
+            for slot in orders[r]:
+                st = api.submit(st, r, ids[slot], payloads[slot, r],
+                                prio=slot)
+                st, _ = api.tick(st, jnp.int32(3), barrier=False)
+        st = api.drain(st)
+        return st, jnp.stack([api.read_all(st, cid) for cid in ids])
+
+    st, outs = step(rt.state, jnp.asarray(xs))
+    rt.adopt_state(st)
+    for slot in range(2):
+        want = xs[slot].sum(axis=0)
+        for r in range(R):
+            np.testing.assert_allclose(np.asarray(outs[slot, r]), want,
+                                       rtol=1e-4, atol=1e-5)
+    # both chains logically completed on every rank, and some supersteps
+    # genuinely ran hidden inside the in-step overlap ticks
+    for cid in ids:
+        assert np.all(np.asarray(api.completed(st, cid)) >= 1)
+    stats = rt.stats()
+    np.testing.assert_array_equal(
+        stats["overlap_supersteps"] + stats["barrier_supersteps"],
+        stats["supersteps"])
+    assert int(stats["overlap_supersteps"].max()) > 0
