@@ -272,6 +272,11 @@ RECORD_SECTIONS = {
     # — barrier vs overlapped exposed-superstep counts and the modeled
     # tokens/sec the check_gates.py overlap gates compare.
     "training": ("config", "dense", "moe"),
+    # Reliability: eviction shrink-vs-fresh supersteps and bit-equality,
+    # plus flight-recorder burst-sweep overhead — written by
+    # bench_reliability.run_reliability_bench, gated in check_gates.py
+    # (evicted <= fresh supersteps; recorder overhead <= 5%).
+    "reliability": ("evict", "recorder"),
 }
 
 

@@ -1,0 +1,170 @@
+"""Reliability record: eviction efficiency + flight-recorder overhead.
+
+Two sub-records under ``record["reliability"]`` (BENCH_collectives.json),
+both gated by benchmarks/check_gates.py:
+
+* **evict** — the ISSUE acceptance scenario: an R=8 grad-sync-shaped
+  round wedges because one rank dies mid-step; ``runtime.evict(dead)``
+  drains, rebuilds for R-1 and replays the survivors' staged
+  submissions.  The record compares the post-evict cumulative
+  supersteps against a FRESH R-1 runtime driving the identical
+  survivor workload — eviction must complete the round in **no more
+  supersteps** than the fresh runtime (the replay is the same schedule,
+  so parity is the expected number; more means the rebuild is leaking
+  work), and the outputs must be **bit-identical** (same op order ->
+  same floats).
+* **recorder** — flight-recorder overhead on the burst-sweep workload
+  (bench_collectives.run_burst_sweep's shape): supersteps/sec with
+  ``flight_recorder=True`` vs ``False``; the gate bounds
+  ``overhead_frac`` at 5%.  Best-of-N wall timing on both sides — the
+  recorder's cost is a handful of in-jit scatter ops per superstep, and
+  min-of-N is the noise-robust estimator for a fixed workload.
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+import bench_collectives as bc
+from common import row
+from repro.core import CollKind, OcclConfig, OcclRuntime
+
+BENCH_JSON = bc.BENCH_JSON
+
+
+# ---------------------------------------------------------------------------
+# evict: shrink-vs-fresh supersteps + bit-equality
+# ---------------------------------------------------------------------------
+def _grad_round(R, C, n):
+    cfg = OcclConfig(n_ranks=R, max_colls=C + 2, max_comms=1,
+                     slice_elems=64, conn_depth=8,
+                     heap_elems=1 << 17, superstep_budget=1 << 15)
+    rt = OcclRuntime(cfg)
+    comm = rt.communicator(range(R))
+    hs = [rt.register(CollKind.ALL_REDUCE, comm, n_elems=n)
+          for _ in range(C)]
+    return rt, hs
+
+
+def run_evict_bench(R=8, C=4, n=4096, dead=5):
+    # Integer-valued f32 payloads keep the ring reduction exact, so the
+    # bit-equality comparison is meaningful rather than vacuously tight.
+    rng = np.random.RandomState(0)
+    payload = {(r, c): rng.randint(0, 1 << 10, n).astype(np.float32)
+               for r in range(R) for c in range(C)}
+
+    rt, hs = _grad_round(R, C, n)
+    # One healthy round first: the eviction happens MID-TRAINING, on a
+    # runtime with history, not on a fresh build.
+    for c, h in enumerate(hs):
+        for r in range(R):
+            h.submit(r, prio=c, data=payload[(r, c)])
+    rt.drive()
+    # The wedged round: rank `dead` never submits, every survivor's
+    # submission is in flight when the eviction fires.
+    for c, h in enumerate(hs):
+        for r in range(R):
+            if r != dead:
+                h.submit(r, prio=c, data=payload[(r, c)])
+    report = rt.evict(dead)
+    evicted_steps = int(np.asarray(rt.stats()["supersteps"]).max())
+
+    survivors = [r for r in range(R) if r != dead]
+    fresh, fhs = _grad_round(R - 1, C, n)
+    for c, h in enumerate(fhs):
+        for new_r, old in enumerate(survivors):
+            h.submit(new_r, prio=c, data=payload[(old, c)])
+    fresh.drive()
+    fresh_steps = int(np.asarray(fresh.stats()["supersteps"]).max())
+
+    bit_equal = all(
+        np.array_equal(np.asarray(hs[c].read(new_r)),
+                       np.asarray(fhs[c].read(new_r)))
+        for c in range(C) for new_r in range(R - 1))
+
+    rec = {
+        "config": {"n_ranks": R, "n_colls": C, "n_elems": n,
+                   "evicted_rank": dead},
+        "evicted_supersteps": evicted_steps,
+        "fresh_supersteps": fresh_steps,
+        "bit_equal": bool(bit_equal),
+        "drain_launches": int(report["drain_launches"]),
+        "replayed": int(report["replayed"]),
+        "dropped": int(report["dropped"]),
+    }
+    row(f"reliability/evict_R{R}to{R - 1}", 0.0,
+        f"evicted={evicted_steps};fresh={fresh_steps};"
+        f"bit_equal={bit_equal}")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# recorder: burst-sweep overhead on/off
+# ---------------------------------------------------------------------------
+def _burst_sps(flight_recorder, R=8, n=8192, burst=8, iters=10):
+    """supersteps/sec on the burst-sweep all-reduce workload (same shape
+    as bench_collectives.run_burst_sweep) with the recorder toggled."""
+    cfg = OcclConfig(n_ranks=R, max_colls=2, max_comms=1,
+                     slice_elems=bc.BURST_SLICE_ELEMS, conn_depth=32,
+                     burst_slices=burst, heap_elems=1 << 18,
+                     superstep_budget=1 << 15,
+                     flight_recorder=flight_recorder)
+    rt = OcclRuntime(cfg)
+    cid = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                      n_elems=n)
+    data = np.random.RandomState(0).rand(n).astype(np.float32)
+    for r in range(R):
+        rt.write_input(r, cid, data)
+
+    def once():
+        for r in range(R):
+            rt.submit(r, cid)
+        rt.drive()
+
+    once()                                   # warmup (jit compile)
+    s0 = rt.stats()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        best = min(best, time.perf_counter() - t0)
+    s1 = rt.stats()
+    steps = (int(np.asarray(s1["supersteps"]).max())
+             - int(np.asarray(s0["supersteps"]).max())) / iters
+    return steps / best, steps
+
+
+def run_recorder_bench(R=8, n=8192, burst=8, iters=10):
+    sps_on, steps = _burst_sps(True, R=R, n=n, burst=burst, iters=iters)
+    sps_off, _ = _burst_sps(False, R=R, n=n, burst=burst, iters=iters)
+    overhead = max(0.0, (sps_off - sps_on) / sps_off)
+    rec = {
+        "config": {"n_ranks": R, "n_elems": n, "burst_slices": burst,
+                   "iters": iters, "supersteps_per_iter": steps},
+        "supersteps_per_sec_on": sps_on,
+        "supersteps_per_sec_off": sps_off,
+        "overhead_frac": overhead,
+    }
+    row(f"reliability/recorder_B{burst}", 0.0,
+        f"sps_on={sps_on:.0f};sps_off={sps_off:.0f};"
+        f"overhead={overhead * 100:.1f}%")
+    return rec
+
+
+def run_reliability_bench(iters=10, out_path=BENCH_JSON):
+    record = {"reliability": {
+        "evict": run_evict_bench(),
+        "recorder": run_recorder_bench(iters=iters),
+    }}
+    doc = bc._read_record(out_path)
+    doc.update(record)
+    bc._write_record(out_path, doc)
+    return record
+
+
+if __name__ == "__main__":
+    run_reliability_bench()

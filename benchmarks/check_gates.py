@@ -52,6 +52,16 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
   counts are structural (deterministic per config), so these gates are
   noise-immune.
 
+* **reliability** — elastic shrink + flight recorder: the R=8
+  kill-one-rank eviction must complete the survivors' grad-sync round in
+  NO MORE supersteps than a fresh R-1 runtime driving the identical
+  workload, bit-identically (the replay is the same schedule — more
+  supersteps means the rebuild is leaking work, and any float diff means
+  the replay changed the op order); and the always-on flight recorder
+  must cost <= 5% supersteps/sec on the burst-sweep workload (best-of-N
+  on both sides — the recorder is a handful of in-jit scatters per
+  superstep, an order of magnitude under the gate).
+
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
 that motivated this script.
@@ -236,6 +246,32 @@ def check(doc: dict) -> list[str]:
         failures.append(
             "MoE overlapped forward diverged from the barrier forward "
             "(transport must be bit-exact — a routing bug, not numerics)")
+
+    rel = doc["reliability"]
+    ev = rel["evict"]
+    print(f"reliability evict R={ev['config']['n_ranks']}->"
+          f"{ev['config']['n_ranks'] - 1}: supersteps evicted "
+          f"{ev['evicted_supersteps']} vs fresh {ev['fresh_supersteps']}; "
+          f"bit_equal={ev['bit_equal']} (replayed {ev['replayed']}, "
+          f"dropped {ev['dropped']})")
+    if ev["evicted_supersteps"] > ev["fresh_supersteps"]:
+        failures.append(
+            f"eviction replay is leaking work: {ev['evicted_supersteps']} "
+            f"supersteps to finish the survivors' round vs a fresh "
+            f"R-1 runtime's {ev['fresh_supersteps']} (gate: no more)")
+    if not ev["bit_equal"]:
+        failures.append(
+            "post-evict grad-sync outputs diverged from a fresh R-1 "
+            "runtime (the replayed schedule must be bit-identical)")
+    fr = rel["recorder"]
+    print(f"reliability recorder overhead: "
+          f"{fr['supersteps_per_sec_off']:.0f} -> "
+          f"{fr['supersteps_per_sec_on']:.0f} supersteps/s "
+          f"({fr['overhead_frac'] * 100:.1f}%)")
+    if fr["overhead_frac"] > 0.05:
+        failures.append(
+            f"flight recorder costs {fr['overhead_frac'] * 100:.1f}% "
+            "supersteps/sec on the burst sweep (gate: <= 5%)")
     return failures
 
 
@@ -246,7 +282,7 @@ def main(argv: list[str]) -> int:
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
         required=("staging", "contention", "mesh", "hierarchy", "algos",
-                  "alltoall", "training"),
+                  "alltoall", "training", "reliability"),
         out_path=path)
     failures = check(doc)
     for f in failures:

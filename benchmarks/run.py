@@ -67,6 +67,12 @@ def main(quick: bool = False) -> None:
         # wall-clock side channel).
         import bench_training
         bench_training.run_training_bench(iters=1)
+        # Reliability record: evict-vs-fresh supersteps are structural
+        # (same replayed schedule), and the recorder-overhead point uses
+        # best-of-N wall timing, so the CI smoke keeps the acceptance
+        # workload and only trims iters.
+        import bench_reliability
+        bench_reliability.run_reliability_bench(iters=5)
         # Fail LOUDLY on a stale/partial record: every section the gates
         # consume must have been (re)written by THIS run — a missing
         # ``contention`` key in a stale BENCH_collectives.json used to
@@ -91,6 +97,8 @@ def main(quick: bool = False) -> None:
     calibrate.main()
     import bench_training
     bench_training.run_training_bench()
+    import bench_reliability
+    bench_reliability.run_reliability_bench()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)

@@ -15,8 +15,13 @@ from .costmodel import CostModel, fit, plan_features
 from .daemon import (TickFlags, build_mesh_tick, build_shardmap_tick,
                      build_sim_tick, launch_prologue)
 from .device_api import DeviceApi, decode_state, encode_state, encoded_zeros
+from .errors import (ConnDepthWarning, DeadlockTimeout, EvictionError,
+                     RegistrationClosed, StepTimeout)
+from .handles import CollectiveHandle
+from .recorder import (EVENT_NAMES, Diagnosis, FlightEvent, StalledChain,
+                       diagnose, events)
 from .primitives import CollKind, CollectiveSpec, Communicator, Prim
-from .runtime import ConnDepthWarning, DeadlockTimeout, OcclRuntime
+from .runtime import OcclRuntime
 from .staging import StagingEngine
 from .deadlock import run_static_order, consistent_order_exists
 
@@ -24,6 +29,10 @@ __all__ = [
     "OcclConfig", "OrderPolicy", "ReduceOp",
     "CollKind", "CollectiveSpec", "Communicator", "Prim",
     "OcclRuntime", "DeadlockTimeout", "ConnDepthWarning", "StagingEngine",
+    "EvictionError", "RegistrationClosed", "StepTimeout",
+    "CollectiveHandle",
+    "FlightEvent", "StalledChain", "Diagnosis", "EVENT_NAMES",
+    "events", "diagnose",
     "TickFlags", "launch_prologue", "build_sim_tick", "build_mesh_tick",
     "build_shardmap_tick", "DeviceApi", "encode_state", "decode_state",
     "encoded_zeros",

@@ -167,6 +167,23 @@ class OcclConfig:
     intra_burst_cap: int = 0        # islands-local lanes (0 = burst_slices)
     inter_burst_cap: int = 0        # island-crossing lanes (0 = burst_slices)
 
+    # --- flight recorder (fleet observability, core/recorder.py) --------
+    flight_recorder: bool = True    # record per-collective scheduling
+                                    # events (SUBMIT fetch, STAGE_DONE,
+                                    # PREEMPT, CHAIN_HANDOFF, CQE) into a
+                                    # per-rank on-device ring buffer
+                                    # stamped with the epoch clock.
+                                    # Exported by ``stats()
+                                    # ["flight_recorder"]`` and attached
+                                    # to DeadlockTimeout; False removes
+                                    # every recorder op from the compiled
+                                    # superstep (bit-identical schedule).
+    recorder_len: int = 128         # ring-buffer slots per rank; the
+                                    # per-kind cumulative counters are
+                                    # wrap-proof, only the event ring
+                                    # itself keeps the newest
+                                    # ``recorder_len`` events
+
     # --- numerics / kernels ---------------------------------------------
     dtype: str = "float32"          # heap / wire dtype
     use_pallas: bool = False        # route slice math through Pallas kernels
@@ -212,6 +229,7 @@ class OcclConfig:
         assert self.spin_base >= self.spin_min
         assert self.algo in ("ring", "two_level", "torus", "hybrid",
                              "tree", "auto"), self.algo
+        assert self.recorder_len >= 1
         assert self.bandwidth_groups >= 0
         assert self.intra_burst_cap >= 0 and self.inter_burst_cap >= 0
         if self.bandwidth_groups > 1:

@@ -112,6 +112,12 @@ class DeviceApi:
                 "device); mesh-backend in-step ticks go through "
                 "runtime.tick_fn() + shard_map composition")
         self.cfg = rt.cfg
+        self._rt = rt
+        # Elastic-shrink staleness stamp: runtime.evict() bumps the
+        # runtime generation and drops its DeviceApi cache; an api object
+        # the USER kept across the shrink still points at the old tables/
+        # heap layout, so its step entrypoint refuses to trace.
+        self._generation = rt._generation
         self._t = rt._tables
         self._specs = list(rt.specs)
         self._entry_of = {h: dict(m) for h, m in rt._entry_of.items()}
@@ -119,6 +125,20 @@ class DeviceApi:
         self._tail_of = dict(rt._tail_of)
         self._tick = build_sim_tick(self.cfg, self._t, barrier=False)
         self._tick_barrier = build_sim_tick(self.cfg, self._t, barrier=True)
+
+    @property
+    def stale(self) -> bool:
+        """True once ``runtime.evict()`` rebuilt past this snapshot."""
+        return self._generation != self._rt._generation
+
+    def _check_current(self) -> None:
+        if self.stale:
+            from .errors import EvictionError
+            raise EvictionError(
+                f"DeviceApi snapshot of generation {self._generation} is "
+                f"stale: the runtime is at generation "
+                f"{self._rt._generation} after evict() — fetch a fresh "
+                "runtime.device_api()")
 
     # -- routing helpers ---------------------------------------------------
     def _out_cid(self, coll_id: int) -> int:
@@ -135,6 +155,7 @@ class DeviceApi:
         """Open a step: clear the SQ/CQ (every cursor and entry — the
         in-trace ``pack_sq``) and run the daemon launch prologue.  ONCE
         per step; see module docstring."""
+        self._check_current()   # trace-time guard; no-op on traced values
         st = st._replace(
             sq_coll=jnp.full_like(st.sq_coll, -1),
             sq_prio=jnp.zeros_like(st.sq_prio),

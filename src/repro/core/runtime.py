@@ -41,6 +41,11 @@ from .algos import build_plan, default_hierarchy, select_algo
 from .config import OcclConfig, ReduceOp
 from .daemon import (build_shardmap_tick, build_sim_daemon, build_sim_tick,
                      launch_prologue)
+# Error taxonomy lives in core/errors.py; the historic names stay
+# importable from this module (deprecated shim).
+from .errors import (ConnDepthWarning, DeadlockTimeout, EvictionError,
+                     RegistrationClosed)
+from .handles import CollectiveHandle
 from .primitives import (
     CollKind,
     CollectiveSpec,
@@ -48,30 +53,11 @@ from .primitives import (
     derive_slicing,
     io_chunked,
 )
+from . import recorder as _recorder
 from .sqcq import SQE, HostQueues
 from .staging import StagingEngine
 from .state import DaemonState, init_state
 from .tables import StaticTables, build_tables
-
-
-class RegistrationClosed(RuntimeError):
-    pass
-
-
-class DeadlockTimeout(RuntimeError):
-    """drive() saw ``max_launches`` consecutive launches with NO progress
-    (no completions reconciled and no slices moved) while work was still
-    outstanding.
-
-    With OCCL this means some member rank never submitted a matching
-    collective (an application bug), NOT an ordering deadlock — inconsistent
-    orders are handled by preemption.  Launches that make progress do not
-    consume the budget: a long-lived workload may relaunch the daemon an
-    unbounded number of times (the superstep budget is per launch)."""
-
-
-class ConnDepthWarning(UserWarning):
-    """conn_depth is too shallow to sustain the configured slice burst."""
 
 
 class OcclRuntime:
@@ -137,6 +123,29 @@ class OcclRuntime:
         # recent window is kept (aggregates live in the device counters).
         self.launch_history: collections.deque = collections.deque(
             maxlen=1024)
+        # --- elastic-shrink bookkeeping (evict(); handles.py) -----------
+        # The registration LOG is the durable description of the topology:
+        # an ordered replay script of communicator() and register() calls
+        # (with their ORIGINAL arguments) that evict() re-executes against
+        # the shrunk rank set.  `_log_cids` maps each register() call's
+        # log index to its CURRENT head collective id (None once a shrink
+        # dissolved it) — the indirection CollectiveHandle resolves
+        # through, which is what lets handles survive re-registration.
+        self._reg_log: list[dict] = []
+        self._log_cids: list[Optional[int]] = []
+        self._head_to_reg: dict[int, int] = {}
+        self._replaying = False
+        self._generation = 0        # bumped by evict(); staleness guard
+        # Outstanding-submission ledger: submit() appends one record per
+        # SQE (popped by an always-attached accounting callback when the
+        # completion reconciles) so evict() can replay staged-but-
+        # unlaunched work, and diagnose() can name the collective each
+        # waiting rank is blocked on.  `_submit_counts` is cumulative —
+        # the lagging-submitter signal of recorder.diagnose().
+        self._outstanding: dict = collections.defaultdict(collections.deque)
+        self._submit_counts: dict = {}
+        self._sub_seq = 0
+        self.evictions: list[int] = []  # evict() history (ranks as passed)
 
     # ------------------------------------------------------------------
     # registration (paper Sec. 3.1.1)
@@ -149,6 +158,11 @@ class OcclRuntime:
             lane=len(self.comms))
         assert comm.lane < self.cfg.max_comms, "raise cfg.max_comms"
         self.comms.append(comm)
+        if not self._replaying:
+            # Log the creation ORDER (lane assignment is order-dependent)
+            # so evict()'s replay reproduces the same lane layout.
+            self._reg_log.append({"what": "comm", "comm_id": comm.comm_id,
+                                  "members": comm.members})
         return comm
 
     def logical_communicator(self, members: Sequence[int]) -> Communicator:
@@ -178,8 +192,17 @@ class OcclRuntime:
                  algo: Optional[str] = None,
                  hierarchy: Optional[tuple] = None,
                  inherit_prio: bool = True,
-                 chunk_sizes: Optional[Sequence[int]] = None) -> int:
-        """Register a collective; returns its unique id (paper Sec. 3.1.1).
+                 chunk_sizes: Optional[Sequence[int]] = None
+                 ) -> CollectiveHandle:
+        """Register a collective; returns its :class:`CollectiveHandle`
+        (paper Sec. 3.1.1).
+
+        The handle IS the collective id (an ``int`` subclass, so every
+        bare-``coll_id`` call path keeps working), owns the collective's
+        operations (``submit``/``submit_all``/``write``/``read``/
+        ``stats``) and — unlike a raw int — survives re-registration
+        after an elastic shrink (``evict()``): it re-resolves through the
+        registration log to its post-shrink id.
 
         ``algo`` selects the lowering (default ``cfg.algo``): ``"ring"``
         is the flat single-communicator ring; the composite plans
@@ -204,6 +227,33 @@ class OcclRuntime:
         and never read back.  Logical I/O sizes become
         ``sum(chunk_sizes)`` on both sides.
         """
+        head = self._register_impl(kind, comm, n_elems, op=op, root=root,
+                                   algo=algo, hierarchy=hierarchy,
+                                   inherit_prio=inherit_prio,
+                                   chunk_sizes=chunk_sizes)
+        reg_index = len(self._log_cids)
+        self._reg_log.append({
+            "what": "register", "reg_index": reg_index,
+            "comm_id": comm.comm_id, "members": tuple(comm.members),
+            "kind": kind, "n_elems": int(n_elems), "op": op,
+            "root": int(root), "algo": algo,
+            "hierarchy": tuple(hierarchy) if hierarchy is not None else None,
+            "inherit_prio": bool(inherit_prio),
+            "chunk_sizes": (tuple(int(z) for z in chunk_sizes)
+                            if chunk_sizes is not None else None),
+        })
+        self._log_cids.append(head)
+        self._head_to_reg[head] = reg_index
+        return CollectiveHandle(head, self, reg_index)
+
+    def _register_impl(self, kind: CollKind, comm: Communicator,
+                       n_elems: int, op: ReduceOp = ReduceOp.SUM,
+                       root: int = 0, algo: Optional[str] = None,
+                       hierarchy: Optional[tuple] = None,
+                       inherit_prio: bool = True,
+                       chunk_sizes: Optional[Sequence[int]] = None) -> int:
+        """The registration body (shared by register() and evict()'s
+        replay); returns the raw head collective id."""
         if self._tables is not None:
             raise RegistrationClosed("register collectives before first launch")
         if chunk_sizes is not None and CollKind(kind) is not \
@@ -448,6 +498,25 @@ class OcclRuntime:
     def _spec(self, coll_id: int) -> CollectiveSpec:
         return self.specs[coll_id]
 
+    def _current_cid(self, reg_index: int) -> int:
+        """Registration-log index -> CURRENT head collective id."""
+        cid = self._log_cids[reg_index]
+        if cid is None:
+            raise EvictionError(
+                f"registration {reg_index} did not survive the last "
+                "shrink (its group dissolved or could not be rebuilt)")
+        return cid
+
+    def _resolve_cid(self, coll_id) -> int:
+        """Public-API id resolution: a :class:`CollectiveHandle` follows
+        the registration log across shrinks; a plain int is the thin
+        DEPRECATED shim — accepted verbatim, valid only against the
+        current registration generation."""
+        if isinstance(coll_id, CollectiveHandle) and \
+                coll_id._runtime is self:
+            return self._current_cid(coll_id.reg_index)
+        return int(coll_id)
+
     def _resolve_off(self, coll_id: int, off: Optional[int], default: int,
                      span: int, name: str) -> int:
         """Default (None / -1 sentinel) or per-SQE-override base offset;
@@ -488,6 +557,7 @@ class OcclRuntime:
         pad positions zero-filled).  Supersedes any payload staged at the
         same buffer by an earlier ``submit(..., data=...)``."""
         self._ensure_built()
+        coll_id = self._resolve_cid(coll_id)
         off = self._resolve_in_off(coll_id, in_off)
         self.queues.staged.pop((rank, coll_id, off), None)
         self._state = self._staging.write(
@@ -504,6 +574,7 @@ class OcclRuntime:
         staged = self.queues.staged
         items = []
         for (rank, coll_id), v in writes.items():
+            coll_id = self._resolve_cid(coll_id)
             if (isinstance(v, tuple) and len(v) == 2
                     and isinstance(v[0], np.ndarray)
                     and isinstance(v[1], (int, np.integer))):
@@ -529,8 +600,9 @@ class OcclRuntime:
         resolved: dict = {}
         orig_of: dict = {}
         for e in reads:
-            tcid = self._out_cid(e[1])
-            off = (self._resolve_out_off(e[1], e[2]) if len(e) > 2
+            cid = self._resolve_cid(e[1])
+            tcid = self._out_cid(cid)
+            off = (self._resolve_out_off(cid, e[2]) if len(e) > 2
                    else specs[tcid].out_off)
             prev = resolved.setdefault((e[0], tcid), off)
             if prev != off:
@@ -556,6 +628,7 @@ class OcclRuntime:
         composite collective this reads the chain tail's output region —
         the logical endpoint of the chain."""
         self._ensure_built()
+        coll_id = self._resolve_cid(coll_id)
         tcid = self._out_cid(coll_id)
         return self._staging.read(
             self._state,
@@ -586,6 +659,8 @@ class OcclRuntime:
         otherwise fetch a stage it is not a member of and stall the
         chain forever."""
         self._ensure_built()
+        in_off_arg, out_off_arg = in_off, out_off
+        coll_id = self._resolve_cid(coll_id)
         in_off = self._resolve_in_off(coll_id, in_off)
         out_off = self._resolve_out_off(coll_id, out_off)
         if data is not None:
@@ -608,13 +683,36 @@ class OcclRuntime:
             # surface the LOGICAL id to the user callback.
             def cb(r, _c, _cb=callback, _lc=coll_id):
                 _cb(r, _lc)
+        # Outstanding-submission ledger (evict() replay + diagnose()):
+        # one record per SQE, popped by the accounting callback when the
+        # completion reconciles.  Payloads are NOT duplicated here —
+        # evict() recovers them from the staging queue or the device heap.
+        key = (rank, coll_id)
+        self._outstanding[key].append({
+            "seq": self._sub_seq, "rank": rank, "cid": coll_id,
+            "reg_index": self._head_to_reg.get(coll_id),
+            "prio": prio, "callback": callback,
+            "in_off_arg": in_off_arg, "out_off_arg": out_off_arg,
+            "in_off": in_off, "out_off": out_off,
+            "had_data": data is not None,
+        })
+        self._sub_seq += 1
+        self._submit_counts[key] = self._submit_counts.get(key, 0) + 1
+
+        def _acct(r, c, _key=key, _user=cb):
+            dq = self._outstanding.get(_key)
+            if dq:
+                dq.popleft()
+            if _user is not None:
+                _user(r, c)
+
         # A non-head entry stage never reads the logical input (broadcast
         # non-roots), so the head-resolved in_off override must not leak
         # into its fetch — the entry keeps its registered default.
         sqe_in = in_off if entry == coll_id else -1
         self.queues.submit(rank, SQE(coll_id=entry, prio=prio,
                                      in_off=sqe_in, out_off=out_off,
-                                     callback=cb),
+                                     callback=_acct),
                            cb_coll=tcid)
 
     def submit_all(self, coll_id: int, prio=0, data=None, callback=None,
@@ -627,6 +725,7 @@ class OcclRuntime:
         per-rank priorities, payloads, completion callbacks and dynamic
         buffer offsets without falling back to a hand-rolled submit loop.
         """
+        coll_id = self._resolve_cid(coll_id)
         members = self._logical_members.get(
             coll_id, self._spec(coll_id).comm.members)
 
@@ -707,15 +806,316 @@ class OcclRuntime:
             else:
                 idle = 0
             if idle >= max_launches:
-                raise DeadlockTimeout(
+                raise self._deadlock_error(
                     f"{self.queues.outstanding()} collectives outstanding "
                     f"after {idle} consecutive daemon launches without "
                     f"progress ({self.launches} total) — a member rank "
                     f"never submitted a matching collective")
 
+    def _deadlock_error(self, msg: str) -> DeadlockTimeout:
+        """Build the enriched :class:`DeadlockTimeout`: the flight-recorder
+        export plus a host-side diagnosis naming the rank(s) holding each
+        stalled collective ride on the exception (satellite 2)."""
+        export = self.export_flight_record()
+        diag = None
+        try:
+            diag = _recorder.diagnose(self)
+            if diag is not None and diag.stalled:
+                msg = msg + "\n" + str(diag)
+        except Exception:  # diagnosis is best-effort — never mask the hang
+            pass
+        return DeadlockTimeout(msg, flight_record=export, diagnosis=diag)
+
+    # ------------------------------------------------------------------
+    # elastic shrink (evict one rank, rebuild for R-1, replay, resume)
+    # ------------------------------------------------------------------
+    def _drain_completable(self, max_idle: int = 2,
+                           max_total: int = 64) -> int:
+        """Run the daemon until every COMPLETABLE in-flight chain has
+        drained: launches repeat while they make progress (completions or
+        slices moved) and stop after ``max_idle`` idle launches — work
+        still outstanding then is wedged (typically on the rank about to
+        be evicted) and becomes evict()'s replay set.  Never raises on
+        the wedged remainder; returns the number of launches run."""
+        n = idle = 0
+        while self.queues.outstanding() and n < max_total and \
+                idle < max_idle:
+            self.launch_once()
+            n += 1
+            rec = self.launch_history[-1]
+            if rec["completions"] == 0 and rec["slices_moved"] == 0:
+                idle += 1
+            else:
+                idle = 0
+        return n
+
+    def evict(self, rank: int, relaunch: bool = True) -> dict:
+        """Elastically shrink the fabric by one rank (the tentpole API).
+
+        Lifecycle (drain -> rebuild -> replay):
+
+        1. **Drain**: run the daemon until every completable in-flight
+           chain finishes; what remains outstanding is wedged (usually on
+           the evicted rank).  Payloads of the wedged submissions are
+           recovered host-side — from the submit-time staging queue if
+           not yet flushed, else gathered straight out of the old device
+           ``heap_in`` through the registration's logical index map.
+        2. **Rebuild**: reset every derived structure (communicators,
+           specs, chain tables, heap arenas, staging engine, daemon
+           program, host queues, device state) and REPLAY the
+           registration log against the shrunk rank set — surviving
+           members renumber ``m -> m - (m > rank)``.  Each registration
+           keeps its log index, so existing :class:`CollectiveHandle`\\ s
+           re-resolve transparently; a registration whose group
+           dissolves (or whose ragged ``chunk_sizes`` cannot tile the
+           smaller ring) resolves to "gone" and its handle raises
+           :class:`EvictionError` on use.
+        3. **Replay**: re-submit every surviving wedged submission in
+           original submission order with its recovered payload and
+           original arguments, then (``relaunch=True``) ``drive()`` once
+           — the single relaunch after which the fabric runs normally.
+
+        The rebuilt runtime is indistinguishable from a FRESH runtime
+        constructed at R-1 with the same registration script: scheduler
+        state starts clean, so post-evict supersteps and collective
+        outputs are bit-identical to the fresh baseline (asserted by
+        tests/test_reliability.py and gated in CI).
+
+        Caveats: device ``heap_out`` contents do not survive the rebuild
+        — read results BEFORE evicting (completed-but-unread outputs are
+        dropped); the evicted rank's own outstanding submissions die
+        with it; registration stays closed (the log replays, new
+        registrations are still rejected).  Sim backend only.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "evict() is sim-backend only: shrinking a jax device mesh "
+                "needs a new Mesh over the surviving devices — rebuild the "
+                "runtime on the shrunk mesh with the same registration "
+                "script instead")
+        R = self.cfg.n_ranks
+        if not 0 <= rank < R:
+            raise EvictionError(f"rank {rank} outside [0, {R})")
+        if R <= 1:
+            raise EvictionError("cannot shrink below 1 rank")
+        self._ensure_built()
+        # --- 1. drain ---------------------------------------------------
+        drain_launches = self._drain_completable()
+        old_state = self._state
+        old_tables = self._tables
+        old_staged = dict(self.queues.staged)
+        heap_in = None  # fetched lazily (one device->host transfer)
+        records = sorted(
+            (rec for dq in self._outstanding.values() for rec in dq),
+            key=lambda d: d["seq"])
+        replay = []
+        dropped = []
+        for rec in records:
+            if rec["rank"] == rank:
+                dropped.append(rec)
+                continue
+            if rec["reg_index"] is None:
+                raise EvictionError(
+                    f"outstanding submission of collective {rec['cid']} on "
+                    f"rank {rec['rank']} was made against a raw non-head "
+                    "stage id — it cannot be re-resolved after a shrink "
+                    "(submit logical collective handles/ids only)")
+            data = None
+            n_log = int(old_tables.in_log[rec["cid"]])
+            if n_log > 0:
+                key = (rec["rank"], rec["cid"], rec["in_off"])
+                if key in old_staged:
+                    data = np.asarray(old_staged[key])
+                else:
+                    if heap_in is None:
+                        heap_in = np.asarray(old_state.heap_in)
+                    data = heap_in[rec["rank"], rec["in_off"]
+                                   + old_tables.stage_in_map[rec["cid"]]]
+            replay.append((rec, data))
+        # --- 2. rebuild for R-1 -----------------------------------------
+        dead = rank
+        remap = {m: m - (m > dead) for m in range(R)}
+        old_log = self._reg_log
+        self.cfg = dataclasses.replace(self.cfg, n_ranks=R - 1)
+        self.comms = []
+        self.specs = []
+        self._tail_of = {}
+        self._chain_of = {}
+        self._derived_comms = {}
+        self._entry_of = {}
+        self._rank_tail = {}
+        self._logical_members = {}
+        self._algo_of = {}
+        self._in_ptr = 0
+        self._out_ptr = 0
+        self._tables = None
+        self._staging = None
+        self._daemon = None
+        self._tick_fns = {}
+        self._prologue_jit = None
+        self._device_api = None
+        self._state = None
+        self.queues = HostQueues(self.cfg)
+        self._outstanding = collections.defaultdict(collections.deque)
+        self._submit_counts = {}
+        self._generation += 1
+        self.evictions.append(rank)
+        new_log: list[dict] = []
+        new_log_cids: list[Optional[int]] = []
+        self._head_to_reg = {}
+        # The log's comm_id fields are SYMBOLIC join keys between comm and
+        # register entries (stable across shrinks); the rebuilt
+        # Communicator objects get fresh lane-ordered ids of their own.
+        comm_map: dict = {}
+        self._replaying = True
+        try:
+            for entry in old_log:
+                members = tuple(remap[m] for m in entry["members"]
+                                if m != dead)
+                new_entry = dict(entry, members=members)
+                new_log.append(new_entry)
+                if entry["what"] == "comm":
+                    comm_map[entry["comm_id"]] = (
+                        self.communicator(members) if members else None)
+                    continue
+                # register entry: keep its _log_cids POSITION even when it
+                # dissolves — handle reg_index stability depends on it.
+                reg_index = len(new_log_cids)
+                head = None
+                comm = None
+                if members:
+                    if entry["comm_id"] == -1:
+                        comm = self.logical_communicator(members)
+                    else:
+                        comm = comm_map.get(entry["comm_id"])
+                if comm is not None:
+                    hier = entry["hierarchy"]
+                    if hier is not None and \
+                            int(np.prod(hier)) != len(members):
+                        hier = None  # re-derive for the smaller group
+                    sizes = entry["chunk_sizes"]
+                    if sizes is not None and len(sizes) != len(members):
+                        # Per-distance ragged capacities are defined over
+                        # the ORIGINAL ring size; they cannot be remapped
+                        # onto a smaller ring — dissolve loudly.
+                        warnings.warn(
+                            f"registration {reg_index} "
+                            "(ALL_TO_ALL_RAGGED) dissolved by evict(): "
+                            f"chunk_sizes has {len(sizes)} per-distance "
+                            f"counts but the shrunk group has "
+                            f"{len(members)} members", stacklevel=2)
+                        comm = None
+                    elif (CollKind(entry["kind"]) is CollKind.ALL_TO_ALL
+                          and entry["n_elems"] % len(members) != 0):
+                        warnings.warn(
+                            f"registration {reg_index} (ALL_TO_ALL) "
+                            f"dissolved by evict(): n_elems="
+                            f"{entry['n_elems']} is not divisible by the "
+                            f"shrunk ring size {len(members)}",
+                            stacklevel=2)
+                        comm = None
+                    rooted = CollKind(entry["kind"]) in (
+                        CollKind.BROADCAST, CollKind.REDUCE)
+                    if comm is not None and rooted and \
+                            entry["root"] == dead:
+                        # The semantic endpoint (broadcast source / reduce
+                        # destination) is gone; silently re-rooting would
+                        # change the collective's meaning.
+                        warnings.warn(
+                            f"registration {reg_index} "
+                            f"({CollKind(entry['kind']).name}) dissolved "
+                            f"by evict(): its root rank {dead} was "
+                            "evicted", stacklevel=2)
+                        comm = None
+                    if comm is not None:
+                        head = self._register_impl(
+                            entry["kind"], comm, entry["n_elems"],
+                            op=entry["op"],
+                            root=(remap[entry["root"]]
+                                  if entry["root"] != dead else 0),
+                            algo=entry["algo"], hierarchy=hier,
+                            inherit_prio=entry["inherit_prio"],
+                            chunk_sizes=sizes)
+                        self._head_to_reg[head] = reg_index
+                new_log_cids.append(head)
+        finally:
+            self._replaying = False
+        self._reg_log = new_log
+        self._log_cids = new_log_cids
+        # --- 3. replay surviving wedged submissions ---------------------
+        replayed = 0
+        for rec, data in replay:
+            new_cid = self._log_cids[rec["reg_index"]]
+            if new_cid is None:
+                warnings.warn(
+                    f"dropping outstanding submission of dissolved "
+                    f"registration {rec['reg_index']} on old rank "
+                    f"{rec['rank']} (its completion callback will never "
+                    "fire)", stacklevel=2)
+                continue
+            self.submit(remap[rec["rank"]], new_cid, prio=rec["prio"],
+                        data=data, callback=rec["callback"],
+                        in_off=rec["in_off_arg"],
+                        out_off=rec["out_off_arg"])
+            replayed += 1
+        if relaunch and self.queues.outstanding():
+            self.drive()
+        return {
+            "evicted_rank": rank,
+            "n_ranks": self.cfg.n_ranks,
+            "generation": self._generation,
+            "drain_launches": drain_launches,
+            "replayed": replayed,
+            "dropped": len(dropped),
+            "dissolved": [i for i, c in enumerate(self._log_cids)
+                          if c is None],
+        }
+
     # ------------------------------------------------------------------
     # observability (paper Fig. 9)
     # ------------------------------------------------------------------
+    def export_flight_record(self) -> dict:
+        """Numpy export of the on-device flight-recorder ring (+ wrap-proof
+        per-kind counters); decode with :func:`repro.core.recorder.events`.
+        Included in :meth:`stats` and attached to every
+        :class:`~repro.core.errors.DeadlockTimeout` this runtime raises."""
+        self._ensure_built()
+        return _recorder.export_record(self._state, self.cfg)
+
+    def collective_stats(self, coll_id) -> dict:
+        """Per-collective observability slice (the :class:`CollectiveHandle`
+        ``stats()`` surface): the logical head's chain stages and the
+        scheduler counters restricted to those stage columns."""
+        self._ensure_built()
+        cid = self._resolve_cid(coll_id)
+        stages = list(self._chain_of.get(cid, [cid]))
+        st = self._state
+        cols = np.asarray(stages, dtype=np.int64)
+        rtc_ev = np.asarray(st.rtc_events)[:, cols]
+        rtc_lat = np.asarray(st.rtc_latency)[:, cols]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            rtc_mean = np.where(rtc_ev > 0, rtc_lat / np.maximum(rtc_ev, 1),
+                                0.0)
+        return {
+            "coll_id": cid,
+            "algo": self._algo_of.get(cid, "ring"),
+            "members": tuple(self._logical_members.get(
+                cid, self._spec(cid).comm.members)),
+            "stages": stages,                      # chain stage ids
+            "completed": np.asarray(st.completed)[:, cols],        # [R, S]
+            "stage_completions":
+                np.asarray(st.stage_completions)[:, cols],         # [R, S]
+            "preempts": np.asarray(st.preempts)[:, cols],          # [R, S]
+            "stall_slices": np.asarray(st.stall_slices)[:, cols],  # [R, S]
+            "rtc_events": rtc_ev,                                  # [R, S]
+            "rtc_latency": rtc_lat,                                # [R, S]
+            "rtc_mean_latency": rtc_mean,                          # [R, S]
+            "outstanding": {
+                r: len(dq) for (r, c), dq in self._outstanding.items()
+                if c == cid and dq
+            },
+        }
+
     def stats(self) -> dict:
         self._ensure_built()
         st = self._state
@@ -771,4 +1171,9 @@ class OcclRuntime:
             "staging_flush_writes": self._staging.flush_writes,
             "staging_flush_bytes": self._staging.flush_bytes,
             "staging_sharded_flushes": self._staging.sharded_flushes,
+            # Flight-recorder export (core/recorder.py): per-rank event
+            # ring + wrap-proof per-kind cumulative counters.  Decode with
+            # ``recorder.events``; ``recorder.diagnose(runtime)`` names
+            # the rank holding each stalled chain on a hang.
+            "flight_recorder": _recorder.export_record(st, self.cfg),
         }

@@ -100,6 +100,14 @@ from .config import (
 )
 from . import primitives as P
 from .primitives import Prim
+from .recorder import (
+    EV_CHAIN_HANDOFF,
+    EV_CQE,
+    EV_PREEMPT,
+    EV_STAGE_DONE,
+    EV_SUBMIT,
+    N_EVENT_KINDS,
+)
 from .state import DaemonState
 
 # Queue-key stride between priority classes (per-launch arrival + demand
@@ -304,6 +312,33 @@ def apply_inbox(cfg: OcclConfig, st: DaemonState, inbox: Mailbox
     )
 
 
+def _record_events(cfg: OcclConfig, st: DaemonState, kinds: jnp.ndarray,
+                   colls: jnp.ndarray, valid: jnp.ndarray) -> DaemonState:
+    """Append masked events to the rank's flight-recorder ring.
+
+    Same masked-scatter ring-append pattern as the CQ ring (lanes_step):
+    exclusive-cumsum slot assignment over the valid mask, invalid entries
+    routed to a dropped target.  ``fr_step`` stamps the cumulative epoch
+    clock; ``fr_kinds`` keeps wrap-proof per-kind cumulative counters.
+    Compiled out entirely when ``cfg.flight_recorder`` is off.
+    """
+    if not cfg.flight_recorder:
+        return st
+    FR = cfg.recorder_len
+    n = valid.astype(jnp.int32)
+    off = jnp.cumsum(n) - n                                 # exclusive scan
+    slot = (st.fr_count + off) % FR
+    tgt = jnp.where(valid, slot, FR)
+    ktgt = jnp.where(valid, kinds, N_EVENT_KINDS)
+    return st._replace(
+        fr_kind=st.fr_kind.at[tgt].set(kinds, mode="drop"),
+        fr_coll=st.fr_coll.at[tgt].set(colls, mode="drop"),
+        fr_step=st.fr_step.at[tgt].set(st.supersteps, mode="drop"),
+        fr_count=st.fr_count + jnp.sum(n),
+        fr_kinds=st.fr_kinds.at[ktgt].add(1, mode="drop"),
+    )
+
+
 def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
               local: LocalTables) -> tuple[DaemonState, jnp.ndarray]:
     """Phase B: pop at most one SQE into the task queue (paper Sec. 3.1.2).
@@ -372,6 +407,11 @@ def fetch_sqe(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
             jnp.where(ok, st.supersteps, st.fetch_step[c])),
         sq_read=st.sq_read + one,
     )
+    st = _record_events(
+        cfg, st,
+        kinds=jnp.full((1,), EV_SUBMIT, jnp.int32),
+        colls=jnp.reshape(c, (1,)),
+        valid=jnp.reshape(ok, (1,)))
     return st, ok
 
 
@@ -658,6 +698,22 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
         cq_count=st.cq_count + jnp.sum(done_i),
         cur=jnp.where(coll_done | ~valid, -1, cand),
     )
+
+    # Flight recorder: one batched ring append for this superstep's
+    # transitions — preemptions (pre-rotation lane owner), stage
+    # completions, on-device chain hand-offs and host-visible CQEs.
+    if cfg.flight_recorder:
+        st = _record_events(
+            cfg, st,
+            kinds=jnp.concatenate([
+                jnp.full((L,), EV_PREEMPT, jnp.int32),
+                jnp.full((L,), EV_STAGE_DONE, jnp.int32),
+                jnp.full((L,), EV_CHAIN_HANDOFF, jnp.int32),
+                jnp.full((L,), EV_CQE, jnp.int32),
+            ]),
+            colls=jnp.concatenate([cur_c, c, c, c]),
+            valid=jnp.concatenate(
+                [overspun, coll_done, chain_adv, logical_done]))
 
     # Chain hand-off relink: rewrite the successor's padded input span in
     # heap_in from the predecessor's just-finalized heap_out region via

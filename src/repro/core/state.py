@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import OcclConfig
+from .recorder import N_EVENT_KINDS
 
 
 def heap_scratch_elems(cfg: OcclConfig) -> int:
@@ -135,6 +136,19 @@ class DaemonState(NamedTuple):
     barrier_steps: jnp.ndarray # [] i32 — supersteps run by barrier ticks
                                #   (drive()/drain: compute is blocked)
 
+    # --- flight recorder (core/recorder.py; cfg.flight_recorder) ---------
+    # Fixed-size per-rank ring of scheduling events stamped with the
+    # cumulative epoch clock; ``fr_count`` is the total appended (ring
+    # index = count % recorder_len) and ``fr_kinds`` keeps wrap-proof
+    # per-kind cumulative counters that reconcile with the scheduler's
+    # own counters (see recorder.py).  All i32 — they ride the f32
+    # bitcast of device_api.encode_state unchanged.
+    fr_kind: jnp.ndarray       # [FR] i32 — event kind (-1 = empty slot)
+    fr_coll: jnp.ndarray       # [FR] i32 — stage/collective id
+    fr_step: jnp.ndarray       # [FR] i32 — epoch-clock stamp
+    fr_count: jnp.ndarray      # [] i32 — events appended (monotonic)
+    fr_kinds: jnp.ndarray      # [N_EVENT_KINDS] i32 — cumulative per kind
+
 
 def init_state(cfg: OcclConfig, per_rank: bool = True,
                sharding=None) -> DaemonState:
@@ -186,6 +200,11 @@ def init_state(cfg: OcclConfig, per_rank: bool = True,
         global_live=z((), jnp.bool_, True),
         fetch_step=z((C,)), rtc_latency=z((C,)), rtc_events=z((C,)),
         tick_calls=z(()), overlap_steps=z(()), barrier_steps=z(()),
+        fr_kind=z((cfg.recorder_len,), jnp.int32, -1),
+        fr_coll=z((cfg.recorder_len,), jnp.int32, -1),
+        fr_step=z((cfg.recorder_len,)),
+        fr_count=z(()),
+        fr_kinds=z((N_EVENT_KINDS,)),
     )
     if per_rank:
         s = s._replace(

@@ -25,7 +25,12 @@ from typing import Callable, Optional
 import jax
 
 from ..checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+# StepTimeout moved to the unified error taxonomy (core/errors.py); the
+# historic ``fabric.ft.StepTimeout`` name stays importable from here.
+from ..core.errors import DeadlockTimeout, StepTimeout
+from ..core.recorder import diagnose
 from ..data.pipeline import SyntheticPipeline
+from .straggler import StragglerDetector
 
 
 @dataclasses.dataclass
@@ -35,10 +40,6 @@ class FTConfig:
     keep: int = 2
     step_timeout_s: float = 300.0
     max_restarts: int = 3
-
-
-class StepTimeout(RuntimeError):
-    pass
 
 
 class TrainController:
@@ -100,3 +101,59 @@ class TrainController:
         self._checkpoint(done)
         self.ckpt.wait()
         return self.metrics_log
+
+
+class ReliabilityController:
+    """Detection -> diagnosis -> eviction glue over one OcclRuntime.
+
+    The reliability loop a fleet controller runs around the training
+    step:
+
+    1. **observe**: feed per-rank step times and the runtime's per-rank
+       superstep/RTC stats into the :class:`StragglerDetector` (both
+       channels — wall-clock alone misses a rank that is healthy
+       host-side but wedging the fabric);
+    2. **diagnose**: on a :class:`DeadlockTimeout` (or on demand) run
+       ``recorder.diagnose`` and mark every named holder suspect;
+    3. **heal**: evict every rank outside ``healthy_ranks()`` (highest
+       rank first, so earlier evictions do not renumber later ones) and
+       resume — ``evict()`` replays the wedged submissions, so surviving
+       ranks' in-flight work completes on the shrunk fabric.
+    """
+
+    def __init__(self, runtime, detector: StragglerDetector | None = None):
+        self.runtime = runtime
+        self.detector = detector or StragglerDetector(runtime.cfg.n_ranks)
+        self.evicted: list[int] = []    # ranks as numbered at eviction time
+
+    def observe_step(self, step_times_s=None) -> None:
+        """One observation window: optional per-rank wall-clock times
+        (``{rank: seconds}``) plus the runtime's current collective
+        stats."""
+        if step_times_s:
+            for r, t in step_times_s.items():
+                self.detector.observe(r, t)
+        self.detector.observe_collective_stats(self.runtime.stats())
+
+    def heal(self, error: DeadlockTimeout | None = None) -> list[int]:
+        """Mark diagnosed holders suspect, evict every unhealthy rank and
+        resume.  Returns the evicted ranks (pre-eviction numbering).
+        With no ``error``, diagnoses the runtime's current outstanding
+        set directly (no-op when nothing is stalled)."""
+        diag = error.diagnosis if error is not None and \
+            error.diagnosis is not None else diagnose(self.runtime)
+        for r in diag.holders:
+            self.detector.mark_suspect(r)
+        healthy = set(self.detector.healthy_ranks())
+        bad = sorted((r for r in range(self.runtime.cfg.n_ranks)
+                      if r not in healthy), reverse=True)
+        for r in bad:
+            self.runtime.evict(r)
+        if bad:
+            self.evicted.extend(bad)
+            # Rank numbering changed; timing history no longer maps onto
+            # rank ids — restart the detector for the shrunk fleet.
+            self.detector = StragglerDetector(
+                self.runtime.cfg.n_ranks, alpha=self.detector.alpha,
+                threshold=self.detector.threshold)
+        return bad

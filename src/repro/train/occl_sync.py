@@ -188,6 +188,24 @@ class OcclGradSync:
             outs.append(jax.tree_util.tree_unflatten(self.treedef, leaves))
         return outs
 
+    def evict(self, rank: int) -> dict:
+        """Elastically drop one DP worker: delegates to
+        ``OcclRuntime.evict`` (drain -> rebuild for R-1 -> replay) and
+        shrinks this sync's own rank count.  Bucket registrations survive
+        via their :class:`~repro.core.handles.CollectiveHandle`\\ s —
+        ``all_reduce`` keeps working unchanged on the smaller fleet, and
+        a mid-flight eviction replays the surviving ranks' staged bucket
+        payloads.  A two-level hierarchy that no longer tiles the shrunk
+        fleet falls back to the auto-derived grid (evict()'s replay
+        rule), so ``self.hierarchy`` is cleared when it stops tiling."""
+        report = self.occl.evict(rank)
+        self.n_ranks = self.occl.cfg.n_ranks
+        if self.hierarchy is not None:
+            G, N = self.hierarchy
+            if G * N != self.n_ranks:
+                self.hierarchy = None
+        return report
+
     def stats(self):
         return self.occl.stats()
 

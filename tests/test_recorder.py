@@ -1,0 +1,194 @@
+"""Flight recorder: event/counter reconciliation + hang diagnosis.
+
+The wrap-proof per-kind counters (``fr_kinds``) must reconcile EXACTLY
+with the scheduler's own counters on every collective kind — including
+chained composites and the ragged all-to-all — and ``diagnose()`` must
+name the correct wedged rank in scenarios ``run_static_order`` proves
+statically deadlocked (bench_deadlock's adversarial-order setup).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, OcclConfig, OcclRuntime, ReduceOp,
+                        run_static_order)
+from repro.core.errors import DeadlockTimeout
+from repro.core.recorder import (EV_CHAIN_HANDOFF, EV_CQE, EV_PREEMPT,
+                                 EV_STAGE_DONE, EV_SUBMIT, events)
+
+
+def _reconcile(rt):
+    """Assert the recorder's per-kind cumulative counters against the
+    scheduler counters, per rank (recorder.py module docstring)."""
+    st = rt.state
+    kinds = np.asarray(st.fr_kinds)                    # [R, NK]
+    stage = np.asarray(st.stage_completions).sum(axis=1)
+    comp = np.asarray(st.completed).sum(axis=1)
+    pre = np.asarray(st.preempts).sum(axis=1)
+    rtc = np.asarray(st.rtc_events).sum(axis=1)
+    np.testing.assert_array_equal(kinds[:, EV_STAGE_DONE], stage)
+    np.testing.assert_array_equal(kinds[:, EV_STAGE_DONE], rtc)
+    np.testing.assert_array_equal(kinds[:, EV_CQE], comp)
+    np.testing.assert_array_equal(
+        kinds[:, EV_STAGE_DONE],
+        kinds[:, EV_CHAIN_HANDOFF] + kinds[:, EV_CQE])
+    np.testing.assert_array_equal(kinds[:, EV_PREEMPT], pre)
+    # Ring totals match the counters: fr_count sums every kind.
+    np.testing.assert_array_equal(np.asarray(st.fr_count),
+                                  kinds.sum(axis=1))
+
+
+def _cfg(R, **kw):
+    kw.setdefault("max_colls", 12)
+    kw.setdefault("max_comms", 4)
+    kw.setdefault("slice_elems", 8)
+    kw.setdefault("heap_elems", 1 << 13)
+    return OcclConfig(n_ranks=R, **kw)
+
+
+KINDS = [
+    (CollKind.ALL_REDUCE, dict()),
+    (CollKind.ALL_GATHER, dict()),
+    (CollKind.REDUCE_SCATTER, dict()),
+    (CollKind.BROADCAST, dict(root=1)),
+    (CollKind.REDUCE, dict(root=2, op=ReduceOp.MAX)),
+    (CollKind.ALL_TO_ALL, dict()),
+]
+
+
+@pytest.mark.parametrize("kind,extra",
+                         KINDS, ids=[k.name for k, _ in KINDS])
+def test_counts_reconcile_every_kind(kind, extra):
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(kind, rt.communicator(range(R)), n_elems=32, **extra)
+    # ALL_GATHER's logical input is the per-rank contribution (one chunk).
+    n_in = 32 // R if kind is CollKind.ALL_GATHER else 32
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        for r in range(R):
+            h.submit(r, data=rng.rand(n_in).astype(np.float32))
+        rt.drive()
+    _reconcile(rt)
+    rec = rt.stats()["flight_recorder"]
+    assert rec["enabled"]
+    # Every rank saw 3 SUBMIT fetches and 3 CQEs for the one collective.
+    np.testing.assert_array_equal(rec["kind_counts"][:, EV_SUBMIT], 3)
+    np.testing.assert_array_equal(rec["kind_counts"][:, EV_CQE], 3)
+
+
+def test_ragged_alltoall_reconciles():
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    sizes = (3, 0, 2, 1)
+    h = rt.register(CollKind.ALL_TO_ALL_RAGGED, rt.communicator(range(R)),
+                    n_elems=16, chunk_sizes=sizes)
+    n = sum(sizes)
+    for r in range(R):
+        h.submit(r, data=np.arange(n, dtype=np.float32) + 10 * r)
+    rt.drive()
+    _reconcile(rt)
+
+
+def test_composite_chain_events():
+    """Two-level chain: intermediates emit CHAIN_HANDOFF, the tail CQE;
+    the per-kind identity STAGE_DONE == HANDOFF + CQE pins the split."""
+    R = 8
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE,
+                    rt.logical_communicator(range(R)),
+                    n_elems=64, algo="two_level", hierarchy=(2, 4))
+    for r in range(R):
+        h.submit(r, data=np.full(64, float(r), np.float32))
+    rt.drive()
+    _reconcile(rt)
+    rec = rt.export_flight_record()
+    # 3-stage chain, every rank in every stage: 2 handoffs + 1 CQE each.
+    np.testing.assert_array_equal(rec["kind_counts"][:, EV_CHAIN_HANDOFF],
+                                  2)
+    np.testing.assert_array_equal(rec["kind_counts"][:, EV_CQE], 1)
+    # The decoded per-rank streams are clock-ordered and end at the tail.
+    for r in range(R):
+        evs = events(rec, rank=r)
+        assert [e.step for e in evs] == sorted(e.step for e in evs)
+        assert evs[-1].kind == EV_CQE
+
+
+def test_ring_wrap_keeps_counters_exact():
+    """A recorder ring far smaller than the event stream: the ring keeps
+    only the newest events but the per-kind counters stay exact."""
+    R = 4
+    rt = OcclRuntime(_cfg(R, recorder_len=8))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=32)
+    iters = 10
+    for _ in range(iters):
+        for r in range(R):
+            h.submit(r, data=np.ones(32, np.float32))
+        rt.drive()
+    _reconcile(rt)
+    rec = rt.export_flight_record()
+    assert int(rec["count"][0]) > 8          # the ring wrapped
+    assert len(events(rec, rank=0)) == 8     # only the newest 8 retained
+    np.testing.assert_array_equal(rec["kind_counts"][:, EV_CQE], iters)
+
+
+def test_recorder_disabled_records_nothing():
+    R = 4
+    rt = OcclRuntime(_cfg(R, flight_recorder=False))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=32)
+    for r in range(R):
+        h.submit(r, data=np.ones(32, np.float32))
+    rt.drive()
+    rec = rt.stats()["flight_recorder"]
+    assert not rec["enabled"]
+    np.testing.assert_array_equal(rec["count"], 0)
+    np.testing.assert_array_equal(rec["kind_counts"], 0)
+    assert events(rec) == []
+
+
+def test_diagnose_names_withheld_rank():
+    """bench_deadlock's adversarial setup: conflicting static orders that
+    run_static_order proves wedge a single-queue library.  OCCL completes
+    them — until rank 2 withholds one collective entirely; the diagnosis
+    must name exactly that rank and collective."""
+    R, C = 4, 4
+    rng = np.random.RandomState(0)
+    orders = {r: list(rng.permutation(C)) for r in range(R)}
+    static = run_static_order(orders, {c: list(range(R)) for c in range(C)})
+    assert static.deadlocked      # proven static deadlock scenario
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    hs = [rt.register(CollKind.ALL_REDUCE, comm, n_elems=16)
+          for _ in range(C)]
+    withheld = 2                  # collective rank 2 never submits
+    for r in range(R):
+        for c in orders[r]:
+            if r == 2 and c == withheld:
+                continue
+            hs[c].submit(r, data=np.full(16, float(r), np.float32))
+    with pytest.raises(DeadlockTimeout) as ei:
+        rt.drive(max_launches=4)
+    e = ei.value
+    assert e.flight_record is not None and e.flight_record["enabled"]
+    diag = e.diagnosis
+    assert diag is not None
+    stalled_ids = {s.coll_id for s in diag.stalled}
+    assert int(hs[withheld]) in stalled_ids
+    blocked = {s.coll_id: s for s in diag.stalled}[int(hs[withheld])]
+    assert blocked.holding_ranks == [2]
+    assert "never submitted" in blocked.reason
+    assert 2 in diag.holders
+    assert str(diag)              # human-readable rendering exists
+
+
+def test_diagnose_attaches_to_timeout_message():
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=16)
+    for r in range(R - 1):        # rank 3 never submits
+        h.submit(r, data=np.ones(16, np.float32))
+    with pytest.raises(DeadlockTimeout) as ei:
+        rt.drive(max_launches=3)
+    assert "held by rank(s) 3" in str(ei.value)

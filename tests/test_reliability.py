@@ -1,0 +1,395 @@
+"""Reliability tentpole: collective handles, elastic shrink, detection.
+
+Covers the redesigned handle API (``register()`` -> CollectiveHandle,
+int shims intact), the unified error taxonomy, ``evict()``'s
+drain -> rebuild -> replay lifecycle — including the acceptance scenario:
+killing one rank mid-training at R=8 shrinks to R=7 in one relaunch with
+grad-sync results bit-identical to a fresh 7-rank runtime — and the
+straggler-detector -> diagnose -> evict e2e loop.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CollKind, CollectiveHandle, OcclConfig, OcclRuntime)
+from repro.core import errors as core_errors
+from repro.core.errors import DeadlockTimeout, EvictionError
+from repro.fabric.ft import ReliabilityController, StepTimeout
+from repro.fabric.straggler import StragglerDetector
+
+
+def _cfg(R, **kw):
+    kw.setdefault("max_colls", 12)
+    kw.setdefault("max_comms", 4)
+    kw.setdefault("slice_elems", 8)
+    kw.setdefault("heap_elems", 1 << 13)
+    return OcclConfig(n_ranks=R, **kw)
+
+
+def _payloads(R, n, seed=0):
+    # Integer-valued floats: reductions are EXACT in f32 regardless of
+    # ring order, so bit-equality assertions stay meaningful.
+    rng = np.random.RandomState(seed)
+    return {r: rng.randint(0, 1 << 10, n).astype(np.float32)
+            for r in range(R)}
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the handle API (+ int shims)
+# ---------------------------------------------------------------------------
+def test_register_returns_int_compatible_handle():
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=32)
+    assert isinstance(h, CollectiveHandle) and isinstance(h, int)
+    assert h == 0 and h.reg_index == 0 and h.alive
+    data = _payloads(R, 32)
+    for r in range(R):
+        h.submit(r, data=data[r])
+    rt.drive()
+    ref = sum(data.values())
+    for r in range(R):
+        np.testing.assert_array_equal(h.read(r), ref)
+    cs = h.stats()
+    assert cs["coll_id"] == 0 and cs["stages"] == [0]
+    assert int(cs["completed"].sum()) == R
+
+
+def test_int_coll_id_paths_still_work():
+    """The deprecated thin shim: every boundary accepts the bare int."""
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=16)
+    cid = int(h)          # strip the handle
+    data = _payloads(R, 16)
+    for r in range(R):
+        rt.write_input(r, cid, data[r])
+        rt.submit(r, cid)
+    rt.drive()
+    ref = sum(data.values())
+    np.testing.assert_array_equal(rt.read_output(2, cid), ref)
+    got = rt.read_outputs_bulk([(r, cid) for r in range(R)])
+    np.testing.assert_array_equal(got[(0, cid)], ref)
+
+
+def test_write_read_via_handle_methods():
+    R = 2
+    rt = OcclRuntime(_cfg(R, max_comms=1))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=16)
+    data = _payloads(R, 16)
+    for r in range(R):
+        h.write(r, data[r])
+        h.submit(r)
+    rt.drive()
+    np.testing.assert_array_equal(h.read(1), data[0] + data[1])
+
+
+def test_submit_all_on_handle():
+    R = 4
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=16)
+    data = _payloads(R, 16)
+    fired = []
+    h.submit_all(data=data, callback=lambda r, c: fired.append((r, c)))
+    rt.drive()
+    np.testing.assert_array_equal(h.read(0), sum(data.values()))
+    assert sorted(fired) == [(r, 0) for r in range(R)]
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: unified error taxonomy
+# ---------------------------------------------------------------------------
+def test_error_taxonomy_identity():
+    """Historic import paths resolve to the SAME classes as core.errors."""
+    from repro.core.runtime import (ConnDepthWarning, DeadlockTimeout as D,
+                                    RegistrationClosed)
+    assert D is core_errors.DeadlockTimeout
+    assert RegistrationClosed is core_errors.RegistrationClosed
+    assert ConnDepthWarning is core_errors.ConnDepthWarning
+    assert StepTimeout is core_errors.StepTimeout
+
+
+def test_deadlock_timeout_carries_flight_record():
+    R = 2
+    rt = OcclRuntime(_cfg(R, max_comms=1))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=16)
+    h.submit(0, data=np.ones(16, np.float32))   # rank 1 never submits
+    with pytest.raises(DeadlockTimeout) as ei:
+        rt.drive(max_launches=3)
+    e = ei.value
+    assert e.flight_record is not None and e.flight_record["enabled"]
+    assert e.diagnosis is not None and e.diagnosis.holders == [1]
+
+
+def test_registration_closed_after_first_launch():
+    R = 2
+    rt = OcclRuntime(_cfg(R, max_comms=2))
+    comm = rt.communicator(range(R))
+    h = rt.register(CollKind.ALL_REDUCE, comm, n_elems=16)
+    h.submit_all(data=_payloads(R, 16))
+    rt.drive()
+    with pytest.raises(core_errors.RegistrationClosed):
+        rt.register(CollKind.ALL_REDUCE, comm, n_elems=16)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: elastic shrink
+# ---------------------------------------------------------------------------
+def test_evict_flat_bit_equal_to_fresh():
+    """Kill rank 1 mid-flight at R=4; the shrunk runtime's outputs and
+    superstep count are bit-identical to a fresh 3-rank runtime driving
+    the same submissions."""
+    R, n = 4, 32
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    for r in range(R):          # round 1 completes everywhere
+        h.submit(r, data=data[r])
+    rt.drive()
+    for r in (0, 2, 3):         # round 2 wedges: rank 1 is dead
+        h.submit(r, data=data[r])
+    report = rt.evict(1)
+    assert report["n_ranks"] == 3 and report["replayed"] == 3
+    assert h.alive and h.coll_id == 0
+
+    fresh = OcclRuntime(_cfg(3))
+    hf = fresh.register(CollKind.ALL_REDUCE, fresh.communicator(range(3)),
+                        n_elems=n)
+    for i, old in enumerate((0, 2, 3)):
+        hf.submit(i, data=data[old])
+    fresh.drive()
+    for new_r in range(3):
+        np.testing.assert_array_equal(h.read(new_r), hf.read(new_r))
+    assert (int(np.asarray(rt.state.supersteps).max())
+            == int(np.asarray(fresh.state.supersteps).max()))
+
+
+def test_evict_two_level_r8_to_r7():
+    """The acceptance scenario: two-level composite grad-sync bucket at
+    R=8, rank 5 dies mid-round, one evict -> R=7 (prime: the replay
+    re-derives hierarchy (7, 1), whose single-member groups degenerate
+    cleanly), results bit-identical to a fresh 7-rank runtime."""
+    R, n = 8, 64
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE,
+                    rt.logical_communicator(range(R)),
+                    n_elems=n, algo="two_level", hierarchy=(2, 4))
+    for r in range(R):
+        h.submit(r, data=data[r])
+    rt.drive()
+    launches_before = rt.launches
+    for r in range(R):
+        if r != 5:
+            h.submit(r, data=data[r])
+    report = rt.evict(5)
+    assert report["n_ranks"] == 7 and report["replayed"] == 7
+    assert h.alive
+    assert rt.stats()["algos"][h.coll_id] == "two_level"
+
+    fresh = OcclRuntime(_cfg(7))
+    hf = fresh.register(CollKind.ALL_REDUCE,
+                        fresh.logical_communicator(range(7)),
+                        n_elems=n, algo="two_level")
+    survivors = [r for r in range(R) if r != 5]
+    for i, old in enumerate(survivors):
+        hf.submit(i, data=data[old])
+    fresh.drive()
+    for new_r in range(7):
+        np.testing.assert_array_equal(h.read(new_r), hf.read(new_r))
+    # One-relaunch resume: the post-evict drive needs no more launches
+    # than the fresh runtime's initial drive.
+    assert (rt.launches - launches_before - report["drain_launches"]
+            <= fresh.launches)
+    assert (int(np.asarray(rt.state.supersteps).max())
+            == int(np.asarray(fresh.state.supersteps).max()))
+
+
+def test_evict_replays_staged_but_unlaunched():
+    """Submissions staged AFTER the last launch (payload still host-side)
+    are replayed from the staging queue, not the heap."""
+    R, n = 4, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    rt.state                    # build WITHOUT launching (nothing flushed)
+    for r in (0, 2, 3):
+        h.submit(r, data=data[r])
+    report = rt.evict(1)
+    assert report["replayed"] == 3 and report["drain_launches"] >= 1
+    ref = data[0] + data[2] + data[3]
+    for new_r in range(3):
+        np.testing.assert_array_equal(h.read(new_r), ref)
+
+
+def test_evict_drops_dead_ranks_submissions_and_callbacks():
+    """Ranks 0, 1 and 3 submit but rank 2 never does, so the collective
+    wedges WITH the dead rank 3's submission in flight.  Evicting 3
+    drops its record, replays the survivors', and the late rank's
+    submission after the shrink completes the collective — firing the
+    replayed callbacks with post-shrink rank ids."""
+    R, n = 4, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    fired = []
+    for r in (0, 1, 3):
+        h.submit(r, data=data[r],
+                 callback=lambda rr, cc: fired.append(rr))
+    report = rt.evict(3, relaunch=False)
+    assert report["dropped"] == 1 and report["replayed"] == 2
+    h.submit(2, data=data[2])           # the late rank finally submits
+    rt.drive()
+    assert sorted(fired) == [0, 1]      # replayed callbacks, new rank ids
+    np.testing.assert_array_equal(h.read(0), data[0] + data[1] + data[2])
+
+
+def test_evicted_registration_raises():
+    """A broadcast rooted at the evicted rank dissolves; its handle goes
+    dead while sibling registrations survive."""
+    R, n = 4, 16
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    h_ar = rt.register(CollKind.ALL_REDUCE, comm, n_elems=n)
+    h_bc = rt.register(CollKind.BROADCAST, comm, n_elems=n, root=2)
+    data = _payloads(R, n)
+    h_ar.submit_all(data=data)
+    rt.drive()
+    with pytest.warns(UserWarning, match="dissolved"):
+        report = rt.evict(2)
+    assert h_ar.alive and not h_bc.alive
+    assert report["dissolved"] == [1]
+    with pytest.raises(EvictionError):
+        h_bc.submit(0, data=data[0])
+    with pytest.raises(EvictionError):
+        _ = h_bc.coll_id
+
+
+def test_device_api_goes_stale_after_evict():
+    R, n = 4, 16
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    h.submit_all(data=_payloads(R, n))
+    rt.drive()
+    api = rt.device_api()
+    assert not api.stale
+    rt.evict(0)
+    assert api.stale
+    with pytest.raises(EvictionError):
+        api.step_prologue(rt.state)
+    api2 = rt.device_api()      # fresh snapshot binds the shrunk tables
+    assert not api2.stale and api2 is not api
+
+
+def test_double_evict():
+    """Two successive shrinks (R=5 -> 3): handles keep resolving."""
+    R, n = 5, 20
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    h.submit_all(data=data)
+    rt.drive()
+    rt.evict(1)
+    rt.evict(2)                 # old rank 3 in the original numbering
+    assert rt.cfg.n_ranks == 3 and h.alive
+    survivors = [0, 2, 4]       # 1 evicted, then new-rank-2 (= old 3)
+    h.submit_all(data={i: data[r] for i, r in enumerate(survivors)})
+    rt.drive()
+    np.testing.assert_array_equal(h.read(0),
+                                  sum(data[r] for r in survivors))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: detection -> diagnosis -> eviction e2e
+# ---------------------------------------------------------------------------
+def test_straggler_detector_collective_stats_channel():
+    det = StragglerDetector(4)
+    stats = {"rtc_latency": np.zeros((4, 2)), "rtc_events": np.zeros((4, 2))}
+    det.observe_collective_stats(stats)          # baseline snapshot
+    # Window 2: ranks 0-2 complete cheaply, rank 3 completes nothing
+    # while the fleet median advances -> suspect.
+    stats = {"rtc_latency": np.array([[4., 0], [4, 0], [4, 0], [0, 0]]),
+             "rtc_events": np.array([[2., 0], [2, 0], [2, 0], [0, 0]])}
+    det.observe_collective_stats(stats)
+    assert det.suspect[3] and not det.suspect[:3].any()
+    assert det.healthy_ranks() == [0, 1, 2]
+    # A rank completing with far-above-median latency is flagged too.
+    det2 = StragglerDetector(4)
+    det2.observe_collective_stats(
+        {"rtc_latency": np.array([[4.], [4.], [4.], [40.]]),
+         "rtc_events": np.array([[2.], [2.], [2.], [2.]])})
+    assert det2.stragglers() == [3]
+
+
+def test_reliability_controller_e2e():
+    """Kill rank 2 at R=6; the controller turns the DeadlockTimeout into
+    a diagnosis, marks the holder suspect, evicts it via healthy_ranks()
+    and the replay completes on R=5."""
+    R, n = 6, 24
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    ctl = ReliabilityController(rt)
+    for r in range(R):
+        if r != 2:
+            h.submit(r, data=data[r])
+    try:
+        rt.drive(max_launches=3)
+        raise AssertionError("expected DeadlockTimeout")
+    except DeadlockTimeout as e:
+        ctl.observe_step({r: 0.01 for r in range(R) if r != 2})
+        evicted = ctl.heal(e)
+    assert evicted == [2] and rt.cfg.n_ranks == 5
+    assert ctl.detector.n_ranks == 5            # detector rebuilt
+    ref = sum(v for r, v in data.items() if r != 2)
+    for new_r in range(5):
+        np.testing.assert_array_equal(h.read(new_r), ref)
+
+
+# ---------------------------------------------------------------------------
+# grad-sync integration (acceptance: mid-training eviction at R=8)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_grad_sync_evict_mid_training():
+    import jax
+
+    from repro.train.occl_sync import OcclGradSync
+
+    R = 8
+    rng = np.random.RandomState(7)
+    tmpl = {"w": jax.ShapeDtypeStruct((40,), np.float32),
+            "b": jax.ShapeDtypeStruct((8,), np.float32)}
+    grads = [{"w": rng.rand(40).astype(np.float32),
+              "b": rng.rand(8).astype(np.float32)} for _ in range(R)]
+    sync = OcclGradSync(tmpl, n_ranks=R, bucket_elems=32, slice_elems=8)
+    got = sync.all_reduce(grads)                 # step 1: full fleet
+    ref = sum(np.asarray(g["w"]) for g in grads) / R
+    np.testing.assert_allclose(np.asarray(got[0]["w"]), ref, rtol=1e-5)
+
+    # rank 5 dies between steps; evict and keep training at R=7
+    report = sync.evict(5)
+    assert report["n_ranks"] == 7 and sync.n_ranks == 7
+    survivors = [g for i, g in enumerate(grads) if i != 5]
+    got7 = sync.all_reduce(survivors)
+
+    # bit-identical to a FRESH 7-rank sync over the same grads
+    fresh = OcclGradSync(tmpl, n_ranks=7, bucket_elems=32, slice_elems=8)
+    want7 = fresh.all_reduce(survivors)
+    for r in range(7):
+        for k in ("w", "b"):
+            np.testing.assert_array_equal(np.asarray(got7[r][k]),
+                                          np.asarray(want7[r][k]))
+    # ... and no more supersteps than the fresh baseline spent.
+    evicted_steps = int(np.asarray(sync.stats()["supersteps"]).max())
+    fresh_steps = int(np.asarray(fresh.stats()["supersteps"]).max())
+    assert evicted_steps - fresh_steps <= fresh_steps  # pre-evict step 1
