@@ -182,7 +182,16 @@ class OcclConfig:
                                     # per-kind cumulative counters are
                                     # wrap-proof, only the event ring
                                     # itself keeps the newest
-                                    # ``recorder_len`` events
+                                    # ``recorder_len`` events.  A single
+                                    # superstep can emit up to
+                                    # 4*max_comms + 1 events (4 transition
+                                    # kinds per lane + 1 SQE fetch);
+                                    # smaller rings stay deterministic
+                                    # (the scheduler pre-drops the oldest
+                                    # events of an over-long batch), but
+                                    # recorder_len >= 4*max_comms + 1
+                                    # guarantees the decoded ring is a
+                                    # gap-free suffix of the event stream
 
     # --- numerics / kernels ---------------------------------------------
     dtype: str = "float32"          # heap / wire dtype

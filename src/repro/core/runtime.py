@@ -867,9 +867,11 @@ class OcclRuntime:
            members renumber ``m -> m - (m > rank)``.  Each registration
            keeps its log index, so existing :class:`CollectiveHandle`\\ s
            re-resolve transparently; a registration whose group
-           dissolves (or whose ragged ``chunk_sizes`` cannot tile the
-           smaller ring) resolves to "gone" and its handle raises
-           :class:`EvictionError` on use.
+           dissolves, whose root rank died (BROADCAST/REDUCE), or whose
+           per-peer chunk layout cannot tile the smaller ring (flat and
+           ragged ALL_TO_ALL) resolves to "gone" and its handle raises
+           :class:`EvictionError` on use.  The rewritten log (members
+           AND root) is renumbered post-shrink, so evictions compose.
         3. **Replay**: re-submit every surviving wedged submission in
            original submission order with its recovered payload and
            original arguments, then (``relaunch=True``) ``drive()`` once
@@ -936,6 +938,7 @@ class OcclRuntime:
         dead = rank
         remap = {m: m - (m > dead) for m in range(R)}
         old_log = self._reg_log
+        old_cids = list(self._log_cids)
         self.cfg = dataclasses.replace(self.cfg, n_ranks=R - 1)
         self.comms = []
         self.specs = []
@@ -972,15 +975,28 @@ class OcclRuntime:
             for entry in old_log:
                 members = tuple(remap[m] for m in entry["members"]
                                 if m != dead)
-                new_entry = dict(entry, members=members)
-                new_log.append(new_entry)
                 if entry["what"] == "comm":
+                    new_log.append(dict(entry, members=members))
                     comm_map[entry["comm_id"]] = (
                         self.communicator(members) if members else None)
                     continue
                 # register entry: keep its _log_cids POSITION even when it
                 # dissolves — handle reg_index stability depends on it.
                 reg_index = len(new_log_cids)
+                was_alive = old_cids[reg_index] is not None
+                rooted = CollKind(entry["kind"]) in (
+                    CollKind.BROADCAST, CollKind.REDUCE)
+                # The rewritten log is in POST-shrink numbering: the root
+                # must be remapped alongside the members (a stale root
+                # would be misread against the NEXT evict's dead rank /
+                # remap).  A rooted entry whose root is gone keeps the
+                # tombstone -1 so it stays dissolved across later evicts.
+                root = entry["root"]
+                root_gone = rooted and (root < 0 or root == dead)
+                new_root = -1 if root_gone else \
+                    (remap[root] if rooted else 0)
+                new_entry = dict(entry, members=members, root=new_root)
+                new_log.append(new_entry)
                 head = None
                 comm = None
                 if members:
@@ -998,41 +1014,45 @@ class OcclRuntime:
                         # Per-distance ragged capacities are defined over
                         # the ORIGINAL ring size; they cannot be remapped
                         # onto a smaller ring — dissolve loudly.
-                        warnings.warn(
-                            f"registration {reg_index} "
-                            "(ALL_TO_ALL_RAGGED) dissolved by evict(): "
-                            f"chunk_sizes has {len(sizes)} per-distance "
-                            f"counts but the shrunk group has "
-                            f"{len(members)} members", stacklevel=2)
+                        if was_alive:
+                            warnings.warn(
+                                f"registration {reg_index} "
+                                "(ALL_TO_ALL_RAGGED) dissolved by evict(): "
+                                f"chunk_sizes has {len(sizes)} per-distance "
+                                f"counts but the shrunk group has "
+                                f"{len(members)} members", stacklevel=2)
                         comm = None
-                    elif (CollKind(entry["kind"]) is CollKind.ALL_TO_ALL
-                          and entry["n_elems"] % len(members) != 0):
-                        warnings.warn(
-                            f"registration {reg_index} (ALL_TO_ALL) "
-                            f"dissolved by evict(): n_elems="
-                            f"{entry['n_elems']} is not divisible by the "
-                            f"shrunk ring size {len(members)}",
-                            stacklevel=2)
+                    elif CollKind(entry["kind"]) is CollKind.ALL_TO_ALL:
+                        # The flat all-to-all's I/O is R equal per-peer
+                        # chunks of n_elems/R: any payload (staged,
+                        # in-heap, or application-side) laid out for the
+                        # original ring scrambles on a smaller one (chunk
+                        # size changes, the dead rank's chunk has no
+                        # destination) — dissolve like the ragged variant.
+                        if was_alive:
+                            warnings.warn(
+                                f"registration {reg_index} (ALL_TO_ALL) "
+                                "dissolved by evict(): its per-peer chunk "
+                                "layout is defined over the original ring "
+                                "size and cannot be re-tiled for "
+                                f"{len(members)} members", stacklevel=2)
                         comm = None
-                    rooted = CollKind(entry["kind"]) in (
-                        CollKind.BROADCAST, CollKind.REDUCE)
-                    if comm is not None and rooted and \
-                            entry["root"] == dead:
+                    if comm is not None and root_gone:
                         # The semantic endpoint (broadcast source / reduce
                         # destination) is gone; silently re-rooting would
                         # change the collective's meaning.
-                        warnings.warn(
-                            f"registration {reg_index} "
-                            f"({CollKind(entry['kind']).name}) dissolved "
-                            f"by evict(): its root rank {dead} was "
-                            "evicted", stacklevel=2)
+                        if was_alive:
+                            warnings.warn(
+                                f"registration {reg_index} "
+                                f"({CollKind(entry['kind']).name}) "
+                                f"dissolved by evict(): its root rank "
+                                f"{dead} was evicted", stacklevel=2)
                         comm = None
                     if comm is not None:
                         head = self._register_impl(
                             entry["kind"], comm, entry["n_elems"],
                             op=entry["op"],
-                            root=(remap[entry["root"]]
-                                  if entry["root"] != dead else 0),
+                            root=(new_root if rooted else 0),
                             algo=entry["algo"], hierarchy=hier,
                             inherit_prio=entry["inherit_prio"],
                             chunk_sizes=sizes)

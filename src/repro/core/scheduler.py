@@ -318,23 +318,31 @@ def _record_events(cfg: OcclConfig, st: DaemonState, kinds: jnp.ndarray,
 
     Same masked-scatter ring-append pattern as the CQ ring (lanes_step):
     exclusive-cumsum slot assignment over the valid mask, invalid entries
-    routed to a dropped target.  ``fr_step`` stamps the cumulative epoch
-    clock; ``fr_kinds`` keeps wrap-proof per-kind cumulative counters.
-    Compiled out entirely when ``cfg.flight_recorder`` is off.
+    routed to a dropped target.  A batch larger than the ring would map
+    two events onto one slot WITHIN a single scatter (nondeterministic
+    winner), so all but the newest ``recorder_len`` events of the batch
+    are pre-dropped — ring semantics ("keep the newest events") are
+    unchanged and the write stays collision-free for any
+    ``recorder_len >= 1``.  ``fr_step`` stamps the cumulative epoch
+    clock; ``fr_kinds`` keeps wrap-proof per-kind cumulative counters
+    (dropped events still count).  Compiled out entirely when
+    ``cfg.flight_recorder`` is off.
     """
     if not cfg.flight_recorder:
         return st
     FR = cfg.recorder_len
     n = valid.astype(jnp.int32)
     off = jnp.cumsum(n) - n                                 # exclusive scan
+    total = jnp.sum(n)
+    keep = valid & (off >= total - FR)
     slot = (st.fr_count + off) % FR
-    tgt = jnp.where(valid, slot, FR)
+    tgt = jnp.where(keep, slot, FR)
     ktgt = jnp.where(valid, kinds, N_EVENT_KINDS)
     return st._replace(
         fr_kind=st.fr_kind.at[tgt].set(kinds, mode="drop"),
         fr_coll=st.fr_coll.at[tgt].set(colls, mode="drop"),
         fr_step=st.fr_step.at[tgt].set(st.supersteps, mode="drop"),
-        fr_count=st.fr_count + jnp.sum(n),
+        fr_count=st.fr_count + total,
         fr_kinds=st.fr_kinds.at[ktgt].add(1, mode="drop"),
     )
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -118,13 +119,20 @@ class ReliabilityController:
     3. **heal**: evict every rank outside ``healthy_ranks()`` (highest
        rank first, so earlier evictions do not renumber later ones) and
        resume — ``evict()`` replays the wedged submissions, so surviving
-       ranks' in-flight work completes on the shrunk fabric.
+       ranks' in-flight work completes on the shrunk fabric.  The
+       eviction list is capped so at least ``min_survivors`` ranks stay
+       (a detector that flags the whole fleet — e.g. diagnose naming
+       every member of a stalled chain — must not tear the job down
+       mid-heal); the capped remainder is reported in ``deferred``.
     """
 
-    def __init__(self, runtime, detector: StragglerDetector | None = None):
+    def __init__(self, runtime, detector: StragglerDetector | None = None,
+                 min_survivors: int = 1):
         self.runtime = runtime
         self.detector = detector or StragglerDetector(runtime.cfg.n_ranks)
         self.evicted: list[int] = []    # ranks as numbered at eviction time
+        self.min_survivors = max(1, min_survivors)
+        self.deferred: list[int] = []   # suspects kept alive by the cap
 
     def observe_step(self, step_times_s=None) -> None:
         """One observation window: optional per-rank wall-clock times
@@ -139,14 +147,32 @@ class ReliabilityController:
         """Mark diagnosed holders suspect, evict every unhealthy rank and
         resume.  Returns the evicted ranks (pre-eviction numbering).
         With no ``error``, diagnoses the runtime's current outstanding
-        set directly (no-op when nothing is stalled)."""
+        set directly (no-op when nothing is stalled).  Evictions are
+        capped to keep ``min_survivors`` ranks; suspects spared by the
+        cap land in ``self.deferred`` (with a warning) instead of
+        raising :class:`~repro.core.errors.EvictionError` mid-loop."""
         diag = error.diagnosis if error is not None and \
             error.diagnosis is not None else diagnose(self.runtime)
         for r in diag.holders:
             self.detector.mark_suspect(r)
         healthy = set(self.detector.healthy_ranks())
-        bad = sorted((r for r in range(self.runtime.cfg.n_ranks)
-                      if r not in healthy), reverse=True)
+        R = self.runtime.cfg.n_ranks
+        bad = sorted((r for r in range(R) if r not in healthy),
+                     reverse=True)
+        # Floor: never evict past min_survivors ranks — a detector that
+        # flags (almost) everyone would otherwise hit EvictionError
+        # MID-loop with some evictions already applied.  Highest-numbered
+        # suspects go first (stable renumbering); the rest are deferred,
+        # not evicted, and reported for the controller's next window.
+        max_evict = max(0, R - self.min_survivors)
+        self.deferred = sorted(bad[max_evict:])
+        bad = bad[:max_evict]
+        if self.deferred:
+            warnings.warn(
+                f"heal(): {len(bad) + len(self.deferred)} of {R} ranks "
+                f"flagged unhealthy; evicting {len(bad)} and keeping "
+                f"suspect rank(s) {self.deferred} alive to preserve "
+                f"{self.min_survivors} survivor(s)", stacklevel=2)
         for r in bad:
             self.runtime.evict(r)
         if bad:

@@ -7,6 +7,8 @@ killing one rank mid-training at R=8 shrinks to R=7 in one relaunch with
 grad-sync results bit-identical to a fresh 7-rank runtime — and the
 straggler-detector -> diagnose -> evict e2e loop.
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -308,6 +310,97 @@ def test_double_evict():
                                   sum(data[r] for r in survivors))
 
 
+def test_double_evict_rooted_broadcast_remaps_root():
+    """The registration log rewrites its root in POST-shrink numbering:
+    two consecutive evictions of a rooted collective must keep the handle
+    resolving (regression: the second evict used to KeyError on the
+    stale pre-shrink root) and broadcast from the renumbered source."""
+    R, n = 5, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    h_bc = rt.register(CollKind.BROADCAST, comm, n_elems=n, root=3)
+    h_bc.submit_all(data=data)
+    rt.drive()
+    rt.evict(1)                 # root old-3 renumbers to 2
+    rt.evict(0)                 # ... and to 1; neither kills it
+    assert rt.cfg.n_ranks == 3 and h_bc.alive
+    # New numbering: new0=old2, new1=old3 (the root), new2=old4.
+    h_bc.submit_all(data={i: data[r] for i, r in enumerate((2, 3, 4))})
+    rt.drive()
+    for new_r in range(3):
+        np.testing.assert_array_equal(h_bc.read(new_r), data[3])
+
+
+def test_second_evict_dissolves_renumbered_root():
+    """Evicting the root under its POST-shrink id must dissolve the
+    rooted registration (the stale pre-shrink root numbering used to
+    make the dissolve check miss it)."""
+    R, n = 4, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    h_ar = rt.register(CollKind.ALL_REDUCE, comm, n_elems=n)
+    h_bc = rt.register(CollKind.BROADCAST, comm, n_elems=n, root=3)
+    h_ar.submit_all(data=data)
+    rt.drive()
+    rt.evict(0)                 # root old-3 renumbers to 2
+    assert h_bc.alive
+    with pytest.warns(UserWarning, match="BROADCAST.*dissolved"):
+        rt.evict(2)             # kills old rank 3 — the actual root
+    assert h_ar.alive and not h_bc.alive
+    with pytest.raises(EvictionError):
+        h_bc.submit(0, data=data[0])
+
+
+def test_dissolved_root_stays_dissolved_across_evicts():
+    """A rooted registration dissolved by one evict is tombstoned: a
+    later evict neither resurrects it nor re-warns about it."""
+    R, n = 5, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    h_ar = rt.register(CollKind.ALL_REDUCE, comm, n_elems=n)
+    h_bc = rt.register(CollKind.BROADCAST, comm, n_elems=n, root=2)
+    h_ar.submit_all(data=data)
+    rt.drive()
+    with pytest.warns(UserWarning, match="dissolved"):
+        rt.evict(2)
+    assert not h_bc.alive
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rt.evict(0)
+    assert not [w for w in caught if "dissolved" in str(w.message)]
+    assert rt.cfg.n_ranks == 3 and h_ar.alive and not h_bc.alive
+    h_ar.submit_all(data={i: data[r] for i, r in enumerate((1, 3, 4))})
+    rt.drive()
+    np.testing.assert_array_equal(h_ar.read(0),
+                                  data[1] + data[3] + data[4])
+
+
+def test_evict_dissolves_flat_alltoall():
+    """ALL_TO_ALL payloads are R equal per-peer chunks: a pre-shrink
+    layout scrambles on a smaller ring even when n_elems stays divisible,
+    so evict() dissolves the registration (like the ragged variant) and
+    drops its wedged replays instead of silently re-chunking them."""
+    R, n = 4, 12                # 12 divides by 4 AND by 3 — the silent case
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    comm = rt.communicator(range(R))
+    h_ar = rt.register(CollKind.ALL_REDUCE, comm, n_elems=n)
+    h_a2a = rt.register(CollKind.ALL_TO_ALL, comm, n_elems=n)
+    h_ar.submit_all(data=data)
+    rt.drive()
+    for r in (0, 2, 3):         # wedged round: rank 1 is dead
+        h_a2a.submit(r, data=data[r])
+    with pytest.warns(UserWarning, match="ALL_TO_ALL.*dissolved"):
+        report = rt.evict(1)
+    assert h_ar.alive and not h_a2a.alive
+    assert report["dissolved"] == [1] and report["replayed"] == 0
+    with pytest.raises(EvictionError):
+        h_a2a.submit(0, data=data[0])
+
+
 # ---------------------------------------------------------------------------
 # satellite 3: detection -> diagnosis -> eviction e2e
 # ---------------------------------------------------------------------------
@@ -354,6 +447,30 @@ def test_reliability_controller_e2e():
     ref = sum(v for r, v in data.items() if r != 2)
     for new_r in range(5):
         np.testing.assert_array_equal(h.read(new_r), ref)
+
+
+def test_heal_caps_evictions_to_keep_survivors():
+    """A detector that flags the WHOLE fleet (e.g. diagnose naming every
+    member of a stalled chain) must not tear the job down mid-heal:
+    heal() caps the eviction list at min_survivors and defers the rest
+    instead of raising EvictionError with some evictions applied."""
+    R, n = 4, 16
+    data = _payloads(R, n)
+    rt = OcclRuntime(_cfg(R))
+    h = rt.register(CollKind.ALL_REDUCE, rt.communicator(range(R)),
+                    n_elems=n)
+    h.submit_all(data=data)
+    rt.drive()
+    ctl = ReliabilityController(rt, min_survivors=2)
+    for r in range(R):
+        ctl.detector.mark_suspect(r)
+    with pytest.warns(UserWarning, match="keeping suspect"):
+        evicted = ctl.heal()
+    assert evicted == [3, 2] and ctl.deferred == [0, 1]
+    assert rt.cfg.n_ranks == 2 and h.alive
+    h.submit_all(data={0: data[0], 1: data[1]})
+    rt.drive()
+    np.testing.assert_array_equal(h.read(0), data[0] + data[1])
 
 
 # ---------------------------------------------------------------------------
