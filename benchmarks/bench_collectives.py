@@ -277,6 +277,13 @@ RECORD_SECTIONS = {
     # bench_reliability.run_reliability_bench, gated in check_gates.py
     # (evicted <= fresh supersteps; recorder overhead <= 5%).
     "reliability": ("evict", "recorder"),
+    # Serving QoS traffic replay (bench_serving.run_serving_bench):
+    # decode p50/p99 under adversarial background bursts with priority
+    # preemption on vs off, gated in check_gates.py (on-p99 strictly
+    # below off-p99; background degrades gracefully, no unbounded
+    # starvation).
+    "serving": ("config", "preempt_on", "preempt_off", "p99_ratio",
+                "background_ratio"),
 }
 
 

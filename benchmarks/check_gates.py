@@ -62,6 +62,17 @@ shared CI runners are noisy; the gate catches REGRESSIONS, not jitter):
   on both sides — the recorder is a handful of in-jit scatters per
   superstep, an order of magnitude under the gate).
 
+* **serving** — the QoS traffic replay (bench_serving.py): with mixed
+  tenants sharing one lane under adversarial background bursts,
+  priority preemption must yield STRICTLY lower p99 decode latency
+  (supersteps — structural, deterministic per seed) than the
+  no-preemption FIFO baseline, the preempt counter must actually
+  advance (a "win" with zero preemptions means the contention
+  disappeared and the scenario stopped testing anything), and the
+  background tenant must degrade gracefully rather than starve: every
+  admitted burst drains once arrivals stop, and its contention-window-
+  normalized throughput stays >= 0.15x the baseline's.
+
 A missing or partial record FAILS (validate_record): a stale
 BENCH_collectives.json silently skipping a gate was the failure mode
 that motivated this script.
@@ -272,6 +283,39 @@ def check(doc: dict) -> list[str]:
         failures.append(
             f"flight recorder costs {fr['overhead_frac'] * 100:.1f}% "
             "supersteps/sec on the burst sweep (gate: <= 5%)")
+
+    sv = doc["serving"]
+    on, off = sv["preempt_on"], sv["preempt_off"]
+    print(f"serving decode p99 (supersteps): preempt on "
+          f"{on['decode']['p99']:.0f}, off {off['decode']['p99']:.0f} "
+          f"(ratio {sv['p99_ratio']:.2f}, preempts {on['preempts']}); "
+          f"background/kstep on {on['background_per_kstep']:.2f}, "
+          f"off {off['background_per_kstep']:.2f} "
+          f"(ratio {sv['background_ratio']:.2f})")
+    if not on["decode"]["p99"] < off["decode"]["p99"]:
+        failures.append(
+            f"QoS preemption no longer improves decode p99: "
+            f"{on['decode']['p99']:.0f} supersteps with preemption vs "
+            f"{off['decode']['p99']:.0f} without (gate: strictly lower)")
+    if not on["preempts"] > 0:
+        failures.append(
+            "serving replay recorded zero preemptions with preemption on "
+            "— the adversarial background load stopped contending and the "
+            "p99 comparison is vacuous")
+    for label, rec in (("on", on), ("off", off)):
+        if not rec["background_drained"]:
+            failures.append(
+                f"background tenant failed to drain after arrivals "
+                f"stopped (preemption {label}): "
+                f"{rec['background']['completed']}/"
+                f"{rec['background_admitted']} bursts completed — "
+                "bounded starvation is violated")
+    if sv["background_ratio"] < 0.15:
+        failures.append(
+            f"background tenant is starved under preemption: "
+            f"{sv['background_ratio']:.2f}x the no-preemption throughput "
+            "per busy superstep (gate: >= 0.15x — degrade gracefully, "
+            "don't starve)")
     return failures
 
 
@@ -282,7 +326,7 @@ def main(argv: list[str]) -> int:
             else bench_collectives.BENCH_JSON)
     doc = bench_collectives.validate_record(
         required=("staging", "contention", "mesh", "hierarchy", "algos",
-                  "alltoall", "training", "reliability"),
+                  "alltoall", "training", "reliability", "serving"),
         out_path=path)
     failures = check(doc)
     for f in failures:

@@ -73,6 +73,11 @@ def main(quick: bool = False) -> None:
         # workload and only trims iters.
         import bench_reliability
         bench_reliability.run_reliability_bench(iters=5)
+        # Serving QoS replay: the p99 gate compares structural superstep
+        # percentiles on a deterministic trace, so the CI smoke runs the
+        # full acceptance workload (a few thousand 1-superstep ticks).
+        import bench_serving
+        bench_serving.run_serving_bench()
         # Fail LOUDLY on a stale/partial record: every section the gates
         # consume must have been (re)written by THIS run — a missing
         # ``contention`` key in a stale BENCH_collectives.json used to
@@ -99,6 +104,8 @@ def main(quick: bool = False) -> None:
     bench_training.run_training_bench()
     import bench_reliability
     bench_reliability.run_reliability_bench()
+    import bench_serving
+    bench_serving.run_serving_bench()
     bench_collectives.validate_record()
     import bench_deadlock
     bench_deadlock.run(iters=2)

@@ -126,6 +126,22 @@ class OcclConfig:
     spin_boost: int = 8             # boost to successors on primitive success
     spin_min: int = 1
     spin_max: int = 256
+    # Priority aging (QoS starvation bound, serving/qos.py): under
+    # OrderPolicy.PRIORITY a queued collective's EFFECTIVE priority is
+    # ``prio + min(queue_age // prio_aging_quantum, prio_aging_cap)``,
+    # used for BOTH the queue-order key and the priority_preempts
+    # comparison and clipped to the same +/-512 band as user priority —
+    # the queue-key magnitude proof above is unchanged.  Queue age is
+    # measured on the per-launch clock (``max_colls + launch_steps -
+    # arrival``), so rebase_arrivals resets it at every relaunch: a bump
+    # never outlives the launch that earned it.  0 disables aging and is
+    # bit-identical to the pre-knob scheduler.
+    prio_aging_quantum: int = 0     # queue-age supersteps per +1 eff. prio
+    prio_aging_cap: int = 127       # max aging bump; conservative default
+                                    # stays UNDER one serving class stride
+                                    # (128) — aged work reorders within its
+                                    # class only.  serving/qos.py passes 255
+                                    # to allow exactly one class crossing.
 
     # --- daemon lifecycle (paper Sec. 3.1.3) ----------------------------
     quit_threshold: int = 64        # voluntary quit after this many
@@ -239,6 +255,10 @@ class OcclConfig:
         assert self.algo in ("ring", "two_level", "torus", "hybrid",
                              "tree", "auto"), self.algo
         assert self.recorder_len >= 1
+        assert self.prio_aging_quantum >= 0
+        assert 0 <= self.prio_aging_cap <= 511, (
+            "prio_aging_cap must stay within the +/-512 priority clip "
+            "band (queue-key magnitude proof)")
         assert self.bandwidth_groups >= 0
         assert self.intra_burst_cap >= 0 and self.inter_burst_cap >= 0
         if self.bandwidth_groups > 1:

@@ -196,6 +196,28 @@ def _combine_by_op(op: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
                   jnp.where(opc == 2, jnp.minimum(a, b), a * b)))
 
 
+def _effective_prio(cfg, st):
+    """Live priority including the bounded queue-age bump ([C]).
+
+    With ``cfg.prio_aging_quantum`` set, a queued collective earns
+    ``min(age // quantum, cap)`` extra priority where age is its launch-
+    clock queue residency (``max_colls + launch_steps - arrival``) — the
+    QoS starvation bound: a low class overtakes the class above it after
+    a config-bounded wait, but the cap (<= one class stride in
+    serving/qos.py) keeps it below the top class.  Clipped to the same
+    +/-512 band as user priority so the queue-key magnitude proof in
+    config.py is unchanged.  Quantum 0 returns ``st.prio`` untouched —
+    bit-identical to the pre-aging scheduler.
+    """
+    if cfg.prio_aging_quantum <= 0:
+        return st.prio
+    age = jnp.maximum(
+        jnp.int32(cfg.max_colls) + st.launch_steps - st.arrival, 0)
+    bump = jnp.minimum(age // jnp.int32(cfg.prio_aging_quantum),
+                       jnp.int32(cfg.prio_aging_cap))
+    return jnp.clip(st.prio + bump, -512, 512)
+
+
 def _lane_keys(cfg, st, shared, local):
     """Ascending queue-order key per collective for every lane at once.
 
@@ -216,7 +238,9 @@ def _lane_keys(cfg, st, shared, local):
         key = key - demand[None, :] * _DEMAND
     if cfg.order_policy == OrderPolicy.PRIORITY:
         # Higher priority first; FIFO (+demand) within equal priority.
-        key = (-st.prio[None, :]) * _BIG + key
+        # Aging (if configured) bumps the effective class of long-queued
+        # collectives — the serving QoS starvation bound.
+        key = (-_effective_prio(cfg, st)[None, :]) * _BIG + key
     key = jnp.where(eligible, key, jnp.iinfo(jnp.int32).max)
     return eligible, key
 
@@ -459,8 +483,12 @@ def lanes_step(cfg: OcclConfig, st: DaemonState, shared: SharedTables,
     cur_ok = (cur >= 0) & eligible[lanes, cur_c]
     overspun = cur_ok & (st.spin[cur_c] > thr[lanes, cur_c])
     if cfg.priority_preempts:
+        # Same effective priority (aging included) as the queue key, so
+        # an aged-up collective both sorts ahead AND preempts — one
+        # consistent class ladder.
+        ep = _effective_prio(cfg, st)
         higher = jnp.any(
-            eligible & (st.prio[None, :] > st.prio[cur_c][:, None]), axis=1)
+            eligible & (ep[None, :] > ep[cur_c][:, None]), axis=1)
         overspun = overspun | (cur_ok & higher)
 
     # Preempt: context switch — dynamic context stays in the context buffer

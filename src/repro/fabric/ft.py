@@ -127,21 +127,56 @@ class ReliabilityController:
     """
 
     def __init__(self, runtime, detector: StragglerDetector | None = None,
-                 min_survivors: int = 1):
+                 min_survivors: int = 1, tenant_namer=None):
         self.runtime = runtime
         self.detector = detector or StragglerDetector(runtime.cfg.n_ranks)
         self.evicted: list[int] = []    # ranks as numbered at eviction time
         self.min_survivors = max(1, min_survivors)
         self.deferred: list[int] = []   # suspects kept alive by the cap
+        # Optional coll_id -> tenant-label map (serving QoS: the fabric
+        # is multi-tenant, and a diagnosis that names "collective 3"
+        # without saying WHICH traffic class owns it sends the operator
+        # back to the registration log).
+        self.tenant_namer = tenant_namer
+
+    @classmethod
+    def for_serving(cls, qos, detector: StragglerDetector | None = None,
+                    min_survivors: int = 1) -> "ReliabilityController":
+        """Bind the reliability loop to a serving QoS fabric
+        (:class:`~repro.serving.qos.ServingQos`): the decode tenant's
+        rtc-latency feeds the same collective EWMA channel as training
+        collectives, and diagnosis names stalled chains BY tenant — a
+        wedged background burst is reported as BACKGROUND holding the
+        lane instead of silently inflating decode p99."""
+        return cls(qos.runtime, detector=detector,
+                   min_survivors=min_survivors, tenant_namer=qos.class_of)
 
     def observe_step(self, step_times_s=None) -> None:
         """One observation window: optional per-rank wall-clock times
         (``{rank: seconds}``) plus the runtime's current collective
-        stats."""
+        stats.  On a serving fabric the stats include the decode
+        tenant's per-rank rtc latency, so a rank dragging decode feeds
+        the same EWMA channel as one dragging grad-sync."""
         if step_times_s:
             for r, t in step_times_s.items():
                 self.detector.observe(r, t)
         self.detector.observe_collective_stats(self.runtime.stats())
+
+    def diagnose_tenants(self) -> list[dict]:
+        """Current stalled chains annotated with their tenant label
+        (``tenant_namer``; None for unmapped collectives) — the
+        serving-facing diagnosis surface."""
+        out = []
+        for s in diagnose(self.runtime).stalled:
+            out.append({
+                "coll_id": int(s.coll_id),
+                "tenant": (self.tenant_namer(s.coll_id)
+                           if self.tenant_namer else None),
+                "holding_ranks": list(s.holding_ranks),
+                "waiting_ranks": list(s.waiting_ranks),
+                "reason": s.reason,
+            })
+        return out
 
     def heal(self, error: DeadlockTimeout | None = None) -> list[int]:
         """Mark diagnosed holders suspect, evict every unhealthy rank and

@@ -1,13 +1,28 @@
-"""Batched serving engine: continuous prefill + decode over a request queue.
+"""Batched serving engine: continuous batching over recycled slots.
 
 CPU/testbed-scale engine with the production control flow: requests are
-admitted into fixed batch slots, prefilled (padded to the bucket), then
-decoded step-locked as a batch; finished slots are recycled for waiting
-requests.  The decode step is the same jitted ``serve_step`` the dry-run
-lowers at 32k/500k scale.
+admitted into batch slots as they free up (continuous batching — a long
+request no longer stalls the whole batch behind a cohort drain), decoded
+step-locked as a batch, and retired individually.  The decode step is
+the same jitted ``serve_step`` the dry-run lowers at 32k/500k scale.
+
+Admission re-prefills the whole active set (prefix replay): the KV cache
+is batch-global ([B] rows sharing one position counter), so recycling a
+slot means replaying every live slot's prompt + generated suffix into a
+fresh cache.  That is the standard testbed continuous-batching shape
+short of paged attention, and it bounds cache pressure — every admission
+resets the decode position.
+
+With a :class:`~repro.serving.qos.ServingQos` fabric attached, every
+prefill issues the prompt all-gather and every decode step issues the
+tensor-parallel all-reduce as staged OCCL submits on the shared fabric —
+decode collectives preempt in-flight background bursts mid-superstep
+(see qos.py), and the engine's stats gain the per-step collective
+latency digest.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -30,7 +45,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, *, batch_size: int = 4,
-                 prompt_len: int = 32, max_len: int = 96, seed: int = 0):
+                 prompt_len: int = 32, max_len: int = 96, seed: int = 0,
+                 qos=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = self.model.init(seed)
@@ -38,16 +54,28 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, pad_to=self.max_len))
         self._decode = jax.jit(self.model.decode_step)
-        self.queue: list[Request] = []
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        self.queue: collections.deque[Request] = collections.deque()
+        self.qos = qos
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "admissions": 0}
 
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _batchify(self, reqs: list[Request]) -> dict:
+    def _batchify(self, slots: list) -> dict:
+        """Replay each live slot's prompt + generated suffix (newest
+        ``S`` tokens) into the fixed [B, S] prefill shape; free slots
+        stay zero rows."""
         toks = np.zeros((self.B, self.S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, :len(r.prompt)] = r.prompt[:self.S]
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            seq = np.asarray(r.prompt, np.int32)
+            if r.out_tokens:
+                seq = np.concatenate(
+                    [seq, np.asarray(r.out_tokens, np.int32)])
+            seq = seq[-self.S:]
+            toks[i, :len(seq)] = seq
         batch = {"tokens": jnp.asarray(toks)}
         cfg = self.cfg
         if cfg.family == "vlm":
@@ -59,30 +87,64 @@ class ServingEngine:
         return batch
 
     def run(self) -> list[Request]:
-        """Drain the queue; returns completed requests."""
+        """Drain the queue with continuous batching; returns completed
+        requests in completion order.
+
+        Invariant (asserted in tests): ``stats["tokens"]`` equals
+        ``sum(len(r.out_tokens))`` over every request ever admitted —
+        each token is counted exactly once, at append time, including a
+        request's final token on the step that marks it done.
+        """
         finished: list[Request] = []
-        while self.queue:
-            reqs = [self.queue.pop(0) for _ in
-                    range(min(self.B, len(self.queue)))]
-            while len(reqs) < self.B:       # pad the batch
-                reqs.append(Request(rid=-1, prompt=np.zeros(1, np.int32),
-                                    max_new_tokens=0, done=True))
-            batch = self._batchify(reqs)
-            logits, cache = self._prefill(self.params, batch)
-            self.stats["prefills"] += 1
-            toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            steps = max((r.max_new_tokens for r in reqs), default=0)
-            for _ in range(steps):
-                for i, r in enumerate(reqs):
-                    if not r.done:
-                        r.out_tokens.append(int(toks[i]))
-                        if len(r.out_tokens) >= r.max_new_tokens:
-                            r.done = True
-                logits, cache = self._decode(self.params, cache, toks)
-                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                self.stats["decode_steps"] += 1
-                self.stats["tokens"] += sum(1 for r in reqs if not r.done)
-                if all(r.done for r in reqs):
-                    break
-            finished.extend(r for r in reqs if r.rid >= 0)
+        active: list[Optional[Request]] = [None] * self.B
+        cache = None
+        toks = None
+        while self.queue or any(r is not None for r in active):
+            if self.queue and any(r is None for r in active):
+                # Admission event: recycle every free slot, then replay
+                # the whole active set through one prefill.
+                for i in range(self.B):
+                    if active[i] is None and self.queue:
+                        req = self.queue.popleft()
+                        self.stats["admissions"] += 1
+                        if req.max_new_tokens <= 0:
+                            req.done = True
+                            finished.append(req)
+                            continue
+                        active[i] = req
+                if not any(r is not None for r in active):
+                    continue        # queue held only zero-token requests
+                logits, cache = self._prefill(self.params,
+                                              self._batchify(active))
+                self.stats["prefills"] += 1
+                if self.qos is not None:
+                    self.qos.prefill_event()
+                toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            # Append the batch's current tokens; count each token ONCE,
+            # at append time, so the counter reconciles exactly with
+            # out_tokens even on a request's final step.
+            t_host = np.asarray(toks)
+            for r, t in zip(active, t_host):
+                if r is not None:
+                    r.out_tokens.append(int(t))
+                    self.stats["tokens"] += 1
+                    if len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+            # Retire finished slots mid-flight — freed slots re-admit at
+            # the top of the next iteration (continuous batching).
+            for i, r in enumerate(active):
+                if r is not None and r.done:
+                    finished.append(r)
+                    active[i] = None
+            if not any(r is not None for r in active):
+                continue
+            if self.queue and any(r is None for r in active):
+                continue            # admit (re-prefill) before decoding on
+            logits, cache = self._decode(self.params, cache, toks)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.stats["decode_steps"] += 1
+            if self.qos is not None:
+                self.qos.decode_event()
+        if self.qos is not None:
+            self.stats["qos"] = self.qos.summary()
         return finished

@@ -9,11 +9,11 @@ from repro.configs import get_config
 from repro.serving.engine import Request, ServingEngine
 
 
-def _reqs(n, vocab, seed=0):
+def _reqs(n, vocab, seed=0, max_new=5):
     rng = np.random.RandomState(seed)
     return [Request(rid=i,
                     prompt=rng.randint(0, vocab, size=rng.randint(3, 12)),
-                    max_new_tokens=5) for i in range(n)]
+                    max_new_tokens=max_new) for i in range(n)]
 
 
 def test_engine_drains_queue_multiple_batches():
@@ -24,7 +24,78 @@ def test_engine_drains_queue_multiple_batches():
     done = eng.run()
     assert len(done) == 7
     assert all(len(r.out_tokens) == 5 for r in done)
-    assert eng.stats["prefills"] == 3          # ceil(7/3) batches
+    # Uniform max_new: slots free together, so continuous batching still
+    # admits in ceil(7/3) cohorts.
+    assert eng.stats["prefills"] == 3
+    assert eng.stats["tokens"] == sum(len(r.out_tokens) for r in done)
+
+
+def test_engine_recycles_slots_mid_flight():
+    """Heterogeneous decode lengths: the long request must NOT hold the
+    short ones' slots hostage — freed slots re-admit from the queue
+    while the long request keeps decoding (continuous batching), and the
+    token counter reconciles exactly with the emitted tokens."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    eng = ServingEngine(cfg, batch_size=2, prompt_len=12, max_len=24)
+    reqs = _reqs(4, cfg.vocab, seed=1)
+    for r, n in zip(reqs, [8, 2, 2, 2]):
+        r.max_new_tokens = n
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 4
+    assert sorted(len(r.out_tokens) for r in done) == [2, 2, 2, 8]
+    # The rid=0 long request finishes LAST: the short ones were admitted
+    # into its partner slot mid-flight and retired before it.
+    assert done[-1].rid == 0
+    # A fixed-cohort engine would need ceil(4/2)=2 prefills but run the
+    # long request alone for its tail; mid-flight recycling instead
+    # re-prefills on each admission event (3 here: {0,1}, {0,2}, {0,3}).
+    assert eng.stats["admissions"] == 4
+    assert eng.stats["prefills"] == 3
+    assert eng.stats["tokens"] == sum(len(r.out_tokens) for r in done)
+
+
+def test_engine_token_stats_reconcile_with_zero_token_requests():
+    """Degenerate admissions (max_new_tokens=0) retire at admission and
+    contribute zero tokens; the invariant still holds exactly."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    eng = ServingEngine(cfg, batch_size=2, prompt_len=12, max_len=24)
+    reqs = _reqs(3, cfg.vocab, seed=2)
+    reqs[1].max_new_tokens = 0
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    assert eng.stats["tokens"] == sum(len(r.out_tokens) for r in done)
+    assert next(r for r in done if r.rid == 1).out_tokens == []
+    assert {r.rid for r in done} == {0, 1, 2}
+
+
+def test_engine_with_qos_fabric():
+    """Engine + shared QoS fabric: every prefill issues the all-gather
+    and every decode step the TP all-reduce, with an adversarial
+    background tenant pumping bursts — decode preempts them, and the
+    engine's stats gain the per-class latency digest."""
+    from repro.serving.qos import ServingQos, TrafficClass
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    qos = ServingQos(n_ranks=2, decode_elems=64, prefill_elems=128,
+                     background_elems=1024, background_buckets=1,
+                     preemption=True)
+    eng = ServingEngine(cfg, batch_size=2, prompt_len=12, max_len=24,
+                        qos=qos)
+    for r in _reqs(3, cfg.vocab, max_new=3):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    q = eng.stats["qos"]
+    # One collective per event, reconciled exactly.
+    assert q["decode"]["completed"] == eng.stats["decode_steps"]
+    assert q["prefill"]["completed"] == eng.stats["prefills"]
+    qos.drain()     # background bursts pumped mid-run must all land
+    bg = qos.tenants[TrafficClass.BACKGROUND]
+    assert bg.submitted > 0 and bg.completed == bg.submitted
 
 
 def test_engine_deterministic():
